@@ -1,0 +1,67 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FLConfig, build_round_step, build_units_flat)
+from repro.core.server import Server
+from repro.data import FederatedLoader, cifar_like, iid_partition
+from repro.models import paper_models as pm
+
+
+def timed(fn, *args, reps=3, warmup=1):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def vgg_loss_fn(params, batch):
+    return pm.xent_loss(pm.vgg16_apply(params, batch["x"]), batch["y"]), {}
+
+
+def make_vgg_federation(n_clients: int, n_train_units: int, *,
+                        width=0.125, n_data=600, batch_size=8,
+                        steps_per_round=2, lr=1e-3, seed=0,
+                        data_key=0):
+    key = jax.random.PRNGKey(seed)
+    params = pm.init_vgg16(key, width_mult=width)
+    assign = build_units_flat(params, pm.vgg16_units(params))
+    # one draw -> same class prototypes for train and eval (held-out tail)
+    n_eval = 256
+    x_all, y_all = cifar_like(n_data + n_eval, key=data_key)
+    x, y = x_all[:n_data], y_all[:n_data]
+    shards = iid_partition(n_data, n_clients, key=data_key + 1)
+    loader = FederatedLoader([{"x": x[s], "y": y[s]} for s in shards],
+                             batch_size=batch_size,
+                             steps_per_round=steps_per_round, key=seed)
+    fl = FLConfig(n_clients=n_clients, n_train_units=n_train_units, lr=lr)
+    xt, yt = jnp.asarray(x_all[n_data:]), jnp.asarray(y_all[n_data:])
+
+    def eval_acc(p):
+        return pm.accuracy(pm.vgg16_apply(p, xt), yt)
+
+    srv = Server(build_round_step(vgg_loss_fn, assign, fl), assign, fl,
+                 params, eval_fn=eval_acc, seed=seed)
+    return srv, loader, assign
+
+
+def run_rounds(srv: Server, loader: FederatedLoader, rounds: int,
+               log_every: int = 0):
+    w = jnp.asarray(loader.weights())
+    return srv.run(rounds, lambda r: jax.tree_util.tree_map(
+        jnp.asarray, loader.round_batches(r)), weights=w,
+        log_every=log_every)
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

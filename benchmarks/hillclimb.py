@@ -1,0 +1,443 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+# Perf hillclimbing harness (EXPERIMENTS.md §Perf): compile named variants
+# of one (arch × shape) pair and report the roofline-term deltas.
+#
+#   PYTHONPATH=src python -m benchmarks.hillclimb --pair qwen3_train
+#
+# Each experiment is a hypothesis -> change -> measure cycle; the log
+# lines here are pasted into EXPERIMENTS.md §Perf with the napkin math.
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.launch import roofline, specs
+from repro.launch.dryrun import build_jitted, depth_variants, param_counts
+from repro.launch.mesh import make_fl_mesh, make_production_mesh
+from repro.launch.shapes import SHAPES
+
+
+def measure(arch, shape_name, step_kind, *, layout, mesh=None,
+            remat=True, fl_synchronized=False, fl_fraction=0.5,
+            cfg_overrides=None, loss_overrides=None, label=""):
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = mesh or make_production_mesh()
+    fl_clients = cfg.fl_clients_single_pod
+    t0 = time.time()
+
+    # full compile -> memory
+    j, a, tokens, train, _ = build_jitted(
+        cfg, shape, step_kind, mesh, layout, unroll=False, remat=remat,
+        fl_synchronized=fl_synchronized, fl_fraction=fl_fraction,
+        fl_clients=fl_clients, loss_overrides=loss_overrides)
+    with mesh:
+        comp = j.lower(*a).compile()
+    ma = roofline.memory_analysis_terms(comp)
+
+    # accounting compiles at depth 2/3 macros
+    cfg1, cfg2, nm = depth_variants(cfg)
+    acct = []
+    for c in (cfg1, cfg2):
+        j2, a2, _, _, _ = build_jitted(
+            c, shape, step_kind, mesh, layout, unroll=True, remat=remat,
+            fl_synchronized=fl_synchronized, fl_fraction=fl_fraction,
+            fl_clients=fl_clients, loss_overrides=loss_overrides)
+        with mesh:
+            comp2 = j2.lower(*a2).compile()
+        acct.append((roofline.cost_analysis_terms(comp2),
+                     roofline.collective_bytes(comp2.as_text())))
+    (ca1, cb1), (ca2, cb2) = acct
+    ex = roofline.extrapolate_layers
+    flops = ex(ca1["flops"], ca2["flops"], nm)
+    hbytes = ex(ca1["bytes"], ca2["bytes"], nm)
+    coll = max(ex(cb1["total"], cb2["total"], nm), 0.0)
+    terms = roofline.roofline_terms(hlo_flops=flops, hlo_bytes=hbytes,
+                                    coll_bytes=coll)
+    counts = param_counts(cfg, specs.params_sds(cfg))
+    chips = int(np.prod(list(mesh.shape.values())))
+    mf = roofline.model_flops(cfg, counts["total"], counts["active"],
+                              tokens, train=train)
+    rec = dict(label=label, layout=layout, step=step_kind,
+               peak_gb=ma["peak_bytes"] / 1e9,
+               temp_gb=ma["temp_size_in_bytes"] / 1e9,
+               compute_ms=terms["compute_s"] * 1e3,
+               memory_ms=terms["memory_s"] * 1e3,
+               collective_ms=terms["collective_s"] * 1e3,
+               dominant=terms["dominant"],
+               coll_gb=coll / 1e9,
+               useful=mf / chips / flops if flops else 0.0,
+               wall_s=round(time.time() - t0, 1))
+    print(f"{label:34s} dom={rec['dominant']:10s} "
+          f"comp={rec['compute_ms']:9.1f}ms mem={rec['memory_ms']:9.1f}ms "
+          f"coll={rec['collective_ms']:9.1f}ms peak={rec['peak_gb']:7.1f}GB "
+          f"useful={rec['useful']:.3f}")
+    return rec
+
+
+PAIRS = {}
+
+
+def pair(name):
+    def deco(fn):
+        PAIRS[name] = fn
+        return fn
+    return deco
+
+
+@pair("qwen3_train")
+def qwen3_train():
+    """Small-dense train: TP activation all-reduces vs pure-DP FSDP."""
+    out = [measure("qwen3-1.7b", "train_4k", "train", layout="tp",
+                   label="baseline tp (paper-era default)")]
+    out.append(measure("qwen3-1.7b", "train_4k", "train",
+                       layout="fsdp_only",
+                       label="fsdp_only (DP-256, params gathered)"))
+    out.append(measure("qwen3-1.7b", "train_4k", "train",
+                       layout="fsdp_tp",
+                       label="fsdp_tp (TP16 + param shard)"))
+    out.append(measure("qwen3-1.7b", "train_4k", "train",
+                       layout="fsdp_only", remat=False,
+                       label="fsdp_only no-remat"))
+    return out
+
+
+@pair("llama4_train")
+def llama4_train():
+    """400B MoE train: GSPMD scatter dispatch vs explicit shard_map TP
+    dispatch (tokens stay put; combine = one psum)."""
+    mesh = make_production_mesh()
+    out = [measure("llama4-maverick-400b-a17b", "train_4k", "train",
+                   layout="fsdp_tp", mesh=mesh,
+                   label="baseline fsdp_tp gspmd-dispatch")]
+    out.append(measure("llama4-maverick-400b-a17b", "train_4k", "train",
+                       layout="fsdp_tp", mesh=mesh,
+                       loss_overrides={"moe_mesh": mesh},
+                       label="fsdp_tp shard_map TP dispatch"))
+    return out
+
+
+@pair("granite_train")
+def granite_train():
+    """Small-MoE train: same dispatch comparison."""
+    mesh = make_production_mesh()
+    out = [measure("granite-moe-1b-a400m", "train_4k", "train",
+                   layout="tp", mesh=mesh,
+                   label="baseline tp gspmd-dispatch")]
+    out.append(measure("granite-moe-1b-a400m", "train_4k", "train",
+                       layout="tp", mesh=mesh,
+                       loss_overrides={"moe_mesh": mesh},
+                       label="tp shard_map TP dispatch"))
+    out.append(measure("granite-moe-1b-a400m", "train_4k", "train",
+                       layout="fsdp_only", mesh=mesh,
+                       loss_overrides={"moe_mesh": mesh},
+                       label="fsdp_only + shard_map dispatch"))
+    return out
+
+
+@pair("fl_round")
+def fl_round():
+    """The paper's technique at pod scale: independent vs synchronized
+    selection; 50% vs 25% trained fraction."""
+    mesh = make_fl_mesh(16)
+    out = []
+    for sync, frac, label in [
+            (False, 0.5, "fl 50% independent (paper)"),
+            (True, 0.5, "fl 50% synchronized (beyond-paper)"),
+            (False, 0.25, "fl 25% independent (paper)"),
+            (True, 0.25, "fl 25% synchronized (beyond-paper)"),
+            (False, 1.0, "fl 100% (conventional FedAvg)")]:
+        out.append(measure("qwen3-1.7b", "train_4k", "fl_round",
+                           layout="tp", mesh=mesh, fl_synchronized=sync,
+                           fl_fraction=frac, label=label))
+    return out
+
+
+@pair("gemma3_decode")
+def gemma3_decode():
+    """long_500k decode: the serving pair."""
+    out = [measure("gemma3-12b", "long_500k", "decode",
+                   layout="fsdp_tp_hd", label="baseline fsdp_tp_hd")]
+    out.append(measure("gemma3-12b", "long_500k", "decode",
+                       layout="tp_hd", label="tp_hd (no fsdp)"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=sorted(PAIRS))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    recs = PAIRS[args.pair]()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(recs, f, indent=1)
+
+
+
+
+# ---------------------------------------------------------------------------
+# fl_static: the paper's saving, realized at pod scale.
+#
+# Finding from pair "fl_round": with TRACED masks (paper-faithful dynamic
+# per-round selection inside one compiled round) every variant lowers to
+# the SAME program — XLA cannot dead-code-eliminate data-dependent
+# freezing, so FLOPs, collectives and memory are identical from 25% to
+# 100% trained.  The saving exists only when the selection is STATIC
+# (compile-time): frozen layers' weight-gradient einsums, their grad
+# all-reduce and their optimizer states all disappear.  A production
+# deployment recompiles per round (or caches a few mask patterns) —
+# synchronized selection (one subset per round) makes that feasible:
+# independent per-client subsets would need C different programs.
+# ---------------------------------------------------------------------------
+
+def _split_by_units(assign, params, sel):
+    """Split params into (trainable_subtree, merge_fn) for static sel."""
+    import numpy as _np
+    import jax.numpy as _jnp
+    from repro.core.masking import _is_leafunit
+    from repro.common import pytree as _pt
+
+    leaf_units = jax.tree_util.tree_leaves(assign.leaf_units,
+                                           is_leaf=_is_leafunit)
+    flat = list(_pt.flatten_with_paths(params))
+    plan = []                      # (path, kind, idx or None)
+    trainable = {}
+    for (path, leaf), lu in zip(flat, leaf_units):
+        if lu.kind == "scalar":
+            if sel[lu.base]:
+                plan.append((path, "whole", None))
+                trainable[path] = leaf
+        else:
+            nm = leaf.shape[0]
+            idx = [m for m in range(nm) if sel[lu.base + lu.stride * m]]
+            if idx:
+                plan.append((path, "rows", tuple(idx)))
+                trainable[path] = leaf[_np.asarray(idx)] \
+                    if not isinstance(leaf, jax.ShapeDtypeStruct) else \
+                    jax.ShapeDtypeStruct((len(idx),) + leaf.shape[1:],
+                                         leaf.dtype)
+
+    def merge(base, train):
+        flat_base = dict(_pt.flatten_with_paths(base))
+        for path, kind, idx in plan:
+            if kind == "whole":
+                flat_base[path] = train[path]
+            else:
+                flat_base[path] = flat_base[path].at[
+                    _jnp.asarray(idx)].set(train[path])
+        return _pt.tree_map_with_path(lambda p, x: flat_base[p], base)
+
+    return trainable, merge
+
+
+@pair("fl_static")
+def fl_static():
+    """Static (compile-time) layer selection on the pod: measures the
+    FLOP / collective / optimizer-memory saving the paper's technique
+    yields once selection is baked into the program."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.masking import build_units_zoo
+    from repro.launch.steps import default_loss_kwargs
+    from repro.models import get_model
+    from repro.optim.masked import adam_init, adam_step
+    import numpy as _np
+
+    cfg = get_config("qwen3-1.7b")
+    mesh = make_production_mesh()
+    shape = SHAPES["train_4k"]
+    model = get_model(cfg)
+    params = specs.params_sds(cfg)
+    assign = build_units_zoo(cfg, params)
+    kw = default_loss_kwargs(cfg, remat=True, unroll=True)
+    batch = specs.batch_specs(cfg, shape)
+    b_sh = specs.batch_shardings(cfg, shape, mesh, "tp")
+    counts = param_counts(cfg, params)
+    out = []
+    rng = _np.random.default_rng(0)
+    for frac, label in [(1.0, "static 100% (full training)"),
+                        (0.5, "static 50% selected"),
+                        (0.25, "static 25% selected")]:
+        n_train = max(1, round(assign.n_units * frac))
+        sel = _np.zeros(assign.n_units, bool)
+        sel[rng.choice(assign.n_units, n_train, replace=False)] = True
+        train_sds, merge = _split_by_units(assign, params, sel)
+
+        def step2(params_base_, train_p, opt, batch, merge=merge):
+            def loss(tp):
+                return model.loss_fn(merge(params_base_, tp), batch, **kw)
+            (l, _), g = jax.value_and_grad(loss, has_aux=True)(train_p)
+            train_p, opt = adam_step(g, opt, train_p, lr=3e-4)
+            return train_p, opt, l
+
+        p_sh_full = specs.param_shardings(cfg, mesh, params, "tp")
+        t_sh = specs.param_shardings(cfg, mesh, train_sds, "tp")
+        opt = jax.eval_shape(adam_init, train_sds)
+        opt_sh = specs.opt_shardings(t_sh, mesh)
+        rep = NamedSharding(mesh, P())
+        jitted = jax.jit(step2, in_shardings=(p_sh_full, t_sh, opt_sh, b_sh),
+                         out_shardings=(t_sh, opt_sh, rep))
+        import time as _time
+        t0 = _time.time()
+        with mesh:
+            comp = jitted.lower(params, train_sds, opt, batch).compile()
+        ca = roofline.cost_analysis_terms(comp)
+        cb = roofline.collective_bytes(comp.as_text())
+        ma = roofline.memory_analysis_terms(comp)
+        terms = roofline.roofline_terms(hlo_flops=ca["flops"],
+                                        hlo_bytes=ca["bytes"],
+                                        coll_bytes=cb["total"])
+        import numpy as np2
+        from repro.core.masking import unit_param_counts
+        trained_params = float(unit_param_counts(assign, params)[sel].sum())
+        rec = dict(label=label, frac=frac,
+                   trained_params=trained_params,
+                   compute_ms=terms["compute_s"] * 1e3,
+                   memory_ms=terms["memory_s"] * 1e3,
+                   collective_ms=terms["collective_s"] * 1e3,
+                   coll_gb=cb["total"] / 1e9,
+                   dominant=terms["dominant"],
+                   arg_gb=ma["argument_size_in_bytes"] / 1e9,
+                   temp_gb=ma["temp_size_in_bytes"] / 1e9,
+                   wall_s=round(_time.time() - t0, 1))
+        print(f"{label:32s} dom={rec['dominant']:10s} "
+              f"comp={rec['compute_ms']:8.1f}ms mem={rec['memory_ms']:8.1f}ms"
+              f" coll={rec['collective_ms']:8.1f}ms arg={rec['arg_gb']:.2f}GB"
+              f" temp={rec['temp_gb']:.1f}GB trained={trained_params/1e9:.2f}B")
+        out.append(rec)
+    return out
+
+
+
+
+@pair("fl_static_unstacked")
+def fl_static_unstacked():
+    """Iteration on fl_static's refutation: same static selection but
+    with per-layer (UNSTACKED) params so frozen layers' dW einsums are
+    DCE-able.  Hypothesis: backward dW is ~1/3 of train FLOPs; freezing
+    half the layers should cut ~17% of total FLOPs and the frozen
+    layers' grad all-reduce."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.steps import default_loss_kwargs
+    from repro.models import layers as L
+    from repro.models import transformer as T
+    from repro.models.attention import attend
+    from repro.optim.masked import adam_init, adam_step
+    import numpy as _np
+
+    cfg = get_config("qwen3-1.7b")
+    mesh = make_production_mesh()
+    shape = SHAPES["train_4k"]
+    params = specs.params_sds(cfg)
+    spec_sub = T.block_layout(cfg)[0]
+    nm = T.n_macro(cfg)
+    kw = {}
+    batch = specs.batch_specs(cfg, shape)
+    b_sh = specs.batch_shardings(cfg, shape, mesh, "tp")
+
+    def row(leaf, m):
+        return jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype) \
+            if isinstance(leaf, jax.ShapeDtypeStruct) else leaf[m]
+
+    def split(sel_layers):
+        blocks = params["blocks"]["sub0"]
+        per_layer = [jax.tree_util.tree_map(lambda x, m=m: row(x, m), blocks)
+                     for m in range(nm)]
+        top = {k: params[k] for k in params if k != "blocks"}
+        trainable = {f"layer{m}": per_layer[m] for m in sel_layers}
+        trainable.update(top)      # embed/head/norm always trained here
+        frozen = {f"layer{m}": per_layer[m] for m in range(nm)
+                  if m not in sel_layers}
+        return trainable, frozen
+
+    def forward_loss(trainable, frozen, batch):
+        rope = L.rope_freqs(cfg.head_dim, cfg.rope_pct, cfg.rope_theta)
+        x = L.embed_tokens(trainable["embed"], batch["tokens"])
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        for m in range(nm):
+            blk = trainable.get(f"layer{m}", frozen.get(f"layer{m}"))
+            def one(x, blk=blk):
+                x, _, _ = T._apply_sub(cfg, blk, spec_sub, x, positions,
+                                       rope, "chunked", 1024)
+                return x
+            x = jax.checkpoint(one)(x)
+        x = L.apply_norm(trainable["final_norm"], x)
+        logits = L.logits_head(trainable, x, cfg.tie_embeddings)
+        return L.softmax_xent(logits, batch["labels"])
+
+    rng = _np.random.default_rng(0)
+    out = []
+    for frac, label in [(1.0, "unstacked 100%"), (0.5, "unstacked 50%"),
+                        (0.25, "unstacked 25%")]:
+        n_sel = max(1, round(nm * frac))
+        sel_layers = tuple(sorted(rng.choice(nm, n_sel, replace=False)))
+        trainable, frozen = split(sel_layers)
+
+        def step(trainable, frozen, opt, batch):
+            l, g = jax.value_and_grad(forward_loss)(trainable, frozen,
+                                                    batch)
+            trainable, opt = adam_step(g, opt, trainable, lr=3e-4)
+            return trainable, opt, l
+
+        t_sh = jax.tree_util.tree_map(
+            lambda x: NamedSharding(mesh, P(*([None] * x.ndim))), trainable)
+        # reuse rule engine per-leaf (paths differ; fall back replicated
+        # for simplicity of this probe — collectives of interest are the
+        # activation all-reduces + grad reduce over data, still present)
+        from repro.sharding import spec_for
+        def sh(tree, prefix):
+            return {k: (jax.tree_util.tree_map_with_path(
+                lambda kp, x: NamedSharding(mesh, spec_for(
+                    "blocks/sub0/" + "/".join(str(getattr(p, "key", p))
+                                              for p in kp),
+                    x.shape, "tp", mesh)), v)
+                if k.startswith("layer") else jax.tree_util.tree_map_with_path(
+                    lambda kp, x: NamedSharding(mesh, spec_for(
+                        k + "/" + "/".join(str(getattr(p, "key", p))
+                                           for p in kp),
+                        x.shape, "tp", mesh)), v))
+                for k, v in tree.items()}
+        t_sh = sh(trainable, "t")
+        f_sh = sh(frozen, "f")
+        opt = jax.eval_shape(adam_init, trainable)
+        opt_sh = specs.opt_shardings(t_sh, mesh)
+        rep = NamedSharding(mesh, P())
+        jitted = jax.jit(step, in_shardings=(t_sh, f_sh, opt_sh, b_sh),
+                         out_shardings=(t_sh, opt_sh, rep))
+        import time as _time
+        t0 = _time.time()
+        with mesh:
+            comp = jitted.lower(trainable, frozen, opt, batch).compile()
+        ca = roofline.cost_analysis_terms(comp)
+        cb = roofline.collective_bytes(comp.as_text())
+        ma = roofline.memory_analysis_terms(comp)
+        terms = roofline.roofline_terms(hlo_flops=ca["flops"],
+                                        hlo_bytes=ca["bytes"],
+                                        coll_bytes=cb["total"])
+        rec = dict(label=label, frac=frac,
+                   compute_ms=terms["compute_s"] * 1e3,
+                   memory_ms=terms["memory_s"] * 1e3,
+                   collective_ms=terms["collective_s"] * 1e3,
+                   arg_gb=ma["argument_size_in_bytes"] / 1e9,
+                   temp_gb=ma["temp_size_in_bytes"] / 1e9,
+                   wall_s=round(_time.time() - t0, 1))
+        print(f"{label:20s} comp={rec['compute_ms']:8.1f}ms "
+              f"mem={rec['memory_ms']:8.1f}ms coll={rec['collective_ms']:8.1f}ms"
+              f" arg={rec['arg_gb']:.2f}GB temp={rec['temp_gb']:.1f}GB")
+        out.append(rec)
+    return out
+
+
+if __name__ == "__main__":
+    main()

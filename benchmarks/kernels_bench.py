@@ -1,0 +1,54 @@
+"""Kernel microbenches: interpret-mode Pallas vs pure-jnp oracle.
+
+On this CPU host the numbers validate plumbing (the kernel path runs and
+matches); TPU wall-times belong to the roofline analysis, not here."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_decode.ops import decode_attention
+from repro.kernels.rwkv6_scan.ops import wkv
+from repro.models.attention import attend_reference, decode_attend
+from repro.models.linear_scan import chunked_linear_scan
+from .common import csv_row, timed
+
+
+def run(fast: bool = True):
+    key = jax.random.PRNGKey(0)
+    b, s, h, hd = 1, 256, 4, 64
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+
+    dt, o = timed(jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, True, 0, 128, 128, True)), q, k, v, reps=2)
+    ref = attend_reference(q, k, v, causal=True)
+    err = float(jnp.abs(o - ref).max())
+    csv_row("kernel_flash_attention_interp", dt * 1e6, f"maxerr={err:.1e}")
+
+    qd = q[:, :1]
+    vl = jnp.full((b,), s, jnp.int32)
+    dt, od = timed(jax.jit(lambda q, k, v: decode_attention(
+        q, k, v, vl, blk_k=128)), qd, k, v, reps=2)
+    err = float(jnp.abs(od - decode_attend(qd, k, v, vl)).max())
+    csv_row("kernel_flash_decode_interp", dt * 1e6, f"maxerr={err:.1e}")
+
+    r = jax.random.normal(ks[3], (b, s, h, 32))
+    ld = -jnp.abs(jax.random.normal(ks[4], (b, s, h, 32)))
+    u = jnp.zeros((h, 32))
+    vv = jax.random.normal(ks[2], (b, s, h, 32))
+    dt, (ow, _) = timed(jax.jit(lambda r, k, v, d: wkv(
+        r, k, v, d, u, chunk=16)), r, r, vv, ld, reps=2)
+    oc, _ = chunked_linear_scan(r, r, vv, ld, decay_on="k", bonus=u,
+                                chunk=16)
+    err = float(jnp.abs(ow - oc).max())
+    csv_row("kernel_rwkv6_scan_interp", dt * 1e6, f"maxerr={err:.1e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Render the roofline table from results/dryrun/*.json (EXPERIMENTS.md
+§Roofline source)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import csv_row
+
+COLS = ("arch", "shape", "mesh", "step", "layout")
+
+
+def load_records(path: str = "results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(fast: bool = True, path: str = "results/dryrun"):
+    recs = load_records(path)
+    done = [r for r in recs if not r.get("skipped") and "roofline" in r]
+    skipped = [r for r in recs if r.get("skipped")]
+    print("# Roofline table (per-device terms, TPU v5e constants)")
+    print("# arch, shape, mesh, step, layout, compute_ms, memory_ms, "
+          "collective_ms, dominant, useful_flop_ratio, peak_GB, fits16GB")
+    for r in sorted(done, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = r["roofline"]
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['step']},"
+              f"{r['layout']},{t['compute_s']*1e3:.2f},"
+              f"{t['memory_s']*1e3:.2f},{t['collective_s']*1e3:.2f},"
+              f"{t['dominant']},{(r.get('useful_flops_ratio') or 0):.3f},"
+              f"{r['bytes_per_device']/1e9:.2f},{r['fits_hbm_16gb']}")
+    for r in skipped:
+        print(f"{r['arch']},{r['shape']},-,-,-,-,-,-,SKIPPED({r['reason']})"
+              .replace("\n", " "))
+    doms = {}
+    for r in done:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    csv_row("roofline_table", 0.0,
+            f"records={len(done)} skipped={len(skipped)} dominants={doms}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark harness: one runner per paper table/figure + kernel benches
++ the roofline table.  ``python -m benchmarks.run [--full] [--only name]``.
+
+Prints ``name,us_per_call,derived`` CSV summary lines (prefixed rows are
+the per-table data)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (hours on this CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    fast = not args.full
+
+    from . import (fig2_accuracy, fig3_casa_imdb, fig4_distribution,
+                   fig5_scaling, kernels_bench, roofline_table,
+                   table3_time, table4_comm, table5_resources)
+    benches = [
+        ("table4_comm", table4_comm.run),
+        ("fig4_distribution", fig4_distribution.run),
+        ("table3_time", table3_time.run),
+        ("table5_resources", table5_resources.run),
+        ("fig2_accuracy", fig2_accuracy.run),
+        ("fig3_casa_imdb", fig3_casa_imdb.run),
+        ("fig5_scaling", fig5_scaling.run),
+        ("kernels_bench", kernels_bench.run),
+        ("roofline_table", roofline_table.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only != name:
+            continue
+        print(f"\n### {name} " + "#" * (60 - len(name)))
+        t0 = time.time()
+        try:
+            fn(fast=fast)
+        except Exception:
+            failures += 1
+            print(f"{name},nan,FAILED")
+            traceback.print_exc()
+        print(f"### {name} done in {time.time()-t0:.1f}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

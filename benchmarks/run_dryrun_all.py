@@ -1,0 +1,106 @@
+"""Driver: run the full (arch × shape × mesh) dry-run sweep.
+
+Each run needs a fresh process (the 512-fake-device XLA flag binds at
+jax init), so this spawns ``python -m repro.launch.dryrun`` per pair and
+collects results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.run_dryrun_all \
+        [--mesh single|multi|both] [--archs a,b] [--shapes s1,s2]
+        [--fl] [--timeout 900]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs.base import list_configs
+from repro.launch.shapes import SHAPES, shape_applicable, list_pairs
+from repro.configs.base import get_config
+
+
+def run_one(arch, shape, mesh, extra=(), timeout=900, out="results/dryrun"):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", out, *extra]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    t0 = time.time()
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    dt = time.time() - t0
+    ok = r.returncode == 0
+    tail = (r.stdout + r.stderr).strip().splitlines()[-12:]
+    return ok, dt, tail
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--archs", default=None)
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--fl", action="store_true",
+                    help="also lower the FL round for train_4k")
+    ap.add_argument("--timeout", type=int, default=900)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = args.archs.split(",") if args.archs else list(list_configs())
+    shapes = args.shapes.split(",") if args.shapes else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            ok_app, why = shape_applicable(arch, cfg, SHAPES[shape])
+            if not ok_app:
+                print(f"SKIP  {arch} x {shape}: {why}")
+                # write the skip record so the roofline table shows it
+                os.makedirs(args.out, exist_ok=True)
+                for mesh in meshes:
+                    with open(os.path.join(
+                            args.out, f"{arch}_{shape}_{mesh}.json"),
+                            "w") as f:
+                        json.dump({"arch": arch, "shape": shape,
+                                   "mesh": mesh, "skipped": True,
+                                   "reason": why}, f)
+                continue
+            for mesh in meshes:
+                path = os.path.join(args.out,
+                                    f"{arch}_{shape}_{mesh}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        rec = json.load(f)
+                    have = "roofline" in rec if mesh == "single" \
+                        else "memory_analysis" in rec
+                    if not rec.get("skipped") and have:
+                        print(f"HAVE  {arch} x {shape} x {mesh}")
+                        continue
+                extra = []
+                if args.fl and shape == "train_4k":
+                    extra = ["--step", "fl_round"]
+                if mesh == "multi":
+                    # multi-pod proves lowering + memory; the roofline
+                    # table is single-pod only (assignment spec), so the
+                    # accounting compiles are skipped here.
+                    extra.append("--skip-accounting")
+                ok, dt, tail = run_one(arch, shape, mesh, extra,
+                                       args.timeout, args.out)
+                status = "OK " if ok else "FAIL"
+                print(f"{status}  {arch} x {shape} x {mesh} ({dt:.0f}s)")
+                if not ok:
+                    print("      " + "\n      ".join(tail))
+                results.append((arch, shape, mesh, ok, dt))
+    n_ok = sum(1 for r in results if r[3])
+    print(f"\n{n_ok}/{len(results)} runs succeeded")
+    if n_ok < len(results):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

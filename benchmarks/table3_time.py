@@ -1,0 +1,77 @@
+"""Paper Table 3 / Figs 8-9: training time vs number of trained layers.
+
+In JAX the paper's compute saving is realized by STATIC freeze masks:
+the frozen units' backward is dead-code-eliminated at compile time.  We
+measure (a) wall-clock per local step and (b) compiled backward FLOPs
+(cost_analysis), for 4/7/10/14 trained VGG16 units — the static
+counterpart of the dynamic in-round masking (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import cifar_like
+from repro.models import paper_models as pm
+from repro.optim.masked import adam_init, adam_step
+from .common import csv_row, timed
+
+
+def make_static_step(params, trainable, batch_shape):
+    frozen = {k: v for k, v in params.items() if k not in trainable}
+
+    def step(train_p, opt, batch):
+        def loss_fn(tp):
+            merged = dict(frozen)
+            merged.update(tp)
+            return pm.xent_loss(pm.vgg16_apply(merged, batch["x"]),
+                                batch["y"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(train_p)
+        train_p, opt = adam_step(grads, opt, train_p, lr=1e-3)
+        return train_p, opt, loss
+
+    return jax.jit(step)
+
+
+def run(fast: bool = True):
+    t0 = time.perf_counter()
+    width = 0.125 if fast else 0.5
+    bs = 8 if fast else 32
+    params = pm.init_vgg16(jax.random.PRNGKey(0), width_mult=width)
+    units = pm.vgg16_units(params)
+    x, y = cifar_like(bs, key=0)
+    batch = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+    print(f"# Table 3 / Fig 9 reproduction (static-freeze VGG16 w={width}, "
+          f"batch {bs})")
+    print("# layers, step_ms, bwd+fwd GFLOPs(compiled), flops_vs_full")
+    rows = {}
+    for n in (4, 7, 10, 14):
+        trainable = units[-n:]          # paper trains a subset; use last-n
+        train_p = {k: params[k] for k in trainable}
+        step = make_static_step(params, trainable, batch)
+        opt = adam_init(train_p)
+        lowered = step.lower(train_p, opt, batch)
+        comp = lowered.compile()
+        ca = comp.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        fl = float(ca.get("flops", 0.0))
+        dt, _ = timed(lambda tp=train_p, o=opt: step(tp, o, batch),
+                      reps=2 if fast else 5)
+        rows[n] = (dt, fl)
+    flops_full = rows[14][1]
+    for n in (4, 7, 10, 14):
+        dt, fl = rows[n]
+        print(f"{n},{dt*1e3:.1f},{fl/1e9:.2f},{fl/flops_full:.3f}")
+    # paper: 4 layers saves ~19% of the 100-round time vs 14 layers
+    saving = 1 - rows[4][0] / rows[14][0]
+    csv_row("table3_time", rows[14][0] * 1e6,
+            f"time_saving_4_vs_14_layers={saving:.2%} "
+            f"flops_saving={1 - rows[4][1]/rows[14][1]:.2%}")
+
+
+if __name__ == "__main__":
+    run()

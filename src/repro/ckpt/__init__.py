@@ -1,0 +1,4 @@
+from .store import (  # noqa: F401
+    save_pytree, load_pytree, load_metadata, save_server_state,
+    restore_server_state,
+)

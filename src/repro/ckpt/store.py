@@ -1,0 +1,74 @@
+"""Pytree checkpointing: flat-path npz arrays + a structure manifest.
+
+Restartable server state for long federated runs: global params, round
+counter, RNG key and selection history.  No external deps (orbax is not
+available offline); paths are the stable "a/b/c" keys from common.pytree.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import pytree as pt
+
+
+def save_pytree(path: str, tree: Any, metadata: Optional[Dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = dict(pt.flatten_with_paths(tree))
+    np.savez(path if path.endswith(".npz") else path + ".npz",
+             **{k: np.asarray(v) for k, v in flat.items()})
+    manifest = {
+        "paths": list(flat.keys()),
+        "shapes": {k: list(np.shape(v)) for k, v in flat.items()},
+        "dtypes": {k: str(np.asarray(v).dtype) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    with open(_manifest_path(path), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def _manifest_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".json"
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (params template)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = {k: npz[k] for k in npz.files}
+
+    def fill(p, leaf):
+        arr = flat[p]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{p}: checkpoint shape {arr.shape} != "
+                             f"template {leaf.shape}")
+        return jnp.asarray(arr, leaf.dtype)
+
+    return pt.tree_map_with_path(fill, like)
+
+
+def load_metadata(path: str) -> Dict:
+    with open(_manifest_path(path)) as f:
+        return json.load(f).get("metadata", {})
+
+
+def save_server_state(path: str, server, extra: Optional[Dict] = None):
+    meta = {
+        "round": len(server.history),
+        "history": [vars(r) for r in server.history],
+        "key": np.asarray(jax.random.key_data(server.key)).tolist()
+        if hasattr(jax.random, "key_data") else np.asarray(server.key).tolist(),
+    }
+    meta.update(extra or {})
+    save_pytree(path, server.params, metadata=meta)
+
+
+def restore_server_state(path: str, server):
+    server.params = load_pytree(path, server.params)
+    meta = load_metadata(path)
+    return meta

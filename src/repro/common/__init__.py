@@ -1,0 +1,6 @@
+from .pytree import (  # noqa: F401
+    PyTree, path_str, tree_paths, tree_map_with_path, flatten_with_paths,
+    param_count, param_bytes, tree_add, tree_sub, tree_scale,
+    tree_zeros_like, tree_allclose, tree_any_nan, global_norm, tree_cast,
+    tree_stack, tree_unstack, leaf_by_path, tree_size_report,
+)

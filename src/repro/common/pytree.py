@@ -1,0 +1,124 @@
+"""Pytree utilities shared across the framework.
+
+Params are plain nested dicts of jnp arrays.  Paths are "/"-joined key
+tuples (``blocks/attn/wq``) — stable across jax versions and easy to match
+with sharding / freeze-unit rules.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def path_str(path) -> str:
+    """Render a jax KeyPath as 'a/b/c'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - future key kinds
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_paths(tree: PyTree) -> Tuple[str, ...]:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return tuple(path_str(p) for p, _ in leaves)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    """tree_map where fn receives ('a/b/c', leaf)."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(path_str(p), x), tree)
+
+
+def flatten_with_paths(tree: PyTree) -> Iterator[Tuple[str, Any]]:
+    for p, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        yield path_str(p), leaf
+
+
+def param_count(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree: PyTree, bytes_per_elem: int | None = None) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        n = int(np.prod(x.shape))
+        b = bytes_per_elem if bytes_per_elem is not None else jnp.dtype(x.dtype).itemsize
+        total += n * b
+    return total
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_allclose(a: PyTree, b: PyTree, **kw) -> bool:
+    oks = jax.tree_util.tree_map(
+        lambda x, y: bool(jnp.allclose(x, y, **kw)), a, b)
+    return all(jax.tree_util.tree_leaves(oks))
+
+
+def tree_any_nan(a: PyTree) -> bool:
+    return any(bool(jnp.isnan(x).any()) for x in jax.tree_util.tree_leaves(a)
+               if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+def global_norm(a: PyTree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree_util.tree_leaves(a))
+    return jnp.sqrt(sq)
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a)
+
+
+def tree_stack(trees) -> PyTree:
+    """Stack a list of identically-structured trees along a new leading axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: PyTree, n: int):
+    return [jax.tree_util.tree_map(lambda x: x[i], tree) for i in range(n)]
+
+
+def leaf_by_path(tree: PyTree, path: str):
+    node = tree
+    for k in path.split("/"):
+        if isinstance(node, (list, tuple)):
+            node = node[int(k)]
+        else:
+            node = node[k]
+    return node
+
+
+def tree_size_report(tree: PyTree, top: int = 12) -> str:
+    rows = sorted(flatten_with_paths(tree),
+                  key=lambda kv: -int(np.prod(kv[1].shape)))
+    lines = [f"total params: {param_count(tree):,}"]
+    for p, x in rows[:top]:
+        lines.append(f"  {p:<60s} {str(x.shape):<20s} {int(np.prod(x.shape)):,}")
+    return "\n".join(lines)

@@ -1,0 +1,13 @@
+"""The paper's contribution: federated partial-layer freezing (FedPLF).
+
+freezing   — per-round layer-selection strategies (Alg. 2 line 3)
+masking    — freeze units over param pytrees, mask trees
+aggregation— FedAvg / participation-weighted masked FedAvg
+client     — ClientUpdate (Alg. 2): masked local training
+federation — the compiled federated round step
+server     — round orchestration (Alg. 1)
+comm       — exact transfer-byte accounting (Table 4)
+"""
+from . import freezing, masking, aggregation, client, federation, server, comm  # noqa: F401
+from .federation import FLConfig, build_round_step, build_fullmodel_round_step  # noqa: F401
+from .masking import build_units, build_units_zoo, build_units_flat, mask_tree, apply_mask, UnitAssignment  # noqa: F401

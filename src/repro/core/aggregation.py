@@ -1,0 +1,69 @@
+"""Server-side aggregation.
+
+* ``fedavg``          — Eq. (1), unchanged from McMahan et al.
+* ``masked_fedavg``   — participation-weighted per-unit FedAvg: when
+  clients ship disjoint layer subsets, each unit averages only over the
+  clients that trained it (the paper's "minor modifications to the FEDn
+  aggregation server").  Units nobody trained keep the global value.
+* ``fedprox`` client proximal term lives in core/client.py.
+
+All functions take client deltas stacked along a leading client axis
+(the ``client`` mesh axis under pjit; the sum lowers to the cross-client
+reduce — see launch/dryrun.py).  The fused Pallas variant is
+``kernels/masked_agg``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .masking import UnitAssignment, mask_tree, apply_mask
+
+PyTree = Any
+
+
+def fedavg(global_params, deltas, weights) -> PyTree:
+    """deltas: pytree with leading client dim C; weights (C,) data sizes."""
+    w = weights / jnp.maximum(weights.sum(), 1e-9)
+
+    def one(g, d):
+        wd = jnp.tensordot(w.astype(jnp.float32),
+                           d.astype(jnp.float32), axes=(0, 0))
+        return (g.astype(jnp.float32) + wd).astype(g.dtype)
+
+    return jax.tree_util.tree_map(one, global_params, deltas)
+
+
+def masked_fedavg(global_params, deltas, sel, weights,
+                  assign: UnitAssignment) -> PyTree:
+    """Participation-weighted per-unit FedAvg.
+
+    sel (C, U) 0/1; for each unit u:
+        new_u = global_u + sum_c w_c sel_cu delta_cu / sum_c w_c sel_cu
+    Units with zero participation keep the global value exactly.
+    """
+    wf = weights.astype(jnp.float32)
+
+    def one(lu, g, d):
+        # per-client scalar (or per-macro vector) participation mask
+        if lu.kind == "scalar":
+            m = sel[:, lu.base]                                  # (C,)
+        else:
+            nm = g.shape[0]
+            idx = lu.base + lu.stride * jnp.arange(nm)
+            m = sel[:, idx]                                      # (C, nm)
+        wm = m * wf.reshape((-1,) + (1,) * (m.ndim - 1))         # (C[,nm])
+        denom = wm.sum(0)                                        # ([nm])
+        num = jnp.tensordot(wm, d.astype(jnp.float32), axes=(0, 0)) \
+            if m.ndim == 1 else \
+            jnp.einsum("cm,cm...->m...", wm, d.astype(jnp.float32))
+        denom_b = jnp.reshape(denom, jnp.shape(denom) +
+                              (1,) * (num.ndim - jnp.ndim(denom)))
+        upd = jnp.where(denom_b > 0, num / jnp.maximum(denom_b, 1e-9), 0.0)
+        return (g.astype(jnp.float32) + upd).astype(g.dtype)
+
+    from .masking import _is_leafunit
+    return jax.tree_util.tree_map(one, assign.leaf_units, global_params,
+                                  deltas, is_leaf=_is_leafunit)

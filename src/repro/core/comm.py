@@ -1,0 +1,89 @@
+"""Network-transfer accounting (paper Table 4 / §4.2.5).
+
+Byte counts are exact functions of the unit assignment and the selection
+matrix — no simulation noise.  Two topologies:
+
+* **hub** (the paper's FEDn combiner): per round,
+    uplink_c   = Σ_u sel_cu · unit_bytes_u      (only trained layers ship)
+    downlink_c = full model                     (server broadcasts globals)
+  The paper's Table 4 reports the 10-client uplink sum.
+
+* **collective** (pod FL, DESIGN.md §2): aggregation is an all-reduce
+  over the client axis.  With *independent* per-client selection (paper
+  semantics) every unit has ≥1 participant w.h.p., so the collective
+  still moves the full model; with *synchronized* selection the reduce
+  covers only the round's selected units — bytes shrink by exactly the
+  frozen fraction.  This is the beyond-paper optimization measured in
+  EXPERIMENTS.md §Perf (collective term).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .masking import UnitAssignment, unit_param_counts
+
+
+def unit_bytes(assign: UnitAssignment, params, bytes_per_param: int = 4
+               ) -> np.ndarray:
+    return unit_param_counts(assign, params) * bytes_per_param
+
+
+def hub_round_bytes(sel: np.ndarray, ubytes: np.ndarray,
+                    include_downlink: bool = False) -> Dict[str, float]:
+    """sel (C, U) 0/1 for one round."""
+    sel = np.asarray(sel)
+    uplink = float((sel @ ubytes).sum())
+    total_model = float(ubytes.sum())
+    downlink = total_model * sel.shape[0]
+    out = {"uplink": uplink,
+           "uplink_frac": uplink / (total_model * sel.shape[0]),
+           "downlink": downlink}
+    out["total"] = uplink + (downlink if include_downlink else 0.0)
+    return out
+
+
+def collective_round_bytes(sel: np.ndarray, ubytes: np.ndarray,
+                           n_devices_per_client: int = 1
+                           ) -> Dict[str, float]:
+    """Bytes crossing the client-axis all-reduce boundary per round.
+
+    A unit participates in the reduce iff ANY client selected it
+    (independent selection -> almost all units; synchronized -> exactly
+    the selected subset).  Ring all-reduce moves ~2x the payload.
+    """
+    sel = np.asarray(sel)
+    active = sel.max(axis=0) > 0
+    payload = float(ubytes[active].sum())
+    return {"payload": payload,
+            "ring_bytes": 2.0 * payload,
+            "active_units": int(active.sum()),
+            "frac_of_full": payload / float(ubytes.sum())}
+
+
+def expected_uplink_fraction(n_units: int, n_train: int) -> float:
+    """E[selected bytes]/total under uniform selection = n_train/U
+    (unit sizes cancel in expectation)."""
+    return n_train / n_units
+
+
+def table4_row(assign: UnitAssignment, params, sel_history,
+               bytes_per_param: int = 4) -> Dict[str, float]:
+    """Reproduce one Table 4 cell from a run's selection history.
+
+    sel_history: (rounds, C, U).  Returns average per-round uplink bytes
+    and trained-parameter count across the history.
+    """
+    ub = unit_bytes(assign, params, bytes_per_param)
+    counts = unit_param_counts(assign, params)
+    hist = np.asarray(sel_history)
+    per_round_bytes = np.einsum("rcu,u->r", hist, ub)
+    per_round_params = np.einsum("rcu,u->r", hist, counts)
+    return {
+        "avg_uplink_bytes": float(per_round_bytes.mean()),
+        "avg_trained_params": float(per_round_params.mean()),
+        "total_uplink_bytes": float(per_round_bytes.sum()),
+        "reduction_vs_full": 1.0 - float(per_round_bytes.mean()) /
+        (float(ub.sum()) * hist.shape[1]),
+    }

@@ -1,0 +1,96 @@
+"""Federated round as a single compiled step (DESIGN.md §4).
+
+``build_round_step`` closes over the model loss, unit assignment and
+strategy and returns
+
+    round_step(global_params, client_batches, weights, round_key)
+        -> (new_global_params, metrics)
+
+where ``client_batches`` leaves carry (C, local_steps, ...) and the
+client dim maps onto the ``client`` mesh axis under pjit (cross-device
+mode) or onto pods (cross-silo).  Everything inside — selection, masked
+local training, participation-weighted aggregation — is one XLA program;
+the cross-client reduce in the aggregation is the only cross-client
+collective.
+
+Topology (cross_device vs cross_silo) changes nothing here; it changes
+the mesh view the step is pjit-ed with (launch/mesh.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import freezing
+from .aggregation import masked_fedavg, fedavg
+from .client import local_update
+from .masking import UnitAssignment, mask_tree
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    n_clients: int
+    n_train_units: int            # N_l in the paper
+    strategy: str = "uniform"     # uniform | fixed_last | weighted | full
+    synchronized: bool = False    # beyond-paper collective shrinking
+    lr: float = 1e-2              # paper: 0.01
+    optimizer: str = "adam"       # paper: ADAM
+    prox_mu: float = 0.0          # >0 -> FedProx
+    always_train_head: bool = False
+
+
+def build_round_step(loss_fn: Callable, assign: UnitAssignment,
+                     fl: FLConfig, loss_kwargs: Optional[Dict] = None):
+    """Returns the jit-able round_step function."""
+
+    def round_step(global_params, client_batches, weights, round_key):
+        sel = freezing.select_clients(
+            round_key, fl.n_clients, assign.n_units, fl.n_train_units,
+            strategy=fl.strategy, synchronized=fl.synchronized)
+        if fl.always_train_head:
+            sel = sel.at[:, -1].set(1.0)
+
+        def one_client(sel_row, batches):
+            mask = mask_tree(assign, sel_row, global_params)
+            return local_update(loss_fn, global_params, mask, batches,
+                                lr=fl.lr, optimizer=fl.optimizer,
+                                prox_mu=fl.prox_mu, loss_kwargs=loss_kwargs)
+
+        deltas, metrics = jax.vmap(one_client)(sel, client_batches)
+        new_params = masked_fedavg(global_params, deltas, sel, weights,
+                                   assign)
+        out_metrics = {
+            "loss_mean": metrics["loss_mean"].mean(),
+            "loss_per_client": metrics["loss_mean"],
+            "sel": sel,
+        }
+        return new_params, out_metrics
+
+    return round_step
+
+
+def build_fullmodel_round_step(loss_fn: Callable, fl: FLConfig,
+                               loss_kwargs: Optional[Dict] = None):
+    """Conventional FedAvg baseline (every unit trained, plain average)."""
+
+    def round_step(global_params, client_batches, weights, round_key):
+        ones_mask = jax.tree_util.tree_map(
+            lambda x: jnp.ones((), jnp.float32), global_params)
+
+        def one_client(batches):
+            return local_update(loss_fn, global_params, ones_mask, batches,
+                                lr=fl.lr, optimizer=fl.optimizer,
+                                loss_kwargs=loss_kwargs)
+
+        deltas, metrics = jax.vmap(one_client)(client_batches)
+        new_params = fedavg(global_params, deltas, weights)
+        return new_params, {"loss_mean": metrics["loss_mean"].mean(),
+                            "loss_per_client": metrics["loss_mean"],
+                            "sel": jnp.ones((fl.n_clients, 1))}
+
+    return round_step

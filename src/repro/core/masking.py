@@ -1,0 +1,129 @@
+"""Freeze-unit assignment over parameter pytrees.
+
+A **freeze unit** is the granularity of the paper's layer selection: one
+transformer block (or one conv/dense layer for the paper's own models).
+Every param leaf maps to one unit — either wholly (``scalar`` leaves like
+the embedding table) or per-index along its leading macro dim
+(``stacked`` leaves inside the scanned block stack).
+
+Given a 0/1 selection vector ``sel (U,)`` (from ``core.freezing``),
+``mask_tree`` materializes a pytree of broadcastable masks; a leaf mask
+for a stacked leaf has shape ``(n_macro,)`` and broadcasts over the rest
+of the leaf, so masking cost is negligible.
+
+Unit ordering is forward order: unit 0 = input embeddings (+ projector /
+enc embeddings), units 1..L = layers (enc layers first for enc-dec),
+unit U-1 = final norm + LM head.  This matches the paper's "14 trainable
+layers including the output layer" accounting for VGG16.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import pytree as pt
+
+
+class LeafUnit(NamedTuple):
+    kind: str        # "scalar" | "stacked"
+    base: int        # unit id (scalar) or unit of macro index 0 (stacked)
+    stride: int      # units advanced per macro index (stacked only)
+
+
+class UnitAssignment(NamedTuple):
+    n_units: int
+    leaf_units: Any          # pytree congruent to params, leaves: LeafUnit
+    unit_names: Tuple[str, ...]
+
+
+def _is_leafunit(x):
+    return isinstance(x, LeafUnit)
+
+
+def build_units_zoo(cfg, params) -> UnitAssignment:
+    """Unit map for the model-zoo architectures (stacked macro blocks)."""
+    from ..models.transformer import block_layout
+    n_subs = len(block_layout(cfg)) if cfg.family != "audio" else 1
+    n_enc = cfg.n_enc_layers
+    dec_base = 1 + n_enc
+    n_dec = cfg.n_layers
+    head_unit = dec_base + n_dec
+    n_units = head_unit + 1
+
+    def assign(path: str, leaf) -> LeafUnit:
+        m = re.match(r"^blocks/sub(\d+)/", path)
+        if m:
+            return LeafUnit("stacked", dec_base + int(m.group(1)), n_subs)
+        if path.startswith("enc_blocks/"):
+            return LeafUnit("stacked", 1, 1)
+        if path.startswith(("embed/", "enc_embed/", "projector/")):
+            return LeafUnit("scalar", 0, 0)
+        if path.startswith(("final_norm/", "head/", "enc_final_norm/")):
+            return LeafUnit("scalar", head_unit, 0)
+        raise ValueError(f"unassigned param path: {path}")
+
+    leaf_units = pt.tree_map_with_path(assign, params)
+    names = (["embed"] + [f"enc{i}" for i in range(n_enc)] +
+             [f"layer{i}" for i in range(n_dec)] + ["head"])
+    return UnitAssignment(n_units, leaf_units, tuple(names))
+
+
+def build_units_flat(params, unit_order: Sequence[str]) -> UnitAssignment:
+    """Unit map for the paper models: each top-level key is one unit."""
+    order = {k: i for i, k in enumerate(unit_order)}
+
+    def assign(path: str, leaf) -> LeafUnit:
+        top = path.split("/")[0]
+        if top not in order:
+            raise ValueError(f"param {path} not in unit order {unit_order}")
+        return LeafUnit("scalar", order[top], 0)
+
+    leaf_units = pt.tree_map_with_path(assign, params)
+    return UnitAssignment(len(unit_order), leaf_units, tuple(unit_order))
+
+
+def mask_tree(assign: UnitAssignment, sel: jnp.ndarray, params) -> Any:
+    """sel (U,) 0/1 -> pytree of masks broadcastable to params leaves."""
+
+    def one(lu: LeafUnit, p):
+        if lu.kind == "scalar":
+            return sel[lu.base].astype(jnp.float32)
+        nm = p.shape[0]
+        idx = lu.base + lu.stride * jnp.arange(nm)
+        return sel[idx].astype(jnp.float32)
+
+    return jax.tree_util.tree_map(one, assign.leaf_units, params,
+                                  is_leaf=_is_leafunit)
+
+
+def apply_mask(mask, tree):
+    """Elementwise tree * mask with trailing broadcast."""
+    return jax.tree_util.tree_map(
+        lambda x, k: x * jnp.reshape(
+            k, jnp.shape(k) + (1,) * (x.ndim - jnp.ndim(k))).astype(x.dtype),
+        tree, mask)
+
+
+def unit_param_counts(assign: UnitAssignment, params) -> np.ndarray:
+    """(U,) int64 — parameters per freeze unit (comm accounting)."""
+    counts = np.zeros(assign.n_units, np.int64)
+    for (path, leaf), lu in zip(
+            pt.flatten_with_paths(params),
+            jax.tree_util.tree_leaves(assign.leaf_units, is_leaf=_is_leafunit)):
+        if lu.kind == "scalar":
+            counts[lu.base] += int(np.prod(leaf.shape))
+        else:
+            per = int(np.prod(leaf.shape[1:]))
+            for m in range(leaf.shape[0]):
+                counts[lu.base + lu.stride * m] += per
+    return counts
+
+
+def build_units(cfg_or_order, params) -> UnitAssignment:
+    if isinstance(cfg_or_order, (list, tuple)):
+        return build_units_flat(params, cfg_or_order)
+    return build_units_zoo(cfg_or_order, params)

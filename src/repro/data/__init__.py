@@ -1,0 +1,2 @@
+from .synthetic import cifar_like, imdb_like, casa_like, lm_tokens, lm_batch  # noqa: F401
+from .partition import iid_partition, dirichlet_partition, FederatedLoader  # noqa: F401

@@ -1,0 +1,290 @@
+"""Pallas TPU flash attention (fwd + bwd), causal / sliding-window / GQA.
+
+TPU adaptation of the blockwise-softmax algorithm: Q/K/V stream through
+VMEM in MXU-aligned blocks; the score matrix never leaves VMEM.  Grid is
+(batch·q_heads, q_blocks, kv_blocks) with the kv dim sequential
+("arbitrary") so the online-softmax accumulators live in VMEM scratch
+across kv steps.  Out-of-causal-range and out-of-window KV blocks are
+skipped with ``pl.when`` (no MXU work — this is the block-skip the pure
+JAX chunked baseline cannot express; see EXPERIMENTS.md §Perf).
+
+GQA: K/V are indexed at ``head // n_rep`` via the BlockSpec index map, so
+grouped heads never materialize repeated K/V in HBM.
+
+Backward is the standard two-kernel recompute scheme using the saved
+per-row logsumexp: one kernel accumulates dQ (grid kv-inner), one
+accumulates dK/dV (grid q-inner).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *,
+                scale, causal, window, blk_q, blk_k, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * blk_q
+    k_start = ki * blk_k
+    # static-shape block skip decision must be dynamic: use pl.when
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + blk_q - 1)
+    if window > 0:
+        run = jnp.logical_and(run, k_start + blk_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (blk_q, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (blk_k, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_scr[...] + jnp.log(l)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=0,
+                        blk_q=128, blk_k=128, interpret=False):
+    """q (BH, Sq, hd); k/v (BHkv, Sk, hd) with BH = BHkv * n_rep.
+
+    Returns (o (BH, Sq, hd), lse (BH, Sq))."""
+    bh, sq, hd = q.shape
+    bhkv, sk, _ = k.shape
+    n_rep = bh // bhkv
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, sk)
+    nq, nk = sq // blk_q, sk // blk_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, n_kv=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda b, qi, ki, n_rep=n_rep: (b // n_rep, ki, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda b, qi, ki, n_rep=n_rep: (b // n_rep, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, blk_q), lambda b, qi, ki: (b, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            _vmem((blk_q,), jnp.float32),
+            _vmem((blk_q,), jnp.float32),
+            _vmem((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   acc_scr, *, scale, causal, window, blk_q, blk_k, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start, k_start = qi * blk_q, ki * blk_k
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + blk_q - 1)
+    if window > 0:
+        run = jnp.logical_and(run, k_start + blk_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0]
+        delta = delta_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        acc_scr[...] += jax.lax.dot(ds, k, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        dq_ref[0] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_scr, dv_scr, *,
+                    scale, causal, window, blk_q, blk_k, n_q):
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q_start, k_start = qi * blk_q, ki * blk_k
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + blk_q - 1)
+    if window > 0:
+        run = jnp.logical_and(run, k_start + blk_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0]
+        delta = delta_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(qi == n_q - 1)
+    def _finalize():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=0,
+                        blk_q=128, blk_k=128, interpret=False):
+    """Returns (dq, dk, dv).  dk/dv are per-QUERY-head (BH, ...); the GQA
+    reduction over the group happens in ops.py."""
+    bh, sq, hd = q.shape
+    bhkv, sk, _ = k.shape
+    n_rep = bh // bhkv
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, sk)
+    nq, nk = sq // blk_q, sk // blk_k
+    scale = 1.0 / math.sqrt(hd)
+    delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32), axis=-1)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
+                          window=window, blk_q=blk_q, blk_k=blk_k, n_kv=nk),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda b, qi, ki, n_rep=n_rep: (b // n_rep, ki, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda b, qi, ki, n_rep=n_rep: (b // n_rep, ki, 0)),
+            pl.BlockSpec((1, blk_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, blk_q), lambda b, qi, ki: (b, qi)),
+            pl.BlockSpec((1, blk_q), lambda b, qi, ki: (b, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[_vmem((blk_q, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+                          window=window, blk_q=blk_q, blk_k=blk_k, n_q=nq),
+        grid=(bh, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, ki, qi: (b, qi, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda b, ki, qi, n_rep=n_rep: (b // n_rep, ki, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda b, ki, qi, n_rep=n_rep: (b // n_rep, ki, 0)),
+            pl.BlockSpec((1, blk_q, hd), lambda b, ki, qi: (b, qi, 0)),
+            pl.BlockSpec((1, blk_q), lambda b, ki, qi: (b, qi)),
+            pl.BlockSpec((1, blk_q), lambda b, ki, qi: (b, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_k, hd), lambda b, ki, qi: (b, ki, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, ki, qi: (b, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sk, hd), q.dtype),
+            jax.ShapeDtypeStruct((bh, sk, hd), q.dtype),
+        ],
+        scratch_shapes=[_vmem((blk_k, hd), jnp.float32),
+                        _vmem((blk_k, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

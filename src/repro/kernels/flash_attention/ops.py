@@ -1,0 +1,69 @@
+"""Jit-able wrapper: model-layout flash attention with custom VJP.
+
+``flash_attention(q, k, v)`` takes the model layout (B, S, H, hd) /
+(B, S, Hkv, hd), flattens to the kernel layout, and differentiates
+through the Pallas bwd kernels.  ``interpret=True`` (default on CPU)
+runs the kernel bodies in Python for validation; on TPU pass
+``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd, flash_attention_bwd
+
+
+def _to_kernel_layout(x):
+    b, s, h, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+
+def _from_kernel_layout(x, b, h):
+    bh, s, d = x.shape
+    return x.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=0, blk_q=128, blk_k=128,
+                    interpret=True):
+    o, _ = _fwd(q, k, v, causal, window, blk_q, blk_k, interpret)[0], None
+    return o
+
+
+def _fwd(q, k, v, causal, window, blk_q, blk_k, interpret):
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    qk = _to_kernel_layout(q)
+    kk = _to_kernel_layout(k)
+    vk = _to_kernel_layout(v)
+    o, lse = flash_attention_fwd(qk, kk, vk, causal=causal, window=window,
+                                 blk_q=blk_q, blk_k=blk_k,
+                                 interpret=interpret)
+    return _from_kernel_layout(o, b, h), (qk, kk, vk, o, lse, b, h, hkv)
+
+
+def _fwd_rule(q, k, v, causal, window, blk_q, blk_k, interpret):
+    o, res = _fwd(q, k, v, causal, window, blk_q, blk_k, interpret)
+    return o, res
+
+
+def _bwd_rule(causal, window, blk_q, blk_k, interpret, res, do):
+    qk, kk, vk, o, lse, b, h, hkv = res
+    dok = _to_kernel_layout(do)
+    dq, dk, dv = flash_attention_bwd(qk, kk, vk, o, lse, dok,
+                                     causal=causal, window=window,
+                                     blk_q=blk_q, blk_k=blk_k,
+                                     interpret=interpret)
+    n_rep = h // hkv
+    dq = _from_kernel_layout(dq, b, h)
+    # GQA: reduce the per-query-head dk/dv over each group
+    sk, d = dk.shape[1], dk.shape[2]
+    dk = dk.reshape(b, hkv, n_rep, sk, d).sum(axis=2).transpose(0, 2, 1, 3)
+    dv = dv.reshape(b, hkv, n_rep, sk, d).sum(axis=2).transpose(0, 2, 1, 3)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.attention import attend_reference
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Same (BH, S, hd) layout as the kernel; delegates to the model-zoo
+    reference attention (B=BH, H=1)."""
+    bh, sq, hd = q.shape
+    bhkv = k.shape[0]
+    n_rep = bh // bhkv
+    kq = jnp.repeat(k, n_rep, axis=0)
+    vq = jnp.repeat(v, n_rep, axis=0)
+    o = attend_reference(q[:, :, None], kq[:, :, None], vq[:, :, None],
+                         causal=causal, window=window)
+    return o[:, :, 0]

@@ -1,0 +1,97 @@
+"""Pallas TPU flash decode: one query token vs a block-partitioned KV cache.
+
+serve_step's hot loop for 32k–500k contexts.  Grid (batch·q_heads,
+kv_blocks) with the kv dim sequential; partial (m, l, acc) accumulators
+in VMEM combine the per-block softmax contributions — the classic
+partial-softmax decode combine, here expressed blockwise for VMEM
+streaming.  Validity masking (cache positions >= valid_len) covers both
+the full-cache and the ring-buffer (sliding-window) cases: ring order
+does not matter to softmax(QK)V, so ops.py maps a window decode to
+valid_len = min(step+1, window).
+
+On a real mesh, the KV cache is sequence-sharded and each shard's
+(m, l, acc) partials are combined with a small psum (launch/serve.py);
+the kernel is the per-shard worker.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale, blk_k, n_kv):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = valid_ref[0]
+    k_start = ki * blk_k
+
+    @pl.when(k_start < valid)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (1, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (blk_k, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, blk_k), 1)
+        s = jnp.where(kpos < valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, valid_len, *, blk_k=512, interpret=False):
+    """q (BH, 1, hd); k/v (BHkv, S, hd); valid_len (BH,) int32.
+
+    Returns o (BH, 1, hd)."""
+    bh, _, hd = q.shape
+    bhkv, sk, _ = k.shape
+    n_rep = bh // bhkv
+    blk_k = min(blk_k, sk)
+    nk = sk // blk_k
+    scale = 1.0 / math.sqrt(hd)
+
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, blk_k=blk_k, n_kv=nk),
+        grid=(bh, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda b, ki, n_rep=n_rep: (b // n_rep, ki, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda b, ki, n_rep=n_rep: (b // n_rep, ki, 0)),
+            pl.BlockSpec((1,), lambda b, ki: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, hd), q.dtype),
+        scratch_shapes=[_vmem((1,), jnp.float32), _vmem((1,), jnp.float32),
+                        _vmem((1, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, valid_len)

@@ -1,0 +1,25 @@
+"""Model-layout wrapper for the flash decode kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_decode
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0,
+                     blk_k: int = 512, interpret: bool = True):
+    """q (B,1,H,hd); caches (B,S,Hkv,hd); valid_len (B,).
+
+    ``window > 0`` means the cache is a ring buffer of that size: validity
+    becomes min(valid_len, window) and no positional mask is needed.
+    """
+    b, _, h, hd = q.shape
+    hkv = k_cache.shape[2]
+    if window > 0:
+        valid_len = jnp.minimum(valid_len, window)
+    qk = q.transpose(0, 2, 1, 3).reshape(b * h, 1, hd)
+    kk = k_cache.transpose(0, 2, 1, 3).reshape(b * hkv, -1, hd)
+    vk = v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, -1, hd)
+    valid = jnp.repeat(valid_len.astype(jnp.int32), h)
+    o = flash_decode(qk, kk, vk, valid, blk_k=blk_k, interpret=interpret)
+    return o.reshape(b, h, 1, hd).transpose(0, 2, 1, 3)

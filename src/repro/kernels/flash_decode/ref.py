@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash decode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.attention import decode_attend
+
+
+def flash_decode_ref(q, k, v, valid_len):
+    """Kernel layout (BH,1,hd)/(BHkv,S,hd) -> (BH,1,hd)."""
+    bh = q.shape[0]
+    n_rep = bh // k.shape[0]
+    kq = jnp.repeat(k, n_rep, axis=0)
+    vq = jnp.repeat(v, n_rep, axis=0)
+    o = decode_attend(q[:, :, None], kq[:, :, None], vq[:, :, None],
+                      valid_len)
+    return o[:, :, 0]

@@ -1,0 +1,49 @@
+"""Pallas TPU fused masked participation-weighted FedAvg.
+
+THE paper op: ``new_u = global_u + Σ_c w_c·sel_cu·Δ_cu / Σ_c w_c·sel_cu``
+fused over client-stacked deltas.  ops.py packs each freeze unit's
+params into tile rows and precomputes the per-tile client weight row
+``wm[t, c] = w_c · sel_{c, unit(t)}`` (masks are per-unit constants, so
+they collapse from (C, N) floats to (T, C)); the kernel then fuses the
+weighted client reduction, the denominator guard, and the global add in
+one VMEM pass — one HBM read of the deltas instead of the 3–4 passes the
+unfused jnp version takes.
+
+Grid: (n_tiles,).  Blocks: deltas (C, tile), weights (C,), global (tile,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(g_ref, d_ref, w_ref, o_ref):
+    g = g_ref[0].astype(jnp.float32)              # (tile,)
+    d = d_ref[0].astype(jnp.float32)              # (C, tile)
+    w = w_ref[0].astype(jnp.float32)              # (C,)
+    denom = w.sum()
+    num = jnp.einsum("c,ct->t", w, d)
+    upd = jnp.where(denom > 0, num / jnp.maximum(denom, 1e-9), 0.0)
+    o_ref[0] = (g + upd).astype(o_ref.dtype)
+
+
+def masked_agg(global_tiled, deltas_tiled, weights_tiled, *,
+               interpret=False):
+    """global (T, tile); deltas (T, C, tile); weights (T, C) -> (T, tile)."""
+    t, tile = global_tiled.shape
+    c = deltas_tiled.shape[1]
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+            pl.BlockSpec((1, c, tile), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, tile), global_tiled.dtype),
+        interpret=interpret,
+    )(global_tiled, deltas_tiled, weights_tiled)

@@ -1,0 +1,89 @@
+"""Pytree-level wrapper: pack params/deltas into unit tiles, run the
+fused kernel, unpack.  Drop-in replacement for core.aggregation.
+masked_fedavg (tested equal in tests/test_kernels_masked_agg.py)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...common import pytree as pt
+from ...core.masking import UnitAssignment, _is_leafunit
+from .kernel import masked_agg
+
+TILE = 2048
+
+
+def _leaf_units_flat(assign, params):
+    """Per-leaf (unit ids per element-block) — unit id for every macro row."""
+    out = []
+    for (path, leaf), lu in zip(
+            pt.flatten_with_paths(params),
+            jax.tree_util.tree_leaves(assign.leaf_units, is_leaf=_is_leafunit)):
+        if lu.kind == "scalar":
+            out.append((path, leaf, np.asarray([lu.base])))
+        else:
+            ids = lu.base + lu.stride * np.arange(leaf.shape[0])
+            out.append((path, leaf, ids))
+    return out
+
+
+def masked_fedavg_fused(global_params, deltas, sel, weights,
+                        assign: UnitAssignment, *, tile: int = TILE,
+                        interpret: bool = True) -> Any:
+    """Same contract as core.aggregation.masked_fedavg.
+
+    deltas: client-stacked pytree (C leading); sel (C, U); weights (C,).
+    """
+    c = sel.shape[0]
+    leaves = _leaf_units_flat(assign, global_params)
+    wsel = sel * weights[:, None].astype(sel.dtype)        # (C, U)
+
+    g_rows, d_rows, w_rows = [], [], []
+    meta = []  # (path, shape, n_elems, n_tiles per segment rows)
+    dleaves = {p: l for p, l in pt.flatten_with_paths(deltas)}
+    for path, leaf, unit_ids in leaves:
+        d = dleaves[path]
+        if len(unit_ids) == 1:
+            segs = [(leaf.reshape(-1), d.reshape(c, -1), int(unit_ids[0]))]
+        else:
+            lf = leaf.reshape(leaf.shape[0], -1)
+            df = d.reshape(c, leaf.shape[0], -1)
+            segs = [(lf[m], df[:, m], int(u))
+                    for m, u in enumerate(unit_ids)]
+        for gseg, dseg, u in segs:
+            n = gseg.shape[0]
+            nt = -(-n // tile)
+            pad = nt * tile - n
+            g_rows.append(jnp.pad(gseg, (0, pad)).reshape(nt, tile))
+            d_rows.append(jnp.pad(dseg, ((0, 0), (0, pad)))
+                          .reshape(c, nt, tile).swapaxes(0, 1))
+            w_rows.append(jnp.broadcast_to(wsel[:, u], (nt, c)))
+            meta.append((path, n, nt))
+
+    g_t = jnp.concatenate(g_rows, axis=0)
+    d_t = jnp.concatenate(d_rows, axis=0)
+    w_t = jnp.concatenate(w_rows, axis=0)
+    out_t = masked_agg(g_t, d_t, w_t, interpret=interpret)
+
+    # unpack: walk meta in packing order
+    flat_out = {}
+    row = 0
+    i = 0
+    for path, leaf, unit_ids in leaves:
+        pieces = []
+        for _ in unit_ids:
+            mpath, n, nt = meta[i]
+            assert mpath == path
+            pieces.append(out_t[row:row + nt].reshape(-1)[:n])
+            row += nt
+            i += 1
+        if len(unit_ids) == 1:
+            flat_out[path] = pieces[0].reshape(leaf.shape).astype(leaf.dtype)
+        else:
+            flat_out[path] = jnp.stack(
+                [p.reshape(leaf.shape[1:]) for p in pieces]).astype(leaf.dtype)
+
+    return pt.tree_map_with_path(lambda p, x: flat_out[p], global_params)

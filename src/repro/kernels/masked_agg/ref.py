@@ -1,0 +1,2 @@
+"""Oracle: the unfused pytree masked FedAvg from core.aggregation."""
+from ...core.aggregation import masked_fedavg as masked_fedavg_ref  # noqa: F401

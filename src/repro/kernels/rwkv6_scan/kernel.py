@@ -1,0 +1,97 @@
+"""Pallas TPU chunked RWKV-6 WKV recurrence with data-dependent decay.
+
+The (dk × dv) per-head state lives in VMEM scratch across the sequential
+time-chunk grid dimension; each chunk is processed with MXU matmuls
+(the chunked gated-linear-attention form, two-sided log-normalized —
+same math as models/linear_scan.py, which is this kernel's oracle).
+
+Grid: (batch·heads, n_chunks), chunk dim sequential.  Chunk length and
+dk/dv default to 16/64 — (64, 64) state + (16, 64) operand tiles keep
+the working set well inside VMEM while the matmuls stay MXU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LOG_DECAY_FLOOR = -5.0
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, d_ref, u_ref, o_ref, state_ref,
+                s_scr, *, chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)          # (c, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # (c, dv)
+    d = jnp.clip(d_ref[0].astype(jnp.float32), LOG_DECAY_FLOOR, 0.0)
+    u = u_ref[0].astype(jnp.float32)          # (1, dk)
+
+    cum = jnp.cumsum(d, axis=0)
+    total = cum[-1:, :]
+    cum_prev = cum - d
+    qh = r * jnp.exp(cum_prev - total)
+    kh = k * jnp.exp(total - cum)
+    att = jax.lax.dot_general(qh, kh, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(col < row, att, 0.0)      # strict lower triangle
+    intra = jax.lax.dot(att, v, preferred_element_type=jnp.float32)
+    diag = jnp.sum(r * u * k, axis=1, keepdims=True)
+    intra = intra + diag * v
+    inter = jax.lax.dot(r * jnp.exp(cum_prev), s_scr[...],
+                        preferred_element_type=jnp.float32)
+    o_ref[0] = (inter + intra).astype(o_ref.dtype)
+    s_scr[...] = jnp.exp(total).T * s_scr[...] + jax.lax.dot_general(
+        kh, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finalize():
+        state_ref[0] = s_scr[...]
+
+
+def rwkv6_scan(r, k, v, log_decay, u, *, chunk=16, interpret=False):
+    """r,k (BH, S, dk); v (BH, S, dv); log_decay (BH, S, dk); u (BH, dk).
+
+    Returns (o (BH, S, dv), state (BH, dk, dv) float32)."""
+    bh, s, dk = r.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"S {s} % chunk {chunk}")
+    nc = s // chunk
+
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk, n_chunks=nc),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, dk), lambda b, ci: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dv), r.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_decay, u)

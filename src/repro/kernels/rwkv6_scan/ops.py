@@ -1,0 +1,23 @@
+"""Model-layout wrapper for the rwkv6 WKV scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import rwkv6_scan
+
+
+def wkv(r, k, v, log_decay, u, *, chunk: int = 16, interpret: bool = True):
+    """Model layout: r,k,log_decay (B,S,H,dk); v (B,S,H,dv); u (H,dk).
+
+    Returns (o (B,S,H,dv), state (B,H,dk,dv))."""
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, -1)
+
+    uu = jnp.broadcast_to(u, (b, h, dk)).reshape(b * h, dk)
+    o, state = rwkv6_scan(fold(r), fold(k), fold(v), fold(log_decay), uu,
+                          chunk=chunk, interpret=interpret)
+    o = o.reshape(b, h, s, dv).transpose(0, 2, 1, 3)
+    return o, state.reshape(b, h, dk, dv)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the rwkv6 scan kernel: the exact per-token
+recurrence (same convention as models/linear_scan.py, decay_on='k')."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models.linear_scan import LOG_DECAY_FLOOR
+
+
+def rwkv6_scan_ref(r, k, v, log_decay, u):
+    """Kernel layout: r,k,log_decay (BH,S,dk); v (BH,S,dv); u (BH,dk).
+
+    Returns (o (BH,S,dv), state (BH,dk,dv) float32)."""
+    bh, s, dk = r.shape
+    dv = v.shape[-1]
+    ld = jnp.clip(log_decay.astype(jnp.float32), LOG_DECAY_FLOOR, 0.0)
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    uf = u.astype(jnp.float32)
+
+    def step(state, xs):
+        rt, kt, vt, dt = xs                  # (BH, dk) / (BH, dv)
+        out = jnp.einsum("bi,bij->bj", rt, state)
+        out = out + jnp.einsum("bi,bi->b", rt, uf * kt)[:, None] * vt
+        state = jnp.exp(dt)[..., None] * state + \
+            jnp.einsum("bi,bj->bij", kt, vt)
+        return state, out
+
+    xs = tuple(x.swapaxes(0, 1) for x in (rf, kf, vf, ld))
+    state0 = jnp.zeros((bh, dk, dv), jnp.float32)
+    state, outs = jax.lax.scan(step, state0, xs)
+    return outs.swapaxes(0, 1).astype(r.dtype), state

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# init.  512 host devices back both the 256-chip single-pod mesh and the
+# 2-pod 512-chip mesh (placeholders — lowering only, nothing allocates).
+
+# Multi-pod dry-run: prove every (arch × input-shape × mesh) lowers,
+# compiles, fits, and report its roofline terms.
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun \
+#         --arch qwen3-1.7b --shape train_4k --mesh single [--step fl_round]
+#
+# Methodology (EXPERIMENTS.md §Methodology):
+#   * the FULL config compiles with the compact layer scan — this is the
+#     pass/fail lowering proof and the source of memory_analysis();
+#   * per-device FLOPs / bytes / collective bytes come from two small
+#     UNROLLED compiles (1-macro and 2-macro depth) extrapolated linearly
+#     — XLA counts a while-loop body once, so scanned cost_analysis
+#     undercounts by the trip count, and a full unroll both compiles
+#     ~15x slower and fuses worse on the CPU backend.
+#
+# Writes one JSON record per run under results/dryrun/.
+# (No __future__ import here: the XLA_FLAGS lines above must stay first.)
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import get_config
+from ..common import pytree as pt
+from ..sharding import layout_for
+from . import roofline, specs
+from .mesh import make_production_mesh, make_fl_mesh
+from .shapes import SHAPES, shape_applicable
+from .steps import (default_loss_kwargs, make_decode_step, make_fl_round_step,
+                    make_prefill_step, make_train_step)
+
+
+def param_counts(cfg, params_sds) -> Dict[str, int]:
+    total = pt.param_count(params_sds)
+    active = total
+    if cfg.moe is not None:
+        from ..models.transformer import block_layout, n_macro
+        n_moe_layers = sum(s.moe for s in block_layout(cfg)) * n_macro(cfg)
+        e, k, ff = cfg.moe.num_experts, cfg.moe.top_k, cfg.moe.expert_d_ff
+        inactive = 3 * (e - k) * cfg.d_model * ff * n_moe_layers
+        active = total - inactive
+    return {"total": total, "active": active}
+
+
+def depth_variants(cfg):
+    """(2-macro cfg, 3-macro cfg, n_macro) for the cost extrapolation
+    (1-layer anchors trip degenerate GSPMD decisions — see roofline)."""
+    if cfg.family == "audio":
+        return (cfg.replace(n_layers=2, n_enc_layers=2),
+                cfg.replace(n_layers=3, n_enc_layers=3), cfg.n_layers)
+    from ..models.transformer import block_layout
+    macro = len(block_layout(cfg))
+    return (cfg.replace(n_layers=2 * macro), cfg.replace(n_layers=3 * macro),
+            cfg.n_layers // macro)
+
+
+def logits_pspec(layout, mesh, shape, step_kind):
+    """Explicit logits sharding (see models.layers.set_logits_partition)."""
+    from .specs import _dp_axes, _dp_size
+    if step_kind == "decode":
+        return None                      # tiny (B,1,V); leave to GSPMD
+    dp = _dp_axes(mesh)
+    if layout == "fsdp_only":
+        dp = dp + ("model",)
+    if shape.global_batch % _dp_size(mesh) != 0:
+        return None
+    vocab_ax = None if layout in ("fsdp_only", "replicated") else "model"
+    return P(dp, None, vocab_ax)
+
+
+def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
+                 fl_fraction=0.5, fl_synchronized=False, fl_clients=None,
+                 loss_overrides=None):
+    """Returns (jitted, args, tokens_processed, is_train, extra_record)."""
+    from ..models import layers as _layers
+    _layers.set_logits_partition(
+        logits_pspec(layout, mesh, shape, step_kind)
+        if step_kind != "fl_round" else None)
+    params = specs.params_sds(cfg)
+    p_sh = specs.param_shardings(cfg, mesh, params, layout)
+    rep = NamedSharding(mesh, P())
+    extra: Dict[str, Any] = {}
+
+    if step_kind == "train":
+        from ..optim.masked import adam_init
+        opt = jax.eval_shape(adam_init, params)
+        opt_sh = specs.opt_shardings(p_sh, mesh)
+        batch = specs.batch_specs(cfg, shape)
+        b_sh = specs.batch_shardings(cfg, shape, mesh, layout)
+        kw = default_loss_kwargs(cfg, remat=remat, unroll=unroll)
+        kw.update(loss_overrides or {})
+        fn = make_train_step(cfg, loss_kwargs=kw)
+        jitted = jax.jit(fn, in_shardings=(p_sh, opt_sh, b_sh),
+                         out_shardings=(p_sh, opt_sh, rep))
+        return jitted, (params, opt, batch), \
+            shape.global_batch * shape.seq_len, True, extra
+    if step_kind == "prefill":
+        batch = specs.batch_specs(cfg, shape)
+        b_sh = specs.batch_shardings(cfg, shape, mesh, layout)
+        cache = specs.cache_sds(cfg, shape)
+        c_sh = specs.cache_shardings(cfg, shape, mesh, cache)
+        kw = default_loss_kwargs(cfg, unroll=unroll)
+        kw.update(loss_overrides or {})
+        fn = make_prefill_step(cfg, shape, loss_kwargs=kw)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                         out_shardings=(rep, c_sh))
+        return jitted, (params, batch), \
+            shape.global_batch * shape.seq_len, False, extra
+    if step_kind == "decode":
+        cache = specs.cache_sds(cfg, shape)
+        c_sh = specs.cache_shardings(cfg, shape, mesh, cache)
+        token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        t_sh = specs.token_shardings(cfg, shape, mesh)
+        fn = make_decode_step(cfg, unroll=unroll)
+        jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh),
+                         out_shardings=(rep, c_sh))
+        return jitted, (params, cache, token), shape.global_batch, False, \
+            extra
+    if step_kind == "fl_round":
+        c = fl_clients
+        fn, assign, fl = make_fl_round_step(
+            cfg, n_clients=c, train_fraction=fl_fraction,
+            synchronized=fl_synchronized,
+            loss_kwargs=default_loss_kwargs(cfg, remat=remat, unroll=unroll))
+        extra["fl"] = {"n_clients": c, "n_units": assign.n_units,
+                       "n_train_units": fl.n_train_units,
+                       "synchronized": fl_synchronized}
+        b_per = max(shape.global_batch // c, 1)
+        bspec = specs.batch_specs(
+            cfg, dataclasses.replace(shape, global_batch=b_per))
+        batch = {k: jax.ShapeDtypeStruct((c, 1) + v.shape, v.dtype)
+                 for k, v in ((k, v) for k, v in bspec.items())}
+        weights = jax.ShapeDtypeStruct((c,), jnp.float32)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        b_sh = jax.tree_util.tree_map(
+            lambda v: NamedSharding(mesh, P("client", None, "data",
+                                            *(None,) * (v.ndim - 3))), batch)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, rep, rep),
+                         out_shardings=(p_sh, None))
+        return jitted, (params, batch, weights, key), \
+            b_per * c * shape.seq_len, True, extra
+    raise ValueError(step_kind)
+
+
+def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+               step_kind: str = "auto", layout: Optional[str] = None,
+               fl_fraction: float = 0.5, fl_synchronized: bool = False,
+               lower_only: bool = False, remat: bool = True,
+               skip_accounting: bool = False,
+               verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(arch, cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": why}
+    if step_kind == "auto":
+        step_kind = {"train": "train", "prefill": "prefill",
+                     "decode": "decode"}[shape.kind]
+    layout = layout or layout_for(cfg)
+    if (step_kind == "decode" and cfg.family != "ssm"
+            and cfg.n_kv_heads % 16 != 0 and not layout.endswith("_hd")):
+        # kv-heads don't divide the model axis: move attention TP to the
+        # head_dim so q matches the hd-sharded KV cache (rules.py).
+        layout = layout + "_hd"
+    t0 = time.time()
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "step": step_kind, "layout": layout, "skipped": False,
+    }
+    fl_clients = cfg.fl_clients_single_pod * (2 if multi_pod else 1)
+    if step_kind == "fl_round":
+        mesh = make_fl_mesh(cfg.fl_clients_single_pod, multi_pod=multi_pod)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    record["chips"] = chips
+
+    counts = param_counts(cfg, specs.params_sds(cfg))
+    record.update({"n_params": counts["total"],
+                   "n_params_active": counts["active"]})
+
+    # --- 1. full-config scan compile: the lowering proof + memory ------
+    jitted, args, tokens, train, extra = build_jitted(
+        cfg, shape, step_kind, mesh, layout, unroll=False, remat=remat,
+        fl_fraction=fl_fraction, fl_synchronized=fl_synchronized,
+        fl_clients=fl_clients)
+    record.update(extra)
+    with mesh:
+        lowered = jitted.lower(*args)
+        record["lower_s"] = round(time.time() - t0, 1)
+        if lower_only:
+            return record
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t0 - record["lower_s"], 1)
+    ma = roofline.memory_analysis_terms(compiled)
+    record["memory_analysis"] = ma
+    record["bytes_per_device"] = ma["peak_bytes"]
+    record["fits_hbm_16gb"] = bool(ma["peak_bytes"] <= 16e9)
+
+    if skip_accounting:
+        record["total_s"] = round(time.time() - t0, 1)
+        return record
+
+    # --- 2. cost accounting: 1-macro / 2-macro unrolled compiles --------
+    cfg1, cfg2, nm = depth_variants(cfg)
+    acct = []
+    for c in (cfg1, cfg2):
+        j, a, _, _, _ = build_jitted(
+            c, shape, step_kind, mesh, layout, unroll=True, remat=remat,
+            fl_fraction=fl_fraction, fl_synchronized=fl_synchronized,
+            fl_clients=fl_clients)
+        with mesh:
+            comp = j.lower(*a).compile()
+        acct.append((roofline.cost_analysis_terms(comp),
+                     roofline.collective_bytes(comp.as_text())))
+    (ca1, cb1), (ca2, cb2) = acct
+    ex = roofline.extrapolate_layers
+    flops = ex(ca1["flops"], ca2["flops"], nm)
+    hbytes = ex(ca1["bytes"], ca2["bytes"], nm)
+    coll = {k: max(ex(cb1[k], cb2[k], nm), 0.0) for k in cb1}
+    terms = roofline.roofline_terms(hlo_flops=flops, hlo_bytes=hbytes,
+                                    coll_bytes=coll["total"])
+    mf = roofline.model_flops(cfg, counts["total"], counts["active"],
+                              tokens, train=train)
+    record.update({
+        "cost_analysis": {"flops_per_device": flops,
+                          "bytes_per_device": hbytes,
+                          "raw_2macro": ca1, "raw_3macro": ca2},
+        "collective_bytes": coll,
+        "roofline": terms,
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / chips / flops) if flops else None,
+        "total_s": round(time.time() - t0, 1),
+    })
+    if verbose:
+        print(f"[{arch} × {shape_name} × {record['mesh']} × {step_kind}] "
+              f"lower {record['lower_s']}s compile {record['compile_s']}s "
+              f"total {record['total_s']}s")
+        print(f"  params {counts['total']/1e9:.2f}B "
+              f"(active {counts['active']/1e9:.2f}B)  layout {layout}")
+        print(f"  memory/device: arg {ma['argument_size_in_bytes']/1e9:.2f}GB"
+              f" temp {ma['temp_size_in_bytes']/1e9:.2f}GB"
+              f" out {ma['output_size_in_bytes']/1e9:.2f}GB"
+              f" peak {ma['peak_bytes']/1e9:.2f}GB"
+              f" fits16GB={record['fits_hbm_16gb']}")
+        print(f"  per-device: {flops:.3e} FLOPs, {hbytes:.3e} B HBM, "
+              f"{coll['total']/1e9:.3f} GB coll "
+              f"(ar {coll['all-reduce']/1e9:.2f} ag {coll['all-gather']/1e9:.2f}"
+              f" rs {coll['reduce-scatter']/1e9:.2f}"
+              f" a2a {coll['all-to-all']/1e9:.2f})")
+        r = terms
+        print(f"  roofline: compute {r['compute_s']*1e3:.2f}ms "
+              f"memory {r['memory_s']*1e3:.2f}ms "
+              f"collective {r['collective_s']*1e3:.2f}ms "
+              f"-> {r['dominant']}-bound; useful-FLOP ratio "
+              f"{round(record['useful_flops_ratio'], 3)}")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--step", default="auto",
+                    choices=["auto", "train", "prefill", "decode", "fl_round"])
+    ap.add_argument("--layout", default=None)
+    ap.add_argument("--fl-fraction", type=float, default=0.5)
+    ap.add_argument("--fl-synchronized", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--skip-accounting", action="store_true")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    rec = run_dryrun(args.arch, args.shape, multi_pod=(args.mesh == "multi"),
+                     step_kind=args.step, layout=args.layout,
+                     fl_fraction=args.fl_fraction,
+                     fl_synchronized=args.fl_synchronized,
+                     lower_only=args.lower_only, remat=not args.no_remat,
+                     skip_accounting=args.skip_accounting)
+    os.makedirs(args.out, exist_ok=True)
+    suffix = "" if args.step == "auto" else f"_{args.step}"
+    path = os.path.join(
+        args.out, f"{args.arch}_{args.shape}_{args.mesh}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+  compute    = HLO_FLOPs / (chips · 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips · 819e9 B/s HBM)
+  collective = collective_bytes / (chips · 50e9 B/s ICI per link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed from the optimized HLO text — the sum of RESULT sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (result size ≈ bytes received per participating
+device; the standard conservative proxy).  MODEL_FLOPS = 6·N·D (dense) /
+6·N_active·D (MoE) gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result sizes per collective kind over the optimized HLO."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(type_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def model_flops(cfg, n_params_total: int, n_params_active: Optional[int],
+                tokens: int, *, train: bool) -> float:
+    """6·N·D (train) / 2·N·D (inference forward) per processed token."""
+    n = n_params_active if n_params_active else n_params_total
+    mult = 6.0 if train else 2.0
+    return mult * n * tokens
+
+
+def roofline_terms(*, hlo_flops: float, hlo_bytes: float,
+                   coll_bytes: float, chips: int = 1) -> Dict[str, float]:
+    """All inputs are PER-DEVICE (XLA compiles and analyses the per-device
+    SPMD program — verified in EXPERIMENTS.md §Methodology), so the chip
+    count is already divided out; ``chips`` is accepted for callers that
+    pass global quantities."""
+    compute = hlo_flops / (chips * PEAK_FLOPS)
+    memory = hlo_bytes / (chips * HBM_BW)
+    collective = coll_bytes / (chips * ICI_BW)
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant}
+
+
+def extrapolate_layers(v_a: float, v_b: float, n_macro: int,
+                       a: int = 2) -> float:
+    """Per-device cost of the full depth from a-macro and (a+1)-macro
+    compiles: v(n) = v_a + (n-a)·(v_b-v_a).
+
+    Costs are layer-affine (all assigned archs are layer-homogeneous per
+    macro).  Anchors default to depths (2, 3): the 1-layer compile trips
+    degenerate GSPMD decisions (logits gathers) that don't represent the
+    deep model.  Exact for collective bytes, within ~10% for FLOPs vs a
+    full unroll (EXPERIMENTS.md §Methodology)."""
+    return v_a + (n_macro - a) * (v_b - v_a)
+
+
+def cost_analysis_terms(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_analysis_terms(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[k] = float(getattr(ma, k, 0) or 0)
+    out["peak_bytes"] = (out["argument_size_in_bytes"]
+                         + out["temp_size_in_bytes"]
+                         + out["output_size_in_bytes"]
+                         - out["alias_size_in_bytes"])
+    return out

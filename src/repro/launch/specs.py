@@ -1,0 +1,140 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch × shape).
+
+``input_specs(cfg, shape)`` returns weak-type-correct stand-ins for every
+model input — no device allocation; the dry-run lowers against these.
+``*_shardings`` resolve NamedShardings on a given mesh for params,
+optimizer state, batches and KV caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..common import pytree as pt
+from ..configs.base import ArchConfig
+from ..models import get_model
+from ..models.transformer import vit_width
+from ..sharding import params_specs, layout_for
+from .shapes import InputShape
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape, dtype=None
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training/prefill batch stand-ins (tokens/labels [+frontend stubs])."""
+    dtype = dtype or jnp.dtype(cfg.lowering_dtype)
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        s_text = s - cfg.n_patches
+        out["tokens"] = _sds((b, s_text), I32)
+        out["labels"] = _sds((b, s_text), I32)
+        out["patches"] = _sds((b, cfg.n_patches, vit_width(cfg)), dtype)
+    elif cfg.family == "audio":
+        out["tokens"] = _sds((b, s), I32)
+        out["labels"] = _sds((b, s), I32)
+        out["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), dtype)
+    else:
+        out["tokens"] = _sds((b, s), I32)
+        out["labels"] = _sds((b, s), I32)
+    return out
+
+
+def params_sds(cfg: ArchConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.lowering_dtype)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: model.init_params(k, dtype), key)
+
+
+def cache_sds(cfg: ArchConfig, shape: InputShape, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.lowering_dtype)
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, dtype))
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _dp_axes(mesh)]))
+
+
+def batch_shardings(cfg, shape, mesh, layout: Optional[str] = None) -> Any:
+    dp = _dp_axes(mesh)
+    if layout == "fsdp_only" and "model" in mesh.shape:
+        dp = dp + ("model",)      # pure-DP layout: batch over every axis
+    b = shape.global_batch
+    size = int(np.prod([mesh.shape[a] for a in dp]))
+    lead = dp if b % size == 0 else (dp[:-1] if b % int(
+        np.prod([mesh.shape[a] for a in dp[:-1]] or [1])) == 0 and dp[:-1]
+        else None)
+
+    def spec(path, leaf):
+        return NamedSharding(mesh, P(lead, *(None,) * (leaf.ndim - 1)))
+
+    return pt.tree_map_with_path(spec, batch_specs(cfg, shape))
+
+
+def param_shardings(cfg, mesh, params, layout: Optional[str] = None):
+    layout = layout or layout_for(cfg)
+    specs = params_specs(params, layout, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def opt_shardings(param_sh, mesh):
+    """AdamState(mu, nu, count): moments follow params; count replicated."""
+    from ..optim.masked import AdamState
+    return AdamState(mu=param_sh, nu=param_sh,
+                     count=NamedSharding(mesh, P()))
+
+
+def cache_shardings(cfg, shape, mesh, cache) -> Any:
+    """Shard KV caches: batch over data axes, seq over model; fall back to
+    sharding seq over everything when batch is unshardable (long_500k)."""
+    dp = _dp_axes(mesh)
+    dp_n = _dp_size(mesh)
+    model_n = mesh.shape.get("model", 1)
+
+    def spec(path, leaf):
+        name = path.split("/")[-1]
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        axes = [None] * leaf.ndim
+        if name in ("k", "v", "xk", "xv"):           # (nm, B, A, hkv, hd)
+            bdim, hkv, hd = leaf.shape[1], leaf.shape[3], leaf.shape[4]
+            if bdim % dp_n == 0:
+                axes[1] = dp
+            # model axis goes on kv-heads (matches the TP q sharding with
+            # zero resharding) or head_dim; NEVER the seq dim — a
+            # head-sharded q against a seq-sharded cache makes GSPMD
+            # all-gather the whole cache (observed 60 GB/device).
+            if hkv % model_n == 0:
+                axes[3] = "model"
+            elif hd % model_n == 0:
+                axes[4] = "model"
+        else:                                        # states: shard batch only
+            if leaf.ndim >= 2 and leaf.shape[1] % dp_n == 0:
+                axes[1] = dp
+        return NamedSharding(mesh, P(*axes))
+
+    return pt.tree_map_with_path(spec, cache)
+
+
+def token_shardings(cfg, shape, mesh):
+    """(B, 1) decode token."""
+    dp = _dp_axes(mesh)
+    lead = dp if shape.global_batch % _dp_size(mesh) == 0 else None
+    return NamedSharding(mesh, P(lead, None))

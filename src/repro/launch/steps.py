@@ -1,0 +1,105 @@
+"""Step builders: the functions the dry-run lowers and the launchers run.
+
+* ``make_train_step``   — fwd+bwd+masked-Adam (remat per macro-block)
+* ``make_prefill_step`` — prefill with last-token logits + KV cache build
+* ``make_decode_step``  — ONE new token against a seq_len KV cache
+* ``make_fl_round_step``— the paper's federated round (core.federation)
+  over the (client, data, model) mesh view; client_batches (C, 1, b, S)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.federation import FLConfig, build_round_step
+from ..core.masking import build_units_zoo
+from ..models import get_model
+from ..optim.masked import adam_init, adam_step
+from .shapes import InputShape
+
+
+def default_loss_kwargs(cfg: ArchConfig, shape: Optional[InputShape] = None,
+                        *, remat: bool = True,
+                        unroll: bool = False) -> Dict[str, Any]:
+    # unroll=True fully unrolls the layer scan: required for honest
+    # cost_analysis/collective accounting in the dry-run (XLA counts a
+    # while-loop body once); CPU tests keep the compact scan.
+    kw: Dict[str, Any] = {"remat": remat, "unroll": unroll}
+    if cfg.family != "ssm":
+        kw["attn_impl"] = "chunked"
+        kw["q_chunk"] = 1024
+    return kw
+
+
+def make_train_step(cfg: ArchConfig, *, lr: float = 3e-4,
+                    remat: bool = True, loss_kwargs: Optional[Dict] = None):
+    model = get_model(cfg)
+    kw = loss_kwargs if loss_kwargs is not None else \
+        default_loss_kwargs(cfg, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch, **kw)
+        params, opt_state = adam_step(grads, opt_state, params, lr=lr)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, shape: InputShape,
+                      loss_kwargs: Optional[Dict] = None):
+    model = get_model(cfg)
+    kw = dict(loss_kwargs or {})
+    kw.pop("remat", None)
+    if cfg.family == "ssm":
+        kw.pop("attn_impl", None)
+        kw.pop("q_chunk", None)
+
+    def prefill_step(params, batch):
+        extra = {}
+        if cfg.family == "vlm":
+            extra["patches"] = batch["patches"]
+        if cfg.family == "audio":
+            extra["frames"] = batch["frames"]
+        logits, cache = model.prefill(params, batch["tokens"],
+                                      max_len=shape.seq_len,
+                                      last_only=True, **extra, **kw)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, unroll: bool = False):
+    from ..models import _FAMILY
+    mod = _FAMILY[cfg.family]
+
+    def decode_step(params, cache, token):
+        return mod.decode_step(cfg, params, cache, token, unroll=unroll)
+
+    return decode_step
+
+
+def make_fl_round_step(cfg: ArchConfig, *, n_clients: int,
+                       train_fraction: float = 0.5,
+                       strategy: str = "uniform",
+                       synchronized: bool = False, lr: float = 3e-4,
+                       loss_kwargs: Optional[Dict] = None):
+    """The paper's technique at pod scale: one compiled federated round."""
+    model = get_model(cfg)
+    params_shape = jax.eval_shape(
+        lambda k: model.init_params(k, jnp.dtype(cfg.lowering_dtype)),
+        jax.random.PRNGKey(0))
+    assign = build_units_zoo(cfg, params_shape)
+    from ..core.freezing import n_train_from_fraction
+    fl = FLConfig(
+        n_clients=n_clients,
+        n_train_units=n_train_from_fraction(assign.n_units, train_fraction),
+        strategy=strategy, synchronized=synchronized, lr=lr)
+    kw = loss_kwargs if loss_kwargs is not None else \
+        default_loss_kwargs(cfg, remat=True)
+    return build_round_step(model.loss_fn, assign, fl, loss_kwargs=kw), \
+        assign, fl

@@ -1,0 +1,99 @@
+"""Federated training launcher (runs for real on this host at reduced
+scale; on a pod the same code runs under the production mesh).
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen3-1.7b --reduced --clients 4 --rounds 20 \
+        --train-fraction 0.5 [--strategy uniform|fixed_last|full]
+        [--synchronized] [--ckpt results/ck/run1]
+
+Drives the paper's federated round (random per-client layer subsets,
+masked local Adam, participation-weighted FedAvg) over synthetic LM data
+partitioned IID across clients.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import get_config, list_configs
+from ..core import FLConfig, build_round_step, build_units_zoo
+from ..core.freezing import n_train_from_fraction
+from ..core.server import Server
+from ..data import FederatedLoader, iid_partition, lm_batch
+from ..models import get_model
+from ..ckpt import save_server_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=list_configs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant (required on this CPU host)")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--train-fraction", type=float, default=0.5)
+    ap.add_argument("--strategy", default="uniform",
+                    choices=["uniform", "fixed_last", "weighted", "full"])
+    ap.add_argument("--synchronized", action="store_true")
+    ap.add_argument("--fedprox-mu", type=float, default=0.0)
+    ap.add_argument("--dropout", type=float, default=0.0)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--steps-per-round", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init_params(key)
+    assign = build_units_zoo(cfg, params)
+    n_train = n_train_from_fraction(assign.n_units, args.train_fraction)
+    print(f"arch={cfg.name} reduced={args.reduced} units={assign.n_units} "
+          f"train={n_train} clients={args.clients}")
+
+    n = args.clients * args.batch_size * args.steps_per_round * 8
+    data = lm_batch(n, args.seq, cfg.vocab, key=args.seed)
+    if cfg.family == "vlm":
+        from ..models.transformer import vit_width
+        data["patches"] = np.random.default_rng(args.seed).normal(
+            0, 1, (n, cfg.n_patches, vit_width(cfg))).astype(np.float32)
+    if cfg.family == "audio":
+        data["frames"] = np.random.default_rng(args.seed).normal(
+            0, 1, (n, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+    shards = iid_partition(n, args.clients, key=args.seed + 1)
+    loader = FederatedLoader([{k: v[s] for k, v in data.items()}
+                              for s in shards],
+                             batch_size=args.batch_size,
+                             steps_per_round=args.steps_per_round,
+                             key=args.seed)
+    fl = FLConfig(n_clients=args.clients, n_train_units=n_train,
+                  strategy=args.strategy, synchronized=args.synchronized,
+                  lr=args.lr, prox_mu=args.fedprox_mu)
+    srv = Server(build_round_step(model.loss_fn, assign, fl,
+                                  loss_kwargs={"attn_impl": "reference"}),
+                 assign, fl, params, seed=args.seed,
+                 dropout_rate=args.dropout)
+    t0 = time.time()
+    srv.run(args.rounds, lambda r: jax.tree_util.tree_map(
+        jnp.asarray, loader.round_batches(r)),
+        weights=jnp.asarray(loader.weights()), log_every=1)
+    print(f"total {time.time()-t0:.1f}s; comm summary:")
+    print(json.dumps(srv.comm_summary(), indent=1))
+    if args.ckpt:
+        save_server_state(args.ckpt, srv)
+        print(f"saved server state to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

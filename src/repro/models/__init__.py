@@ -1,0 +1,46 @@
+"""Model zoo — pure-functional JAX models, one API across families.
+
+``get_model(cfg)`` dispatches on ``cfg.family``:
+  dense | moe | vlm -> transformer (macro-block scan)
+  ssm               -> rwkv6
+  hybrid            -> hymba
+  audio             -> whisper (enc-dec)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+from . import transformer, rwkv6, hymba, whisper
+from . import layers, attention, linear_scan, moe, paper_models  # noqa: F401
+
+
+class ModelApi(NamedTuple):
+    init_params: Callable
+    forward: Callable
+    loss_fn: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+_FAMILY = {
+    "dense": transformer, "moe": transformer, "vlm": transformer,
+    "ssm": rwkv6, "hybrid": hymba, "audio": whisper,
+}
+
+
+def get_model(cfg) -> ModelApi:
+    mod = _FAMILY[cfg.family]
+    prefill = getattr(mod, "prefill")
+    return ModelApi(
+        init_params=lambda key, dtype=None: mod.init_params(cfg, key, dtype),
+        forward=lambda params, tokens, **kw: mod.forward(
+            cfg, params, tokens, **kw),
+        loss_fn=lambda params, batch, **kw: mod.loss_fn(
+            cfg, params, batch, **kw),
+        init_cache=lambda batch_size, max_len, dtype=None: mod.init_cache(
+            cfg, batch_size, max_len, dtype),
+        prefill=lambda params, tokens, **kw: prefill(cfg, params, tokens, **kw),
+        decode_step=lambda params, cache, token: mod.decode_step(
+            cfg, params, cache, token),
+    )

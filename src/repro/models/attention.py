@@ -1,0 +1,267 @@
+"""Attention computation variants.
+
+Three implementations share one signature; models pick per-layer:
+
+  * ``reference``  — materializes the (S, S) score matrix.  Smoke tests.
+  * ``chunked``    — flash-structured pure-JAX: outer scan over Q blocks,
+                     inner scan over KV blocks with online softmax.  This
+                     is the lowering-safe path for 32k prefill (the score
+                     matrix never materializes).
+  * ``windowed``   — sliding-window attention via a gathered KV slab of
+                     width (window + q_chunk) per Q block: sub-quadratic
+                     and lowering-safe for gemma3/hymba local layers.
+
+Decode-time single-token attention lives in ``decode_attend`` (full cache)
+and ``decode_attend_ring`` (ring-buffer sliding-window cache).
+
+The Pallas TPU kernels in ``repro.kernels.flash_attention`` /
+``flash_decode`` implement the same contracts; ``kernels/*/ref.py``
+delegate here so every kernel has a pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B,S,Hkv,hd) -> (B,S,Hkv*n_rep,hd) for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+              .reshape(b, s, h * n_rep, d)
+
+
+# ---------------------------------------------------------------------------
+# reference
+# ---------------------------------------------------------------------------
+
+def attend_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                     q_offset: int = 0):
+    """q (B,Sq,H,hd), k/v (B,Sk,Hkv,hd) -> (B,Sq,H,hd).
+
+    ``q_offset`` is the absolute position of q[0] relative to k[0]
+    (used at decode: Sq=1, offset=cache_len-1).
+    """
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-structured, pure JAX)
+# ---------------------------------------------------------------------------
+
+def _fit_chunk(s: int, c: int) -> int:
+    """Largest divisor of s that is <= c (handles 1500-frame encoders)."""
+    c = min(c, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def attend_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                   q_chunk: int = 1024, kv_chunk: int = 1024,
+                   q_offset: int = 0):
+    """Online-softmax blockwise attention; O(S·chunk) live memory.
+
+    Baseline iterates ALL (Qi, Kj) block pairs and masks — the causal
+    upper triangle is computed-then-discarded (2x attention FLOPs).  The
+    §Perf hillclimb replaces this with the Pallas kernel's block-skip on
+    TPU; see EXPERIMENTS.md.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    q_chunk = _fit_chunk(sq, q_chunk)
+    kv_chunk = _fit_chunk(sk, kv_chunk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    n_rep = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    kc = k.reshape(b, nk, kv_chunk, hkv, hd)
+    vc = v.reshape(b, nk, kv_chunk, hkv, hd)
+    qc = q.reshape(b, nq, q_chunk, h, hd)
+
+    def q_block(qi, q_blk):
+        # q_blk (B, qc, H, hd)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inputs
+            k_r = _repeat_kv(k_blk, n_rep)       # (B, kc, H, hd)
+            v_r = _repeat_kv(v_blk, n_rep)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_r).astype(jnp.float32)
+            s = s * scale
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(q.dtype), v_r).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, hd), jnp.float32)
+        # checkpoint the inner body: without it, AD saves the (qc, kc)
+        # probability block for EVERY block pair = the full S^2 score
+        # matrix in f32 — exactly what flash attention exists to avoid.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.swapaxes(1, 2).astype(q.dtype)       # (B, qc, H, hd)
+
+    def scan_q(_, inputs):
+        qi, q_blk = inputs
+        return None, q_block(qi, q_blk)
+
+    _, outs = jax.lax.scan(jax.checkpoint(scan_q), None,
+                           (jnp.arange(nq), qc.swapaxes(0, 1)))
+    return outs.swapaxes(0, 1).reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# sliding window via KV slab gather (sub-quadratic)
+# ---------------------------------------------------------------------------
+
+def attend_windowed(q, k, v, *, window: int, q_chunk: int = 1024,
+                    q_offset: int = 0):
+    """Causal sliding-window attention in O(S · window).
+
+    For each Q block, gather the KV slab [qstart - window, qstart + qc)
+    (clamped) and run dense attention against it.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    n_rep = h // hkv
+    q_chunk = _fit_chunk(sq, q_chunk)
+    nq = sq // q_chunk
+    slab = window + q_chunk
+    scale = 1.0 / math.sqrt(hd)
+    qc = q.reshape(b, nq, q_chunk, h, hd)
+
+    def q_block(qi, q_blk):
+        qstart = q_offset + qi * q_chunk
+        start = jnp.clip(qstart - window, 0, max(sk - slab, 0))
+        k_s = jax.lax.dynamic_slice_in_dim(k, start, min(slab, sk), axis=1)
+        v_s = jax.lax.dynamic_slice_in_dim(v, start, min(slab, sk), axis=1)
+        k_r = _repeat_kv(k_s, n_rep)
+        v_r = _repeat_kv(v_s, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_r).astype(jnp.float32) * scale
+        qpos = qstart + jnp.arange(q_chunk)
+        kpos = start + jnp.arange(k_s.shape[1])
+        msk = (kpos[None, :] <= qpos[:, None]) & \
+              (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", w, v_r)
+
+    def scan_q(_, inputs):
+        qi, q_blk = inputs
+        return None, q_block(qi, q_blk)
+
+    _, outs = jax.lax.scan(jax.checkpoint(scan_q), None,
+                           (jnp.arange(nq), qc.swapaxes(0, 1)))
+    return outs.swapaxes(0, 1).reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# decode (single query token against a cache)
+# ---------------------------------------------------------------------------
+
+def cache_token_update(cache, new, pos):
+    """Write one token into a KV cache WITHOUT dynamic_update_slice.
+
+    cache (B, A, Hkv, hd); new (B, 1, Hkv, hd); pos scalar int.  A DUS at
+    a traced index on a sequence-sharded cache forces GSPMD to all-gather
+    the whole cache (observed: 60 GB/device on decode_32k); the masked
+    select keeps the write shard-local.
+    """
+    a = cache.shape[1]
+    mask = (jnp.arange(a) == pos)[None, :, None, None]
+    return jnp.where(mask, new.astype(cache.dtype), cache)
+
+def decode_attend(q, k_cache, v_cache, valid_len, *, window: int = 0):
+    """q (B,1,H,hd) against caches (B,S,Hkv,hd); positions >= valid_len
+    are masked.  Returns (B,1,H,hd)."""
+    b, _, h, hd = q.shape
+    s = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    k = _repeat_kv(k_cache, h // hkv)
+    v = _repeat_kv(v_cache, h // hkv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    kpos = jnp.arange(s)
+    msk = kpos[None, :] < valid_len[:, None]                 # (B,S)
+    if window > 0:
+        msk &= kpos[None, :] >= valid_len[:, None] - window
+    scores = jnp.where(msk[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def decode_attend_ring(q, k_ring, v_ring, step, *, window: int):
+    """Sliding-window decode against a ring buffer of size ``window``.
+
+    ``step`` (B,) int — number of tokens already written (ring slot of the
+    newest entry is (step-1) % window).  All slots < min(step, window) are
+    valid; ring order does not matter for softmax(QK)V.
+    """
+    b, _, h, hd = q.shape
+    hkv = k_ring.shape[2]
+    k = _repeat_kv(k_ring, h // hkv)
+    v = _repeat_kv(v_ring, h // hkv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    slot = jnp.arange(window)
+    valid = slot[None, :] < jnp.minimum(step, window)[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def attend(q, k, v, *, impl: str = "chunked", causal: bool = True,
+           window: int = 0, q_offset: int = 0, q_chunk: int = 1024,
+           kv_chunk: int = 1024):
+    """Dispatch by impl name (training/prefill path)."""
+    if impl == "reference" or q.shape[1] <= max(q_chunk, 256) // 2:
+        return attend_reference(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset)
+    if window > 0 and impl != "reference":
+        return attend_windowed(q, k, v, window=window, q_chunk=q_chunk,
+                               q_offset=q_offset)
+    if impl == "chunked":
+        return attend_chunked(q, k, v, causal=causal, window=window,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              q_offset=q_offset)
+    raise ValueError(f"unknown attention impl {impl!r}")

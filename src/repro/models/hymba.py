@@ -1,0 +1,289 @@
+"""Hymba-1.5B (arXiv:2411.13676) — hybrid parallel attention + SSM heads.
+
+Every block runs a GQA attention branch and a Mamba-style SSM branch **in
+parallel** on the same normed input; branch outputs are RMS-normed and
+averaged with learnable per-branch scales (the paper's head-fusion).
+Most layers use sliding-window attention; every ``global_every``-th layer
+is global (paper layout).  The SSM branch uses the SSD (Mamba-2 style)
+scalar-per-head data-dependent decay so it shares the chunked linear-scan
+substrate with RWKV-6 (simplification vs Mamba-1's per-channel A —
+DESIGN.md §7); meta-tokens and cross-layer KV sharing are omitted.
+
+long_500k eligibility: SSM state is O(1); attention caches are O(window)
+ring buffers except the 4 global layers (full cache) — sub-quadratic
+overall.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .attention import (attend, cache_token_update, decode_attend,
+                        decode_attend_ring)
+from .linear_scan import chunked_linear_scan, linear_scan_decode
+from .transformer import SubSpec, block_layout, n_macro, cache_alloc, \
+    _cache_from_prefill
+
+
+def ssm_dims(cfg):
+    h = cfg.n_heads
+    d_inner = cfg.ssm.expand * cfg.d_model
+    p = d_inner // h
+    return h, p, cfg.ssm.state_dim, cfg.ssm.conv_width
+
+
+def _init_ssm(cfg, key, dtype):
+    h, p, n, w = ssm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, h, p)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (h, p, w)) *
+                   (1.0 / math.sqrt(w))).astype(dtype),
+        "w_b": (jax.random.normal(ks[2], (h, p, n)) *
+                (1.0 / math.sqrt(p))).astype(dtype),
+        "w_c": (jax.random.normal(ks[3], (h, p, n)) *
+                (1.0 / math.sqrt(p))).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (h, p)) *
+                 (1.0 / math.sqrt(p))).astype(dtype),
+        "dt_bias": jnp.full((h,), -2.0, dtype),
+        "a_log": jnp.zeros((h,), dtype),          # A = -exp(a_log)
+        "d_skip": jnp.ones((h, p), dtype) * 0.1,
+        "w_out": (jax.random.normal(ks[5], (h, p, d)) *
+                  (1.0 / math.sqrt(h * p))).astype(dtype),
+    }
+
+
+def _init_block(cfg, key, spec: SubSpec, dtype):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": L.init_norm(cfg.norm, d, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ssm": _init_ssm(cfg, ks[1], dtype),
+        "attn_norm": L.init_norm("rmsnorm", d, dtype),
+        "ssm_norm": L.init_norm("rmsnorm", d, dtype),
+        "ln2": L.init_norm(cfg.norm, d, dtype),
+        "mlp": L.init_mlp(ks[2], d, cfg.d_ff, dtype, glu=cfg.glu),
+    }
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    layout = block_layout(cfg)
+    nm = n_macro(cfg)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    blocks = {}
+    for si, spec in enumerate(layout):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, si), nm)
+        blocks[f"sub{si}"] = jax.vmap(
+            lambda k: _init_block(cfg, k, spec, dtype))(keys)
+    params = {
+        "embed": L.init_embed(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab),
+                                            dtype)}
+    return params
+
+
+def _causal_conv(u, conv_w, conv_state=None):
+    """Depthwise causal conv.  u (B,S,H,P), conv_w (H,P,W)."""
+    w = conv_w.shape[-1]
+    if conv_state is None:
+        up = jnp.pad(u, ((0, 0), (w - 1, 0), (0, 0), (0, 0)))
+    else:  # decode: conv_state (B, W-1, H, P) holds the previous inputs
+        up = jnp.concatenate([conv_state, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * conv_w[None, None, :, :, i]
+              for i in range(w))
+    return jax.nn.silu(out), up[:, -(w - 1):]
+
+
+def _ssm_branch_seq(cfg, p, x, conv_state=None, ssm_state=None, chunk=16):
+    h, pp, n, w = ssm_dims(cfg)
+    u = jnp.einsum("bsd,dhp->bshp", x, p["w_in"])
+    u, new_conv = _causal_conv(u, p["conv_w"], conv_state)
+    bb = jnp.einsum("bshp,hpn->bshn", u, p["w_b"])
+    cc = jnp.einsum("bshp,hpn->bshn", u, p["w_c"])
+    dt = jax.nn.softplus(jnp.einsum("bshp,hp->bsh", u, p["w_dt"]) +
+                         p["dt_bias"].astype(jnp.float32))
+    log_decay = (-jnp.exp(p["a_log"].astype(jnp.float32)) * dt)  # (B,S,H)
+    v = u * dt[..., None].astype(u.dtype)
+    ld = jnp.broadcast_to(log_decay[..., None], v.shape)
+    y, state = chunked_linear_scan(cc, bb, v, ld, decay_on="v",
+                                   state0=ssm_state, chunk=chunk)
+    y = y + u * p["d_skip"][None, None]
+    out = jnp.einsum("bshp,hpd->bsd", y, p["w_out"])
+    return out, new_conv, state
+
+
+def _apply_block(cfg, p, spec: SubSpec, x, positions, rope, attn_impl,
+                 q_chunk, chunk=16):
+    h = L.apply_norm(p["ln1"], x)
+    # attention branch
+    q, k, v = L.qkv_project(p["attn"], h, cfg, positions, rope)
+    o = attend(q, k, v, impl=attn_impl, causal=True, window=spec.window,
+               q_chunk=q_chunk)
+    a_out = L.out_project(p["attn"], o)
+    # ssm branch
+    s_out, _, _ = _ssm_branch_seq(cfg, p["ssm"], h, chunk=chunk)
+    fused = 0.5 * (L.apply_norm(p["attn_norm"], a_out) +
+                   L.apply_norm(p["ssm_norm"], s_out))
+    x = x + fused
+    h2 = L.apply_norm(p["ln2"], x)
+    return x + L.apply_mlp(p["mlp"], h2, cfg.act), (k, v)
+
+
+def forward(cfg, params, tokens, *, attn_impl="chunked", q_chunk=1024,
+            build_cache=False, cache_len=0, remat: bool = False,
+            unroll: bool = False, **_):
+    layout = block_layout(cfg)
+    rope = L.rope_freqs(cfg.head_dim, cfg.rope_pct, cfg.rope_theta)
+    x = L.embed_tokens(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, blk):
+        cache_out = {}
+        for si, spec in enumerate(layout):
+            x, (k, v) = _apply_block(cfg, blk[f"sub{si}"], spec, x,
+                                     positions, rope, attn_impl, q_chunk)
+            if build_cache:
+                cache_out[f"sub{si}"] = _cache_from_prefill(
+                    spec, k, v, s, cache_len)
+        return x, cache_out if build_cache else 0
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params["blocks"],
+                             unroll=n_macro(cfg) if unroll else 1)
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x, cfg.tie_embeddings)
+    return logits, jnp.zeros((), jnp.float32), caches if build_cache else None
+
+
+def loss_fn(cfg, params, batch, *, attn_impl="chunked", q_chunk=1024,
+            remat: bool = False, unroll: bool = False, **_):
+    logits, aux, _ = forward(cfg, params, batch["tokens"],
+                             attn_impl=attn_impl, q_chunk=q_chunk,
+                             remat=remat, unroll=unroll)
+    loss = L.softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"xent": loss, "aux": aux}
+
+
+def prefill(cfg, params, tokens, *, max_len: int, attn_impl="chunked",
+            q_chunk=1024, chunk=16, last_only: bool = False,
+            unroll: bool = False, **_):
+    layout = block_layout(cfg)
+    rope = L.rope_freqs(cfg.head_dim, cfg.rope_pct, cfg.rope_theta)
+    x = L.embed_tokens(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, blk):
+        cache_out = {}
+        for si, spec in enumerate(layout):
+            p = blk[f"sub{si}"]
+            h = L.apply_norm(p["ln1"], x)
+            q, k, v = L.qkv_project(p["attn"], h, cfg, positions, rope)
+            o = attend(q, k, v, impl=attn_impl, causal=True,
+                       window=spec.window, q_chunk=q_chunk)
+            a_out = L.out_project(p["attn"], o)
+            s_out, new_conv, new_ssm = _ssm_branch_seq(cfg, p["ssm"], h,
+                                                       chunk=chunk)
+            fused = 0.5 * (L.apply_norm(p["attn_norm"], a_out) +
+                           L.apply_norm(p["ssm_norm"], s_out))
+            x = x + fused
+            h2 = L.apply_norm(p["ln2"], x)
+            x = x + L.apply_mlp(p["mlp"], h2, cfg.act)
+            slab = _cache_from_prefill(spec, k, v, s, max_len)
+            slab["conv"] = new_conv
+            slab["ssm"] = new_ssm
+            cache_out[f"sub{si}"] = slab
+        return x, cache_out
+
+    x, subs = jax.lax.scan(body, x, params["blocks"],
+                           unroll=n_macro(cfg) if unroll else 1)
+    if last_only:
+        x = x[:, -1:]
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x, cfg.tie_embeddings)
+    return logits, {"step": jnp.asarray(s, jnp.int32), "subs": subs}
+
+
+# ---------------------------------------------------------------------------
+# decode: ring/full KV per layout + O(1) conv & SSM state
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    layout = block_layout(cfg)
+    nm = n_macro(cfg)
+    h, p, n, w = ssm_dims(cfg)
+    subs = {}
+    for si, spec in enumerate(layout):
+        a = cache_alloc(cfg, spec, max_len)
+        subs[f"sub{si}"] = {
+            "k": jnp.zeros((nm, batch_size, a, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((nm, batch_size, a, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+            "conv": jnp.zeros((nm, batch_size, w - 1, h, p), dtype),
+            "ssm": jnp.zeros((nm, batch_size, h, n, p), jnp.float32),
+        }
+    return {"step": jnp.zeros((), jnp.int32), "subs": subs}
+
+
+def decode_step(cfg, params, cache, token, *, unroll: bool = False):
+    layout = block_layout(cfg)
+    rope = L.rope_freqs(cfg.head_dim, cfg.rope_pct, cfg.rope_theta)
+    step = cache["step"]
+    x = L.embed_tokens(params["embed"], token)            # (B,1,d)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(step, (b, 1))
+
+    def body(x, xs):
+        blk, csubs = xs
+        new_subs = {}
+        for si, spec in enumerate(layout):
+            p = blk[f"sub{si}"]
+            c = csubs[f"sub{si}"]
+            h = L.apply_norm(p["ln1"], x)
+            q, k, v = L.qkv_project(p["attn"], h, cfg, positions, rope)
+            a = c["k"].shape[1]
+            if spec.window > 0:
+                slot = step % a
+                kc = cache_token_update(c["k"], k, slot)
+                vc = cache_token_update(c["v"], v, slot)
+                o = decode_attend_ring(q, kc, vc,
+                                       jnp.broadcast_to(step + 1, (b,)),
+                                       window=a)
+            else:
+                kc = cache_token_update(c["k"], k, step)
+                vc = cache_token_update(c["v"], v, step)
+                o = decode_attend(q, kc, vc, jnp.broadcast_to(step + 1, (b,)))
+            a_out = L.out_project(p["attn"], o)
+            s_seq, new_conv, new_ssm = _ssm_branch_seq(
+                cfg, p["ssm"], h, conv_state=c["conv"], ssm_state=c["ssm"],
+                chunk=1)
+            fused = 0.5 * (L.apply_norm(p["attn_norm"], a_out) +
+                           L.apply_norm(p["ssm_norm"], s_seq))
+            x = x + fused
+            h2 = L.apply_norm(p["ln2"], x)
+            x = x + L.apply_mlp(p["mlp"], h2, cfg.act)
+            new_subs[f"sub{si}"] = {"k": kc, "v": vc, "conv": new_conv,
+                                    "ssm": new_ssm}
+        return x, new_subs
+
+    x, subs = jax.lax.scan(body, x, (params["blocks"], cache["subs"]),
+                           unroll=n_macro(cfg) if unroll else 1)
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x, cfg.tie_embeddings)
+    return logits, {"step": step + 1, "subs": subs}

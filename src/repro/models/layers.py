@@ -1,0 +1,239 @@
+"""Shared layer primitives for the model zoo.
+
+Everything is pure-functional: ``init_*`` builds a param dict, ``apply``
+style functions consume ``(params, x)``.  Block params are stacked along a
+leading macro dimension by the model builders and applied under
+``lax.scan`` (see transformer.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if len(shape) >= 3:  # (d, H, hd) style fused projections
+        fan_in = shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return {"w": ones((d,), dtype)}
+    return {"w": ones((d,), dtype), "b": zeros((d,), dtype)}
+
+
+def apply_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "b" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["w"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_heads(w, x, eps: float = 1e-6):
+    """Per-head RMSNorm over the trailing head_dim (qk_norm)."""
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rope_pct: float, theta: float):
+    """Inverse frequencies for the rotated slice of the head dim."""
+    rot = int(head_dim * rope_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return None, 0
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return jnp.asarray(inv, jnp.float32), rot
+
+
+def apply_rope(x, positions, inv_freq, rot: int):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if inv_freq is None or rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # (...,S,rot/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or 2-matrix)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, dtype, glu: bool = True, bias: bool = False):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, ff), dtype),
+         "w_down": dense_init(ks[1], (ff, d), dtype)}
+    if glu:
+        p["w_gate"] = dense_init(ks[2], (d, ff), dtype)
+    if bias:
+        p["b_up"] = zeros((ff,), dtype)
+        p["b_down"] = zeros((d,), dtype)
+    return p
+
+
+def apply_mlp(p, x, act: str = "silu"):
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = x @ p["w_up"]
+    if "b_up" in p:
+        h = h + p["b_up"]
+    if "w_gate" in p:
+        h = a(x @ p["w_gate"]) * h
+    else:
+        h = a(h)
+    out = h @ p["w_down"]
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# attention projections
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype, cross: bool = False):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), dtype),
+        "wk": dense_init(ks[1], (d, Hkv, hd), dtype),
+        "wv": dense_init(ks[2], (d, Hkv, hd), dtype),
+        "wo": dense_init(ks[3], (H, hd, d), dtype, scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((H, hd), dtype)
+        p["bk"] = zeros((Hkv, hd), dtype)
+        p["bv"] = zeros((Hkv, hd), dtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = ones((hd,), dtype)
+        p["k_norm"] = ones((hd,), dtype)
+    return p
+
+
+def qkv_project(p, x, cfg, positions, rope):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,Hkv,hd), rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = rms_norm_heads(p["q_norm"], q)
+        k = rms_norm_heads(p["k_norm"], k)
+    inv_freq, rot = rope
+    q = apply_rope(q, positions, inv_freq, rot)
+    k = apply_rope(k, positions, inv_freq, rot)
+    return q, k, v
+
+
+def out_project(p, o):
+    """o (B,S,H,hd) -> (B,S,d)."""
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype, max_position: int = 0):
+    p = {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+    if max_position:
+        p["pos"] = (jax.random.normal(
+            jax.random.fold_in(key, 1), (max_position, d)) * 0.02).astype(dtype)
+    return p
+
+
+def embed_tokens(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+# Optional logits sharding constraint, set by launch code before tracing.
+# GSPMD sometimes drops the vocab sharding on the logits -> a full f32
+# logits all-gather (observed 388 GB for internvl2); an explicit
+# with_sharding_constraint pins it.  None (default: CPU tests) is a no-op.
+_LOGITS_PSPEC = None
+
+
+def set_logits_partition(spec) -> None:
+    global _LOGITS_PSPEC
+    _LOGITS_PSPEC = spec
+
+
+def _constrain_logits(h):
+    if _LOGITS_PSPEC is not None:
+        h = jax.lax.with_sharding_constraint(h, _LOGITS_PSPEC)
+    return h
+
+
+def logits_head(params, x, tie: bool):
+    if tie:
+        return _constrain_logits(x @ params["embed"]["table"].T)
+    h = x @ params["head"]["w"]
+    if "b" in params["head"]:
+        h = h + params["head"]["b"]
+    return _constrain_logits(h)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean token cross-entropy; logits (B,S,V), labels (B,S) int.
+
+    The label logit is picked with an iota==label masked reduce instead of
+    take_along_axis: a gather across the vocab dim would force GSPMD to
+    all-gather the vocab-sharded logits; the masked reduce stays local and
+    psums a scalar per token.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    ll = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                 axis=-1)
+    nll = logz - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

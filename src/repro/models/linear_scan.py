@@ -1,0 +1,154 @@
+"""Chunked linear-recurrence (gated linear attention) substrate.
+
+Shared by RWKV-6 (Finch) time-mix and the hymba SSM branch.  Both are
+instances of the recurrence over a per-head state matrix ``S (dk, dv)``:
+
+  k-decay (RWKV-6):  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+                     o_t = q_t^T S_{t-1} + (q_t . (u*k_t)) v_t
+  v-decay (SSD/mamba-style):
+                     S_t = S_{t-1} diag(w_t) + k_t v_t^T
+                     o_t = q_t^T S_t
+
+The chunked form processes ``chunk`` tokens with matmuls instead of a
+per-token scan (MXU-friendly; this is the structure the Pallas
+``rwkv6_scan`` kernel implements on TPU).
+
+Numerical strategy: all decay work happens in log space, and BOTH sides
+of the intra-chunk decay ratio exp(c_s - c_r) are normalized against the
+chunk-final cumulative sum so every exponential argument is <= 0 (no
+overflow).  Underflow only occurs when the *total* chunk decay passes
+float32 range; we floor the per-token log-decay at ``LOG_DECAY_FLOOR``
+(a token with log-decay -5 retains 0.7% after one step — below any
+useful signal) and keep chunks short (16).  Documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_FLOOR = -5.0
+
+
+def _chunk(x, n, c):
+    return x.reshape(x.shape[0], n, c, *x.shape[2:])
+
+
+def chunked_linear_scan(q, k, v, log_decay, *, decay_on: str,
+                        bonus: Optional[jnp.ndarray] = None,
+                        state0: Optional[jnp.ndarray] = None,
+                        chunk: int = 16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q,k (B,S,H,dk); v (B,S,H,dv); log_decay (B,S,H,dk|dv) (<=0).
+
+    decay_on: "k" (RWKV) or "v" (mamba/SSD).  bonus: (H, dk) RWKV u-term
+    (output includes current token via bonus; otherwise the v-decay
+    variant includes the current token in the state first).
+    Returns (outputs (B,S,H,dv), final_state (B,H,dk,dv)).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    while s % c:            # largest divisor <= chunk (odd prompt lengths)
+        c -= 1
+    n = s // c
+    f32 = jnp.float32
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    ld = jnp.clip(log_decay.astype(f32), LOG_DECAY_FLOOR, 0.0)
+
+    qc = _chunk(qf, n, c).swapaxes(0, 1)      # (n, B, c, H, dk)
+    kc = _chunk(kf, n, c).swapaxes(0, 1)
+    vc = _chunk(vf, n, c).swapaxes(0, 1)
+    dc = _chunk(ld, n, c).swapaxes(0, 1)      # (n, B, c, H, ddim)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), f32)
+    else:
+        state0 = state0.astype(f32)
+
+    causal_strict = jnp.tril(jnp.ones((c, c), f32), k=-1)
+    causal_incl = jnp.tril(jnp.ones((c, c), f32))
+
+    def body(state, xs):
+        qb, kb, vb, db = xs                   # (B, c, H, ...)
+        cum = jnp.cumsum(db, axis=1)          # c_r, r = 1..c
+        total = cum[:, -1:, :, :]             # c_last
+        if decay_on == "k":
+            # q̂_s = q_s * exp(c_{s-1} - c_last); k̂_r = k_r * exp(c_last - c_r)
+            cum_prev = cum - db               # c_{s-1}
+            qh = qb * jnp.exp(cum_prev - total)
+            kh = kb * jnp.exp(total - cum)
+            att = jnp.einsum("bshi,brhi->bhsr", qh, kh)
+            att = att * causal_strict[None, None]
+            intra = jnp.einsum("bhsr,brhj->bshj", att, vb)
+            if bonus is not None:
+                diag = jnp.einsum("bshi,bshi->bsh",
+                                  qb, bonus.astype(f32)[None, None] * kb)
+                intra = intra + diag[..., None] * vb
+            inter = jnp.einsum("bshi,bhij->bshj", qb * jnp.exp(cum_prev), state)
+            out = inter + intra
+            # S_c = diag(exp(c_last)) S_0 + sum_r diag(exp(c_last-c_r)) k_r v_r^T
+            new_state = jnp.exp(total[:, 0, :, :, None]) * state + \
+                jnp.einsum("brhi,brhj->bhij", kh, vb)
+        elif decay_on == "v":
+            # o_s = exp(c_s) * (q_s S_0) + exp(c_s - c_last)*... see module doc
+            att = jnp.einsum("bshi,brhi->bhsr", qb, kb)
+            att = att * causal_incl[None, None]
+            vh = vb * jnp.exp(total - cum)          # v_r * exp(c_last - c_r)
+            qs_decay = jnp.exp(cum - total)         # exp(c_s - c_last)
+            intra = jnp.einsum("bhsr,brhj->bshj", att, vh) * qs_decay
+            inter = jnp.einsum("bshi,bhij->bshj", qb, state) * jnp.exp(cum)
+            out = inter + intra
+            new_state = state * jnp.exp(total[:, 0, :, None, :]) + \
+                jnp.einsum("brhi,brhj->bhij", kb, vh)
+        else:
+            raise ValueError(decay_on)
+        return new_state, out
+
+    state, outs = jax.lax.scan(body, state0, (qc, kc, vc, dc))
+    outs = outs.swapaxes(0, 1).reshape(b, s, h, dv)
+    return outs.astype(q.dtype), state
+
+
+def linear_scan_decode(q, k, v, log_decay, state, *, decay_on: str,
+                       bonus: Optional[jnp.ndarray] = None):
+    """Single-token step.  q,k (B,H,dk), v (B,H,dv), log_decay (B,H,ddim),
+    state (B,H,dk,dv) -> (out (B,H,dv), new_state)."""
+    f32 = jnp.float32
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    ld = jnp.clip(log_decay.astype(f32), LOG_DECAY_FLOOR, 0.0)
+    kv = jnp.einsum("bhi,bhj->bhij", kf, vf)
+    if decay_on == "k":
+        out = jnp.einsum("bhi,bhij->bhj", qf, state)
+        if bonus is not None:
+            out = out + jnp.einsum("bhi,bhi->bh", qf,
+                                   bonus.astype(f32)[None] * kf)[..., None] * vf
+        new_state = jnp.exp(ld)[..., None] * state + kv
+    elif decay_on == "v":
+        new_state = state * jnp.exp(ld)[:, :, None, :] + kv
+        out = jnp.einsum("bhi,bhij->bhj", qf, new_state)
+    else:
+        raise ValueError(decay_on)
+    return out.astype(q.dtype), new_state
+
+
+def reference_linear_scan(q, k, v, log_decay, *, decay_on: str,
+                          bonus=None, state0=None):
+    """Per-token oracle (slow, exact) used by tests against the chunked form."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    state = jnp.zeros((b, h, dk, dv), jnp.float32) if state0 is None \
+        else state0.astype(jnp.float32)
+    ld = jnp.clip(log_decay.astype(jnp.float32), LOG_DECAY_FLOOR, 0.0)
+
+    def step(state, xs):
+        qt, kt, vt, dt = xs                   # (B,H,*)
+        out, state = linear_scan_decode(qt, kt, vt, dt, state,
+                                        decay_on=decay_on, bonus=bonus)
+        return state, out
+
+    xs = tuple(x.swapaxes(0, 1) for x in
+               (q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), ld))
+    state, outs = jax.lax.scan(step, state, xs)
+    return outs.swapaxes(0, 1).astype(q.dtype), state

@@ -1,0 +1,229 @@
+"""The paper's own three models, reproduced exactly.
+
+* VGG16-CIFAR  (Table 1): 13 conv (+BN) + 1 dense = 14 trainable layers,
+  **14,736,714 parameters exactly** (conv/dense weights+biases plus 4
+  parameters per BN channel — keras counts the moving statistics).
+* IMDB sentiment CNN-LSTM (Table 2): embedding(20000,128) -> conv1d(k5,
+  f64) -> maxpool(4) -> LSTM(70) -> dense(2).
+* CASA HAR LSTM: LSTM(100) + 4 dense + softmax(10) — 6 trainable layers,
+  ~68.9k params (paper: 68,884).
+
+These are the models the federated experiments (benchmarks/fig2, fig5,
+table3/4/5) actually train; each conv/dense/LSTM layer is one freeze
+unit, matching the paper's layer counting (the VGG16 BN belongs to its
+conv's unit).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+# (name, out_channels) per VGG16 stage; pools after each stage
+VGG_STAGES: Tuple[Tuple[int, int], ...] = (
+    (2, 64), (2, 128), (3, 256), (3, 512), (3, 512))
+
+
+def _conv_init(key, cin, cout, dtype, k=3):
+    s = 1.0 / math.sqrt(k * k * cin)
+    return {
+        "w": (jax.random.normal(key, (k, k, cin, cout)) * s).astype(dtype),
+        "b": jnp.zeros((cout,), dtype),
+        # BN: gamma, beta trainable; moving stats counted but frozen
+        "bn_g": jnp.ones((cout,), dtype), "bn_b": jnp.zeros((cout,), dtype),
+        "bn_mu": jnp.zeros((cout,), dtype), "bn_var": jnp.ones((cout,), dtype),
+    }
+
+
+def init_vgg16(key, num_classes: int = 10, dtype=jnp.float32,
+               width_mult: float = 1.0):
+    """width_mult=0.5 is the paper's Jetson-Nano 'lighter' variant."""
+    params: Dict[str, Any] = {}
+    cin = 3
+    idx = 0
+    keys = jax.random.split(key, 14)
+    for n_convs, cout in VGG_STAGES:
+        cout = max(8, int(cout * width_mult))
+        for _ in range(n_convs):
+            params[f"conv{idx}"] = _conv_init(keys[idx], cin, cout, dtype)
+            cin = cout
+            idx += 1
+    params["dense0"] = {
+        "w": (jax.random.normal(keys[13], (cin, num_classes)) *
+              (1.0 / math.sqrt(cin))).astype(dtype),
+        "b": jnp.zeros((num_classes,), dtype),
+    }
+    return params
+
+
+def _bn(p, x, eps=1e-3):
+    # batch-statistics BN (stateless): without live normalization the
+    # 13-conv stack's activations collapse and nothing trains.  The
+    # moving-stat leaves stay in the param tree for the paper-exact
+    # 14,736,714 count (keras counts them) but are not consulted.
+    mu = x.mean(axis=(0, 1, 2))
+    var = x.var(axis=(0, 1, 2))
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mu) * inv * p["bn_g"] + p["bn_b"]
+
+
+def vgg16_apply(params, images):
+    """images (B, 32, 32, 3) -> logits (B, num_classes)."""
+    x = images
+    idx = 0
+    for n_convs, _ in VGG_STAGES:
+        for _ in range(n_convs):
+            p = params[f"conv{idx}"]
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(_bn(p, x + p["b"]))
+            idx += 1
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.mean(axis=(1, 2))                          # global average pool
+    p = params["dense0"]
+    return x @ p["w"] + p["b"]
+
+
+def vgg16_units(params) -> List[str]:
+    """Freeze units in forward order: conv0..conv12, dense0 (14 units)."""
+    return [k for k in sorted(params, key=_unit_order)]
+
+
+def _unit_order(k: str) -> Tuple[int, int]:
+    if k.startswith("conv"):
+        return (0, int(k[4:]))
+    return (1, 0)
+
+
+# ---------------------------------------------------------------------------
+# LSTM cell (shared by the IMDB and CASA models)
+# ---------------------------------------------------------------------------
+
+def _lstm_init(key, d_in, d_h, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": (jax.random.normal(k1, (d_in, 4 * d_h)) *
+               (1.0 / math.sqrt(d_in))).astype(dtype),
+        "wh": (jax.random.normal(k2, (d_h, 4 * d_h)) *
+               (1.0 / math.sqrt(d_h))).astype(dtype),
+        "b": jnp.zeros((4 * d_h,), dtype),
+    }
+
+
+def lstm_apply(p, x):
+    """x (B, S, d_in) -> last hidden state (B, d_h)."""
+    d_h = p["wh"].shape[0]
+    b = x.shape[0]
+
+    def step(carry, xt):
+        h, c = carry
+        z = xt @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    init = (jnp.zeros((b, d_h), x.dtype), jnp.zeros((b, d_h), x.dtype))
+    (h, _), _ = jax.lax.scan(step, init, x.swapaxes(0, 1))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# IMDB sentiment CNN-LSTM (Table 2)
+# ---------------------------------------------------------------------------
+
+IMDB_VOCAB, IMDB_MAXLEN, IMDB_EMBED = 20000, 100, 128
+
+
+def init_imdb(key, dtype=jnp.float32, vocab: int = IMDB_VOCAB):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed_small": {"table": (jax.random.normal(ks[0], (vocab, IMDB_EMBED))
+                                  * 0.05).astype(dtype)},
+        "conv0": {"w": (jax.random.normal(ks[1], (5, IMDB_EMBED, 64)) *
+                        (1.0 / math.sqrt(5 * IMDB_EMBED))).astype(dtype),
+                  "b": jnp.zeros((64,), dtype)},
+        "lstm0": _lstm_init(ks[2], 64, 70, dtype),
+        "dense0": {"w": (jax.random.normal(ks[3], (70, 2)) *
+                         (1.0 / math.sqrt(70))).astype(dtype),
+                   "b": jnp.zeros((2,), dtype)},
+    }
+
+
+def imdb_apply(params, tokens):
+    """tokens (B, 100) int -> logits (B, 2)."""
+    x = jnp.take(params["embed_small"]["table"], tokens, axis=0)
+    p = params["conv0"]
+    x = jax.lax.conv_general_dilated(
+        x, p["w"], (1,), "SAME", dimension_numbers=("NWC", "WIO", "NWC"))
+    x = jax.nn.relu(x + p["b"])
+    b, s, c = x.shape
+    x = x[:, : (s // 4) * 4].reshape(b, s // 4, 4, c).max(axis=2)  # pool 4
+    h = lstm_apply(params["lstm0"], x)
+    p = params["dense0"]
+    return h @ p["w"] + p["b"]
+
+
+def imdb_units(params) -> List[str]:
+    return ["embed_small", "conv0", "lstm0", "dense0"]
+
+
+# ---------------------------------------------------------------------------
+# CASA HAR LSTM (6 trainable layers, ~68.9k params)
+# ---------------------------------------------------------------------------
+
+CASA_FEATURES, CASA_SEQ, CASA_CLASSES = 36, 100, 10
+_CASA_DENSE = (96, 32, 24, 16)
+
+
+def init_casa(key, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    params: Dict[str, Any] = {"lstm0": _lstm_init(ks[0], CASA_FEATURES, 100,
+                                                  dtype)}
+    d_in = 100
+    for i, d in enumerate(_CASA_DENSE):
+        params[f"dense{i}"] = {
+            "w": (jax.random.normal(ks[i + 1], (d_in, d)) *
+                  (1.0 / math.sqrt(d_in))).astype(dtype),
+            "b": jnp.zeros((d,), dtype)}
+        d_in = d
+    params["dense4"] = {
+        "w": (jax.random.normal(ks[5], (d_in, CASA_CLASSES)) *
+              (1.0 / math.sqrt(d_in))).astype(dtype),
+        "b": jnp.zeros((CASA_CLASSES,), dtype)}
+    return params
+
+
+def casa_apply(params, x):
+    """x (B, 100, 36) float -> logits (B, 10)."""
+    h = lstm_apply(params["lstm0"], x)
+    for i in range(len(_CASA_DENSE)):
+        p = params[f"dense{i}"]
+        h = jax.nn.relu(h @ p["w"] + p["b"])
+    p = params["dense4"]
+    return h @ p["w"] + p["b"]
+
+
+def casa_units(params) -> List[str]:
+    return ["lstm0", "dense0", "dense1", "dense2", "dense3", "dense4"]
+
+
+# ---------------------------------------------------------------------------
+# classification loss / accuracy shared by the paper tasks
+# ---------------------------------------------------------------------------
+
+def xent_loss(logits, labels):
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                             labels[:, None], axis=-1)[:, 0]
+    return (logz - ll).mean()
+
+
+def accuracy(logits, labels):
+    return (logits.argmax(-1) == labels).mean()

@@ -1,0 +1,231 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free RNN LM.
+
+Data-dependent per-channel decay via a LoRA on the shifted input (the
+paper's headline mechanism) drives the WKV state recurrence implemented
+by ``linear_scan.chunked_linear_scan`` (Pallas TPU variant:
+``kernels/rwkv6_scan``).  Token-shift interpolation uses static per-
+projection mu vectors (RWKV-5 style; the full DDLerp LoRA on all five
+projections is orthogonal to the recurrence and omitted — DESIGN.md §7).
+
+Decode state is O(1) in sequence length: per layer the last input token
+(for the shifts) plus the (H, dk, dv) WKV state — this is why rwkv6-3b
+is a long_500k architecture.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .linear_scan import chunked_linear_scan, linear_scan_decode
+
+DECAY_LORA = 64
+
+
+def _init_block(cfg, key, dtype):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ff = cfg.d_ff
+    ks = jax.random.split(key, 10)
+    s = 1.0 / math.sqrt(d)
+    wkv = {
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "wr": (jax.random.normal(ks[0], (d, h, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, h, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, h, hd)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[3], (d, h, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[4], (h, hd, d)) *
+               (1.0 / math.sqrt(h * hd))).astype(dtype),
+        # data-dependent decay: log_w = -exp(base + tanh(x w1) w2)
+        "decay_base": jnp.zeros((h, hd), dtype),
+        "decay_w1": (jax.random.normal(ks[5], (d, DECAY_LORA)) * s).astype(dtype),
+        "decay_w2": (jax.random.normal(ks[6], (DECAY_LORA, h, hd)) *
+                     (1.0 / math.sqrt(DECAY_LORA))).astype(dtype),
+        "u": jnp.zeros((h, hd), dtype),
+        "ln_w": jnp.ones((h, hd), dtype),     # per-head groupnorm on wkv out
+        "ln_b": jnp.zeros((h, hd), dtype),
+    }
+    cmix = {
+        "mu_k": jnp.full((d,), 0.5, dtype), "mu_r": jnp.full((d,), 0.5, dtype),
+        "wr": (jax.random.normal(ks[7], (d, d)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[8], (d, ff)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[9], (ff, d)) *
+               (1.0 / math.sqrt(ff))).astype(dtype),
+    }
+    return {"ln1": L.init_norm(cfg.norm, d, dtype), "wkv": wkv,
+            "ln2": L.init_norm(cfg.norm, d, dtype), "cmix": cmix}
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = {"sub0": jax.vmap(lambda k: _init_block(cfg, k, dtype))(keys)}
+    params = {
+        "embed": L.init_embed(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab),
+                                            dtype)}
+    return params
+
+
+def _head_groupnorm(p, o, eps=64e-5):
+    of = o.astype(jnp.float32)
+    mu = of.mean(-1, keepdims=True)
+    var = ((of - mu) ** 2).mean(-1, keepdims=True)
+    y = (of - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["ln_w"].astype(jnp.float32) +
+            p["ln_b"].astype(jnp.float32)).astype(o.dtype)
+
+
+def _shift(x, x_last=None):
+    """x (B,S,d) -> previous token per position (zeros / carry at t=0)."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_last is not None:
+        prev = prev.at[:, 0].set(x_last)
+    return prev
+
+
+def _time_mix_seq(cfg, p, x, state0=None, x_last=None, chunk=16):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    prev = _shift(x, x_last)
+    def lerp(mu):
+        return x + (prev - x) * mu
+    r = jnp.einsum("bsd,dhk->bshk", lerp(p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,dhk->bshk", lerp(p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", lerp(p["mu_v"]), p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", lerp(p["mu_g"]), p["wg"]))
+    lora = jnp.tanh(lerp(p["mu_w"]) @ p["decay_w1"])
+    log_w = -jnp.exp(p["decay_base"].astype(jnp.float32) +
+                     jnp.einsum("bsl,lhk->bshk", lora,
+                                p["decay_w2"]).astype(jnp.float32))
+    o, state = chunked_linear_scan(r, k, v, log_w, decay_on="k",
+                                   bonus=p["u"], state0=state0, chunk=chunk)
+    o = _head_groupnorm(p, o) * g
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), state
+
+
+def _channel_mix(p, x, x_last=None):
+    prev = _shift(x, x_last)
+    xk = x + (prev - x) * p["mu_k"]
+    xr = x + (prev - x) * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+
+
+def forward(cfg, params, tokens, *, chunk: int = 16, remat: bool = False,
+            unroll: bool = False, **_):
+    x = L.embed_tokens(params["embed"], tokens)
+
+    def body(x, blk):
+        p = blk["sub0"]
+        h = L.apply_norm(p["ln1"], x)
+        tm, _ = _time_mix_seq(cfg, p["wkv"], h, chunk=chunk)
+        x = x + tm
+        h = L.apply_norm(p["ln2"], x)
+        x = x + _channel_mix(p["cmix"], h)
+        return x, jnp.zeros((), jnp.float32)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, aux = jax.lax.scan(body, x, params["blocks"],
+                          unroll=cfg.n_layers if unroll else 1)
+    x = L.apply_norm(params["final_norm"], x)
+    return L.logits_head(params, x, cfg.tie_embeddings), aux.sum(), None
+
+
+def loss_fn(cfg, params, batch, **kw):
+    logits, aux, _ = forward(cfg, params, batch["tokens"],
+                             chunk=kw.get("chunk", 16),
+                             remat=kw.get("remat", False),
+                             unroll=kw.get("unroll", False))
+    loss = L.softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# O(1) decode state
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int = 0, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    nm, d, h, hd = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.head_dim
+    sub = {
+        "x_tmix": jnp.zeros((nm, batch_size, d), dtype),
+        "x_cmix": jnp.zeros((nm, batch_size, d), dtype),
+        "wkv": jnp.zeros((nm, batch_size, h, hd, hd), jnp.float32),
+    }
+    return {"step": jnp.zeros((), jnp.int32), "subs": {"sub0": sub}}
+
+
+def prefill(cfg, params, tokens, *, max_len: int = 0, chunk: int = 16,
+            last_only: bool = False, unroll: bool = False, **_):
+    x = L.embed_tokens(params["embed"], tokens)
+
+    def body(x, blk):
+        p = blk["sub0"]
+        h = L.apply_norm(p["ln1"], x)
+        tm, state = _time_mix_seq(cfg, p["wkv"], h, chunk=chunk)
+        x_tmix = h[:, -1]
+        x = x + tm
+        h2 = L.apply_norm(p["ln2"], x)
+        x = x + _channel_mix(p["cmix"], h2)
+        return x, {"x_tmix": x_tmix, "x_cmix": h2[:, -1], "wkv": state}
+
+    x, sub = jax.lax.scan(body, x, params["blocks"],
+                          unroll=cfg.n_layers if unroll else 1)
+    if last_only:
+        x = x[:, -1:]
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x, cfg.tie_embeddings)
+    cache = {"step": jnp.asarray(tokens.shape[1], jnp.int32),
+             "subs": {"sub0": sub}}
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, token, *, unroll: bool = False):
+    x = L.embed_tokens(params["embed"], token)[:, 0]     # (B,d)
+
+    def body(x, xs):
+        blk, c = xs
+        p = blk["sub0"]
+        cc = c["sub0"]
+        h = L.apply_norm(p["ln1"], x)
+        w = p["wkv"]
+        prev = cc["x_tmix"]
+        def lerp(mu):
+            return h + (prev - h) * mu
+        r = jnp.einsum("bd,dhk->bhk", lerp(w["mu_r"]), w["wr"])
+        k = jnp.einsum("bd,dhk->bhk", lerp(w["mu_k"]), w["wk"])
+        v = jnp.einsum("bd,dhk->bhk", lerp(w["mu_v"]), w["wv"])
+        g = jax.nn.silu(jnp.einsum("bd,dhk->bhk", lerp(w["mu_g"]), w["wg"]))
+        lora = jnp.tanh(lerp(w["mu_w"]) @ w["decay_w1"])
+        log_w = -jnp.exp(w["decay_base"].astype(jnp.float32) +
+                         jnp.einsum("bl,lhk->bhk", lora,
+                                    w["decay_w2"]).astype(jnp.float32))
+        o, wkv = linear_scan_decode(r, k, v, log_w, cc["wkv"],
+                                    decay_on="k", bonus=w["u"])
+        o = _head_groupnorm(w, o) * g
+        x = x + jnp.einsum("bhk,hkd->bd", o, w["wo"])
+        h2 = L.apply_norm(p["ln2"], x)
+        cm = p["cmix"]
+        prev2 = cc["x_cmix"]
+        xk = h2 + (prev2 - h2) * cm["mu_k"]
+        xr = h2 + (prev2 - h2) * cm["mu_r"]
+        kk = jnp.square(jax.nn.relu(xk @ cm["wk"]))
+        x = x + jax.nn.sigmoid(xr @ cm["wr"]) * (kk @ cm["wv"])
+        return x, {"sub0": {"x_tmix": h, "x_cmix": h2, "wkv": wkv}}
+
+    x, subs = jax.lax.scan(body, x, (params["blocks"], cache["subs"]),
+                           unroll=cfg.n_layers if unroll else 1)
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x[:, None], cfg.tie_embeddings)
+    return logits, {"step": cache["step"] + 1, "subs": subs}

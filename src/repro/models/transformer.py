@@ -1,0 +1,308 @@
+"""Decoder-only transformer covering the dense / MoE / VLM families.
+
+Architectures are expressed as a repeated **macro-block** scanned with
+``lax.scan``: the macro is the smallest statically-heterogeneous repeat
+unit (gemma3: 5 sliding-window layers + 1 global = macro of 6; llama4:
+dense block + MoE block = macro of 2; plain dense: macro of 1).  Block
+params are stacked along the leading macro dim so the HLO stays compact
+for 48-layer configs and freeze-unit masks broadcast per layer
+(core/masking.py).
+
+Covers: stablelm-3b, qwen2.5-14b, qwen3-1.7b, gemma3-12b,
+llama4-maverick-400b-a17b, granite-moe-1b-a400m, internvl2-26b (VLM:
+patch embeddings from the stub frontend are projected and prepended).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as M
+from .attention import (attend, cache_token_update, decode_attend,
+                        decode_attend_ring)
+
+
+@dataclasses.dataclass(frozen=True)
+class SubSpec:
+    window: int      # 0 = full causal attention
+    moe: bool        # MoE MLP instead of dense MLP
+
+
+def block_layout(cfg) -> Tuple[SubSpec, ...]:
+    if cfg.moe is not None and cfg.moe.interleave > 1:
+        macro = cfg.moe.interleave
+        # dense blocks first, the MoE block closes the macro (llama4 style)
+        return tuple(SubSpec(window=cfg.sliding_window if cfg.global_every else 0,
+                             moe=(i == macro - 1)) for i in range(macro))
+    if cfg.global_every:
+        macro = cfg.global_every
+        # L ... L G — the last layer of each macro is global
+        return tuple(SubSpec(window=0 if i == macro - 1 else cfg.sliding_window,
+                             moe=cfg.moe is not None) for i in range(macro))
+    if cfg.sliding_window:
+        return (SubSpec(window=cfg.sliding_window, moe=cfg.moe is not None),)
+    return (SubSpec(window=0, moe=cfg.moe is not None),)
+
+
+def n_macro(cfg) -> int:
+    macro = len(block_layout(cfg))
+    if cfg.n_layers % macro:
+        raise ValueError(f"{cfg.name}: n_layers {cfg.n_layers} % macro {macro}")
+    return cfg.n_layers // macro
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_sub(cfg, key, spec: SubSpec, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if spec.moe:
+        p["moe"] = M.init_moe(ks[1], cfg.d_model, cfg.moe, dtype)
+        if cfg.moe.shared_d_ff:
+            p["shared"] = L.init_mlp(ks[2], cfg.d_model, cfg.moe.shared_d_ff,
+                                     dtype, glu=cfg.glu)
+    else:
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype, glu=cfg.glu)
+    return p
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    layout = block_layout(cfg)
+    nm = n_macro(cfg)
+    k_embed, k_blocks, k_head, k_proj = jax.random.split(key, 4)
+
+    blocks = {}
+    for si, spec in enumerate(layout):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, si), nm)
+        blocks[f"sub{si}"] = jax.vmap(
+            lambda k: _init_sub(cfg, k, spec, dtype))(keys)
+
+    params: Dict[str, Any] = {
+        "embed": L.init_embed(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab),
+                                            dtype)}
+    if cfg.n_patches:  # VLM projector: stub ViT feature width -> d_model
+        params["projector"] = {
+            "w": L.dense_init(k_proj, (vit_width(cfg), cfg.d_model), dtype),
+            "b": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def vit_width(cfg) -> int:
+    """Feature width fed by the stub vision frontend (DESIGN.md §7)."""
+    return min(1024, cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_sub(cfg, p, spec: SubSpec, x, positions, rope, attn_impl,
+               q_chunk: int, moe_mesh=None):
+    h = L.apply_norm(p["ln1"], x)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, positions, rope)
+    o = attend(q, k, v, impl=attn_impl, causal=True, window=spec.window,
+               q_chunk=q_chunk)
+    x = x + L.out_project(p["attn"], o)
+    h = L.apply_norm(p["ln2"], x)
+    if spec.moe:
+        if moe_mesh is not None:   # explicit TP dispatch (shard_map)
+            y, aux = M.apply_moe_sharded(p["moe"], h, cfg.moe, act=cfg.act,
+                                         mesh=moe_mesh)
+        else:
+            y, aux = M.apply_moe(p["moe"], h, cfg.moe, act=cfg.act)
+        if "shared" in p:
+            y = y + L.apply_mlp(p["shared"], h, cfg.act)
+    else:
+        y, aux = L.apply_mlp(p["mlp"], h, cfg.act), jnp.zeros((), jnp.float32)
+    return x + y, aux, (k, v)
+
+
+def _embed_inputs(cfg, params, tokens, patches):
+    x = L.embed_tokens(params["embed"], tokens)
+    if cfg.n_patches:
+        if patches is None:
+            raise ValueError(f"{cfg.name} requires patch embeddings")
+        px = patches @ params["projector"]["w"] + params["projector"]["b"]
+        x = jnp.concatenate([px.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(cfg, params, tokens, *, patches=None, attn_impl="chunked",
+            q_chunk: int = 1024, build_cache: bool = False,
+            cache_len: int = 0, remat: bool = False,
+            last_only: bool = False, unroll: bool = False, moe_mesh=None):
+    """tokens (B, S_text) [+ patches (B, n_patches, vit_width)] -> logits.
+
+    Returns (logits (B,S,V), aux_loss, cache_or_None).
+    ``remat=True`` checkpoints each macro-block (activation recompute in
+    the backward scan — the standard memory/compute trade).
+    """
+    layout = block_layout(cfg)
+    rope = L.rope_freqs(cfg.head_dim, cfg.rope_pct, cfg.rope_theta)
+    x = _embed_inputs(cfg, params, tokens, patches)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, blk):
+        x = carry
+        auxes = []
+        cache_out = {}
+        for si, spec in enumerate(layout):
+            x, aux, (k, v) = _apply_sub(cfg, blk[f"sub{si}"], spec, x,
+                                        positions, rope, attn_impl, q_chunk,
+                                        moe_mesh=moe_mesh)
+            auxes.append(aux)
+            if build_cache:
+                cache_out[f"sub{si}"] = _cache_from_prefill(
+                    spec, k, v, s, cache_len)
+        return x, (jnp.stack(auxes).sum(), cache_out if build_cache else 0)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (auxes, caches) = jax.lax.scan(body, x, params["blocks"],
+                                      unroll=n_macro(cfg) if unroll else 1)
+    if last_only:
+        x = x[:, -1:]
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x, cfg.tie_embeddings)
+    cache = None
+    if build_cache:
+        cache = {"step": jnp.asarray(s, jnp.int32), "subs": caches}
+    return logits, auxes.sum(), cache
+
+
+def loss_fn(cfg, params, batch, *, attn_impl="chunked", q_chunk: int = 1024,
+            remat: bool = False, unroll: bool = False, moe_mesh=None):
+    logits, aux, _ = forward(cfg, params, batch["tokens"],
+                             patches=batch.get("patches"),
+                             attn_impl=attn_impl, q_chunk=q_chunk,
+                             remat=remat, unroll=unroll, moe_mesh=moe_mesh)
+    labels = batch["labels"]
+    if cfg.n_patches:  # loss only on text positions
+        logits = logits[:, cfg.n_patches:]
+    loss = L.softmax_xent(logits, labels, batch.get("loss_mask"))
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def cache_alloc(cfg, spec: SubSpec, max_len: int) -> int:
+    return min(spec.window, max_len) if spec.window > 0 else max_len
+
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    layout = block_layout(cfg)
+    nm = n_macro(cfg)
+    subs = {}
+    for si, spec in enumerate(layout):
+        a = cache_alloc(cfg, spec, max_len)
+        subs[f"sub{si}"] = {
+            "k": jnp.zeros((nm, batch_size, a, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((nm, batch_size, a, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+        }
+    return {"step": jnp.zeros((), jnp.int32), "subs": subs}
+
+
+def _cache_from_prefill(spec: SubSpec, k, v, s: int, cache_len: int):
+    """Build a cache slab from prefill K/V (B,S,Hkv,hd)."""
+    a = min(spec.window, cache_len) if spec.window > 0 else cache_len
+    b, _, hkv, hd = k.shape
+    if spec.window > 0 and s >= a:
+        # ring layout: ring[(s + j) % a] = kv[s - a + j]
+        slots = (s + jnp.arange(a)) % a
+        kr = jnp.zeros((b, a, hkv, hd), k.dtype).at[:, slots].set(k[:, s - a:])
+        vr = jnp.zeros((b, a, hkv, hd), v.dtype).at[:, slots].set(v[:, s - a:])
+        return {"k": kr, "v": vr}
+    pad = a - s
+    if pad < 0:
+        raise ValueError(f"cache_len {cache_len} < prefill len {s}")
+    kr = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vr = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return {"k": kr, "v": vr}
+
+
+def prefill(cfg, params, tokens, *, patches=None, max_len: int,
+            attn_impl="chunked", q_chunk: int = 1024,
+            last_only: bool = False, unroll: bool = False, **_):
+    logits, aux, cache = forward(cfg, params, tokens, patches=patches,
+                                 attn_impl=attn_impl, q_chunk=q_chunk,
+                                 build_cache=True, cache_len=max_len,
+                                 last_only=last_only, unroll=unroll)
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, token, *, unroll: bool = False):
+    """One decode step.  token (B, 1) int32; cache from init_cache/prefill.
+
+    Writes K/V at position ``cache['step']`` and attends over everything
+    written so far (ring semantics for sliding-window layers).
+    """
+    layout = block_layout(cfg)
+    rope = L.rope_freqs(cfg.head_dim, cfg.rope_pct, cfg.rope_theta)
+    step = cache["step"]
+    x = L.embed_tokens(params["embed"], token)          # (B,1,d)
+    b = x.shape[0]
+    # cache['step'] counts every cached position (incl. VLM patches)
+    positions = jnp.broadcast_to(step, (b, 1))
+
+    def body(carry, xs):
+        x = carry
+        blk, csubs = xs
+        new_csubs = {}
+        for si, spec in enumerate(layout):
+            p = blk[f"sub{si}"]
+            c = csubs[f"sub{si}"]
+            h = L.apply_norm(p["ln1"], x)
+            q, k, v = L.qkv_project(p["attn"], h, cfg, positions, rope)
+            a = c["k"].shape[1]
+            if spec.window > 0:
+                slot = step % a
+                kc = cache_token_update(c["k"], k, slot)
+                vc = cache_token_update(c["v"], v, slot)
+                o = decode_attend_ring(
+                    q, kc, vc, jnp.broadcast_to(step + 1, (b,)), window=a)
+            else:
+                kc = cache_token_update(c["k"], k, step)
+                vc = cache_token_update(c["v"], v, step)
+                o = decode_attend(q, kc, vc,
+                                  jnp.broadcast_to(step + 1, (b,)))
+            x = x + L.out_project(p["attn"], o)
+            h = L.apply_norm(p["ln2"], x)
+            if spec.moe:
+                y, _ = M.apply_moe(p["moe"], h, cfg.moe, act=cfg.act)
+                if "shared" in p:
+                    y = y + L.apply_mlp(p["shared"], h, cfg.act)
+            else:
+                y = L.apply_mlp(p["mlp"], h, cfg.act)
+            x = x + y
+            new_csubs[f"sub{si}"] = {"k": kc, "v": vc}
+        return x, new_csubs
+
+    x, new_subs = jax.lax.scan(body, x, (params["blocks"], cache["subs"]),
+                               unroll=n_macro(cfg) if unroll else 1)
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x, cfg.tie_embeddings)
+    return logits, {"step": step + 1, "subs": new_subs}

@@ -1,0 +1,221 @@
+"""Whisper-medium (arXiv:2212.04356) — encoder-decoder transformer.
+
+The mel-spectrogram + conv1d frontend is STUBBED per the assignment
+carve-out: ``batch["frames"]`` carries precomputed frame embeddings
+(B, enc_seq, d_model).  Encoder: non-causal self-attention blocks over
+the frames.  Decoder: causal self-attention + cross-attention + 2-matrix
+GELU MLP, LayerNorm, learned absolute positions, tied embeddings.
+
+Decode shapes beyond whisper's native 448-token decoder context clip the
+learned-position lookup (shape-faithful to the assignment's mandated
+input shapes; DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .attention import attend, cache_token_update, decode_attend
+
+
+def _init_enc_block(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype, glu=cfg.glu,
+                          bias=True),
+    }
+
+
+def _init_dec_block(cfg, key, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "lnx": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "xattn": L.init_attention(ks[1], cfg, dtype, cross=True),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype, glu=cfg.glu,
+                          bias=True),
+    }
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    k_embed, k_enc, k_dec, k_pos = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    params = {
+        "embed": L.init_embed(k_embed, cfg.padded_vocab, cfg.d_model, dtype,
+                              max_position=cfg.max_position),
+        "enc_embed": {"pos": (jax.random.normal(k_pos, (cfg.enc_seq,
+                                                        cfg.d_model))
+                              * 0.02).astype(dtype)},
+        "enc_blocks": {"sub0": jax.vmap(
+            lambda k: _init_enc_block(cfg, k, dtype))(enc_keys)},
+        "blocks": {"sub0": jax.vmap(
+            lambda k: _init_dec_block(cfg, k, dtype))(dec_keys)},
+        "enc_final_norm": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    return params  # head is tied
+
+
+def encode(cfg, params, frames, *, attn_impl="chunked", q_chunk=512,
+           unroll: bool = False):
+    x = frames + params["enc_embed"]["pos"][None, : frames.shape[1]]
+
+    def body(x, blk):
+        p = blk["sub0"]
+        h = L.apply_norm(p["ln1"], x)
+        q, k, v = L.qkv_project(p["attn"], h, cfg, positions=jnp.zeros(
+            x.shape[:2], jnp.int32), rope=(None, 0))
+        o = attend(q, k, v, impl=attn_impl, causal=False, q_chunk=q_chunk)
+        x = x + L.out_project(p["attn"], o)
+        h = L.apply_norm(p["ln2"], x)
+        return x + L.apply_mlp(p["mlp"], h, cfg.act), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                        unroll=cfg.n_enc_layers if unroll else 1)
+    return L.apply_norm(params["enc_final_norm"], x)
+
+
+def _dec_positions(params, positions):
+    table = params["embed"]["pos"]
+    return jnp.take(table, jnp.clip(positions, 0, table.shape[0] - 1), axis=0)
+
+
+def forward(cfg, params, tokens, *, frames, attn_impl="chunked",
+            q_chunk=1024, remat: bool = False, unroll: bool = False, **_):
+    enc = encode(cfg, params, frames, attn_impl=attn_impl, unroll=unroll)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = L.embed_tokens(params["embed"], tokens) + _dec_positions(
+        params, positions)
+
+    def body(x, blk):
+        p = blk["sub0"]
+        h = L.apply_norm(p["ln1"], x)
+        q, k, v = L.qkv_project(p["attn"], h, cfg, positions, rope=(None, 0))
+        o = attend(q, k, v, impl=attn_impl, causal=True, q_chunk=q_chunk)
+        x = x + L.out_project(p["attn"], o)
+        h = L.apply_norm(p["lnx"], x)
+        q2, _, _ = L.qkv_project(p["xattn"], h, cfg,
+                                 positions=positions, rope=(None, 0))
+        ek = jnp.einsum("bsd,dhk->bshk", enc, p["xattn"]["wk"])
+        ev = jnp.einsum("bsd,dhk->bshk", enc, p["xattn"]["wv"])
+        o2 = attend(q2, ek, ev, impl=attn_impl, causal=False, q_chunk=q_chunk)
+        x = x + L.out_project(p["xattn"], o2)
+        h = L.apply_norm(p["ln2"], x)
+        return x + L.apply_mlp(p["mlp"], h, cfg.act), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["blocks"],
+                        unroll=cfg.n_layers if unroll else 1)
+    x = L.apply_norm(params["final_norm"], x)
+    return L.logits_head(params, x, tie=True), jnp.zeros((), jnp.float32), None
+
+
+def loss_fn(cfg, params, batch, *, attn_impl="chunked", q_chunk=1024,
+            remat: bool = False, unroll: bool = False, **_):
+    logits, aux, _ = forward(cfg, params, batch["tokens"],
+                             frames=batch["frames"], attn_impl=attn_impl,
+                             q_chunk=q_chunk, remat=remat, unroll=unroll)
+    loss = L.softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    nm = cfg.n_layers
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    sub = {
+        "k": jnp.zeros((nm, batch_size, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((nm, batch_size, max_len, hkv, hd), dtype),
+        "xk": jnp.zeros((nm, batch_size, cfg.enc_seq, hkv, hd), dtype),
+        "xv": jnp.zeros((nm, batch_size, cfg.enc_seq, hkv, hd), dtype),
+    }
+    return {"step": jnp.zeros((), jnp.int32), "subs": {"sub0": sub}}
+
+
+def prefill(cfg, params, tokens, *, frames, max_len: int,
+            attn_impl="chunked", q_chunk=1024, last_only: bool = False,
+            unroll: bool = False, **_):
+    """Encode + run the decoder prompt, building self- and cross-caches."""
+    enc = encode(cfg, params, frames, attn_impl=attn_impl, unroll=unroll)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = L.embed_tokens(params["embed"], tokens) + _dec_positions(
+        params, positions)
+
+    def body(x, blk):
+        p = blk["sub0"]
+        h = L.apply_norm(p["ln1"], x)
+        q, k, v = L.qkv_project(p["attn"], h, cfg, positions, rope=(None, 0))
+        o = attend(q, k, v, impl=attn_impl, causal=True, q_chunk=q_chunk)
+        x = x + L.out_project(p["attn"], o)
+        h = L.apply_norm(p["lnx"], x)
+        q2, _, _ = L.qkv_project(p["xattn"], h, cfg, positions, rope=(None, 0))
+        ek = jnp.einsum("bsd,dhk->bshk", enc, p["xattn"]["wk"])
+        ev = jnp.einsum("bsd,dhk->bshk", enc, p["xattn"]["wv"])
+        o2 = attend(q2, ek, ev, impl=attn_impl, causal=False, q_chunk=q_chunk)
+        x = x + L.out_project(p["xattn"], o2)
+        h = L.apply_norm(p["ln2"], x)
+        x = x + L.apply_mlp(p["mlp"], h, cfg.act)
+        pad = max_len - s
+        cache = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                 "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                 "xk": ek, "xv": ev}
+        return x, cache
+
+    x, sub = jax.lax.scan(body, x, params["blocks"],
+                          unroll=cfg.n_layers if unroll else 1)
+    if last_only:
+        x = x[:, -1:]
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x, tie=True)
+    return logits, {"step": jnp.asarray(s, jnp.int32), "subs": {"sub0": sub}}
+
+
+def decode_step(cfg, params, cache, token, *, unroll: bool = False):
+    step = cache["step"]
+    b = token.shape[0]
+    positions = jnp.broadcast_to(step, (b, 1))
+    x = L.embed_tokens(params["embed"], token) + _dec_positions(
+        params, positions)
+
+    def body(x, xs):
+        blk, c = xs
+        p = blk["sub0"]
+        cc = c["sub0"]
+        h = L.apply_norm(p["ln1"], x)
+        q, k, v = L.qkv_project(p["attn"], h, cfg, positions, rope=(None, 0))
+        kc = cache_token_update(cc["k"], k, step)
+        vc = cache_token_update(cc["v"], v, step)
+        o = decode_attend(q, kc, vc, jnp.broadcast_to(step + 1, (b,)))
+        x = x + L.out_project(p["attn"], o)
+        h = L.apply_norm(p["lnx"], x)
+        q2, _, _ = L.qkv_project(p["xattn"], h, cfg, positions, rope=(None, 0))
+        o2 = decode_attend(q2, cc["xk"], cc["xv"],
+                           jnp.full((b,), cc["xk"].shape[1], jnp.int32))
+        x = x + L.out_project(p["xattn"], o2)
+        h = L.apply_norm(p["ln2"], x)
+        x = x + L.apply_mlp(p["mlp"], h, cfg.act)
+        return x, {"sub0": {"k": kc, "v": vc, "xk": cc["xk"], "xv": cc["xv"]}}
+
+    x, subs = jax.lax.scan(body, x, (params["blocks"], cache["subs"]),
+                           unroll=cfg.n_layers if unroll else 1)
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x, tie=True)
+    return logits, {"step": step + 1, "subs": subs}

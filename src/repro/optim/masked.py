@@ -1,0 +1,111 @@
+"""Masked optimizers.
+
+The paper's client semantics (Alg. 2): frozen layers receive no gradient
+and are never touched by the optimizer.  ``mask`` is a pytree of 0/1
+floats broadcastable to the params (built by ``core.masking``); a masked
+step leaves both the frozen params AND their optimizer state bit-exact
+(property-tested in tests/test_masking.py).
+
+Clients re-initialize optimizer state every round (the paper trains each
+round from the fresh global model with a fresh ADAM), so ``init`` is
+cheap and called per round inside the compiled round step.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jnp.ndarray
+
+
+def adam_init(params) -> AdamState:
+    z = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+    return AdamState(mu=z, nu=jax.tree_util.tree_map(jnp.copy, z),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def adam_step(grads, state: AdamState, params, *, lr: float = 1e-2,
+              b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+              mask: Optional[PyTree] = None) -> Tuple[PyTree, AdamState]:
+    count = state.count + 1
+    tf = count.astype(jnp.float32)
+    c1 = 1.0 - b1 ** tf
+    c2 = 1.0 - b2 ** tf
+
+    def upd(g, m, v, p, k=None):
+        gf = g.astype(jnp.float32)
+        if k is not None:
+            gf = gf * k
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        step = lr * (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        p_new = (p.astype(jnp.float32) - step).astype(p.dtype)
+        if k is not None:
+            # frozen entries: param and state bit-exact unchanged
+            m_new = jnp.where(k > 0, m_new, m)
+            v_new = jnp.where(k > 0, v_new, v)
+            p_new = jnp.where(k > 0, p_new, p)
+        return p_new, m_new, v_new
+
+    if mask is None:
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+    else:
+        bmask = jax.tree_util.tree_map(
+            lambda p, k: jnp.broadcast_to(
+                jnp.reshape(k, k.shape + (1,) * (p.ndim - k.ndim)), p.shape),
+            params, mask)
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params,
+                                     bmask)
+    p_new = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    return p_new, AdamState(mu=mu, nu=nu, count=count)
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree
+    count: jnp.ndarray
+
+
+def sgd_init(params) -> SGDState:
+    z = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+    return SGDState(momentum=z, count=jnp.zeros((), jnp.int32))
+
+
+def sgd_step(grads, state: SGDState, params, *, lr: float = 1e-2,
+             momentum: float = 0.0, mask: Optional[PyTree] = None):
+    def upd(g, m, p, k=None):
+        gf = g.astype(jnp.float32)
+        if k is not None:
+            gf = gf * k
+        m_new = momentum * m + gf
+        p_new = (p.astype(jnp.float32) - lr * m_new).astype(p.dtype)
+        if k is not None:
+            m_new = jnp.where(k > 0, m_new, m)
+            p_new = jnp.where(k > 0, p_new, p)
+        return p_new, m_new
+
+    if mask is None:
+        out = jax.tree_util.tree_map(upd, grads, state.momentum, params)
+    else:
+        bmask = jax.tree_util.tree_map(
+            lambda p, k: jnp.broadcast_to(
+                jnp.reshape(k, k.shape + (1,) * (p.ndim - k.ndim)), p.shape),
+            params, mask)
+        out = jax.tree_util.tree_map(upd, grads, state.momentum, params, bmask)
+    p_new = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree_util.tree_map(lambda t: t[1], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+    return p_new, SGDState(momentum=m, count=state.count + 1)

@@ -1,0 +1,91 @@
+"""FedAvg / participation-weighted masked FedAvg math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_cfg
+from repro.core.aggregation import fedavg, masked_fedavg
+from repro.core.masking import build_units_zoo, build_units_flat
+from repro.common import flatten_with_paths
+from repro.models import get_model
+
+
+def _stack_deltas(p, c, key):
+    return jax.tree_util.tree_map(
+        lambda x: jax.random.normal(
+            jax.random.fold_in(key, abs(hash(str(x.shape))) % 10_000),
+            (c,) + x.shape) * 0.1, p)
+
+
+def test_fedavg_weighted_mean(rng):
+    p = {"a": jnp.zeros((3,)), "b": {"c": jnp.ones((2, 2))}}
+    deltas = {"a": jnp.stack([jnp.ones(3), 3 * jnp.ones(3)]),
+              "b": {"c": jnp.stack([jnp.zeros((2, 2)), jnp.ones((2, 2))])}}
+    w = jnp.asarray([1.0, 3.0])
+    out = fedavg(p, deltas, w)
+    np.testing.assert_allclose(out["a"], 2.5 * np.ones(3), rtol=1e-6)
+    np.testing.assert_allclose(out["b"]["c"], 1 + 0.75 * np.ones((2, 2)),
+                               rtol=1e-6)
+
+
+def test_masked_fedavg_reduces_to_fedavg_when_all_selected(rng):
+    cfg = reduced_cfg("qwen3-1.7b")
+    m = get_model(cfg)
+    p = m.init_params(rng)
+    a = build_units_zoo(cfg, p)
+    c = 3
+    deltas = _stack_deltas(p, c, rng)
+    w = jnp.asarray([1.0, 2.0, 3.0])
+    sel = jnp.ones((c, a.n_units))
+    got = masked_fedavg(p, deltas, sel, w, a)
+    want = fedavg(p, deltas, w)
+    for (path, x), (_, y) in zip(flatten_with_paths(got),
+                                 flatten_with_paths(want)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5,
+                                   err_msg=path)
+
+
+def test_masked_fedavg_untrained_units_keep_global(rng):
+    cfg = reduced_cfg("qwen3-1.7b")
+    m = get_model(cfg)
+    p = m.init_params(rng)
+    a = build_units_zoo(cfg, p)
+    c = 4
+    deltas = _stack_deltas(p, c, rng)
+    sel = jnp.ones((c, a.n_units)).at[:, 1].set(0.0)  # nobody trains unit 1
+    out = masked_fedavg(p, deltas, sel, jnp.ones(c), a)
+    # layer0 is unit 1 -> its stacked index 0 must be identical to global
+    for key in ("ln1", "attn", "ln2", "mlp"):
+        got = jax.tree_util.tree_leaves(out["blocks"]["sub0"][key])
+        ref = jax.tree_util.tree_leaves(p["blocks"]["sub0"][key])
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g[0]), np.asarray(r[0]))
+            # other layers (trained) moved
+            assert not np.allclose(np.asarray(g[1]), np.asarray(r[1]))
+
+
+def test_masked_fedavg_single_participant_unit(rng):
+    """A unit trained by exactly one client takes that client's full delta."""
+    cfg = reduced_cfg("qwen3-1.7b")
+    m = get_model(cfg)
+    p = m.init_params(rng)
+    a = build_units_zoo(cfg, p)
+    c = 3
+    deltas = _stack_deltas(p, c, rng)
+    sel = jnp.zeros((c, a.n_units)).at[1, 0].set(1.0)  # only client1, unit0
+    out = masked_fedavg(p, deltas, sel, jnp.asarray([5., 7., 9.]), a)
+    got = np.asarray(out["embed"]["table"])
+    want = np.asarray(p["embed"]["table"]) + np.asarray(
+        deltas["embed"]["table"][1])
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
+def test_weights_zero_client_excluded(rng):
+    """Dropout/straggler: weight-0 clients contribute nothing."""
+    p = {"a": jnp.zeros((4,))}
+    a = build_units_flat(p, ["a"])
+    deltas = {"a": jnp.stack([jnp.ones(4) * 100, jnp.ones(4)])}
+    sel = jnp.ones((2, 1))
+    out = masked_fedavg(p, deltas, sel, jnp.asarray([0.0, 2.0]), a)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.ones(4), rtol=1e-6)

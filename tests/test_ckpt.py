@@ -1,0 +1,71 @@
+"""Checkpoint store: roundtrip, manifest, server state resume."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_cfg
+from repro.ckpt import (load_metadata, load_pytree, save_pytree)
+from repro.common import tree_allclose
+from repro.models import get_model
+
+
+def test_roundtrip_model_params(tmp_path, rng):
+    cfg = reduced_cfg("gemma3-12b")
+    m = get_model(cfg)
+    p = m.init_params(rng)
+    path = str(tmp_path / "ck")
+    save_pytree(path, p, metadata={"round": 7})
+    p2 = load_pytree(path, p)
+    assert tree_allclose(p, p2)
+    assert load_metadata(path)["round"] == 7
+
+
+def test_manifest_contents(tmp_path):
+    p = {"a": jnp.ones((2, 3)), "b": {"c": jnp.zeros((4,), jnp.int32)}}
+    path = str(tmp_path / "x")
+    save_pytree(path, p)
+    with open(path + ".json") as f:
+        man = json.load(f)
+    assert set(man["paths"]) == {"a", "b/c"}
+    assert man["shapes"]["a"] == [2, 3]
+    assert man["dtypes"]["b/c"] == "int32"
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    p = {"a": jnp.ones((2, 3))}
+    path = str(tmp_path / "x")
+    save_pytree(path, p)
+    with pytest.raises(ValueError, match="shape"):
+        load_pytree(path, {"a": jnp.ones((3, 2))})
+
+
+def test_server_state_roundtrip(tmp_path, rng):
+    from repro.ckpt import restore_server_state, save_server_state
+    from repro.core import FLConfig, build_round_step, build_units_flat
+    from repro.models import paper_models as pm
+
+    p = pm.init_vgg16(rng, width_mult=0.125)
+    assign = build_units_flat(p, pm.vgg16_units(p))
+
+    def loss_fn(params, batch):
+        return pm.xent_loss(pm.vgg16_apply(params, batch["x"]),
+                            batch["y"]), {}
+
+    fl = FLConfig(n_clients=2, n_train_units=3, lr=1e-3)
+    from repro.core.server import Server
+    srv = Server(build_round_step(loss_fn, assign, fl), assign, fl, p)
+    batch = {"x": jnp.zeros((2, 1, 2, 32, 32, 3)),
+             "y": jnp.zeros((2, 1, 2), jnp.int32)}
+    srv.run_round(batch)
+    path = str(tmp_path / "srv")
+    save_server_state(path, srv)
+    srv2 = Server(build_round_step(loss_fn, assign, fl), assign, fl,
+                  pm.init_vgg16(jax.random.fold_in(rng, 1),
+                                width_mult=0.125))
+    meta = restore_server_state(path, srv2)
+    assert meta["round"] == 1
+    assert tree_allclose(srv.params, srv2.params)

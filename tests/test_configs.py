@@ -1,0 +1,89 @@
+"""Config registry: every assigned architecture, exact assigned hparams."""
+import pytest
+
+from repro.configs.base import get_config, list_configs
+
+# (name, n_layers, d_model, n_heads, n_kv_heads, d_ff, vocab)
+ASSIGNED = [
+    ("stablelm-3b", 32, 2560, 32, 32, 6912, 50304),
+    ("qwen2.5-14b", 48, 5120, 40, 8, 13824, 152064),
+    ("llama4-maverick-400b-a17b", 48, 5120, 40, 8, None, 202048),
+    ("gemma3-12b", 48, 3840, 16, 8, 15360, 262144),
+    ("rwkv6-3b", 32, 2560, None, None, 8960, 65536),
+    ("hymba-1.5b", 32, 1600, 25, 5, 5504, 32001),
+    ("internvl2-26b", 48, 6144, 48, 8, 16384, 92553),
+    ("qwen3-1.7b", 28, 2048, 16, 8, 6144, 151936),
+    ("whisper-medium", 24, 1024, 16, 16, 4096, 51865),
+    ("granite-moe-1b-a400m", 24, 1024, 16, 8, None, 49155),
+]
+
+
+def test_all_ten_registered():
+    assert len(list_configs()) == 10
+
+
+@pytest.mark.parametrize("name,L,d,H,Hkv,ff,V", ASSIGNED)
+def test_assigned_hparams(name, L, d, H, Hkv, ff, V):
+    cfg = get_config(name)
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    if H is not None:
+        assert cfg.n_heads == H
+        assert cfg.n_kv_heads == Hkv
+    if ff is not None:
+        assert cfg.d_ff == ff
+    assert cfg.vocab == V
+    assert cfg.source  # every config must cite its source
+
+
+def test_moe_assignments():
+    l4 = get_config("llama4-maverick-400b-a17b")
+    assert l4.moe.num_experts == 128 and l4.moe.top_k == 1
+    assert l4.moe.expert_d_ff == 8192
+    gr = get_config("granite-moe-1b-a400m")
+    assert gr.moe.num_experts == 32 and gr.moe.top_k == 8
+    assert gr.moe.expert_d_ff == 512
+
+
+def test_flavours():
+    assert get_config("qwen2.5-14b").qkv_bias
+    assert get_config("qwen3-1.7b").qk_norm
+    g = get_config("gemma3-12b")
+    assert g.global_every == 6 and g.sliding_window > 0   # 5:1 local:global
+    assert get_config("stablelm-3b").rope_pct == 0.25
+    assert get_config("hymba-1.5b").ssm.state_dim == 16
+    w = get_config("whisper-medium")
+    assert w.n_enc_layers == 24 and not w.glu and w.norm == "layernorm"
+
+
+@pytest.mark.parametrize("name", [a[0] for a in ASSIGNED])
+def test_reduced_invariants(name):
+    cfg = get_config(name)
+    r = cfg.reduced()
+    assert r.n_layers <= 4
+    assert r.d_model <= 512
+    if r.moe is not None:
+        assert r.moe.num_experts <= 4
+    assert r.family == cfg.family
+    # flavour preserved
+    assert r.qk_norm == cfg.qk_norm
+    assert r.qkv_bias == cfg.qkv_bias
+    assert (r.moe is None) == (cfg.moe is None)
+    assert (r.ssm is None) == (cfg.ssm is None)
+
+
+def test_param_scale_sanity():
+    """Full-config param counts are in the advertised ballpark."""
+    import jax
+    from repro.launch.specs import params_sds
+    from repro.common import param_count
+    expect = {"qwen3-1.7b": (1.4e9, 2.4e9), "stablelm-3b": (2.5e9, 4e9),
+              "rwkv6-3b": (2.5e9, 4.2e9), "hymba-1.5b": (1.1e9, 2.2e9),
+              "granite-moe-1b-a400m": (0.9e9, 1.7e9),
+              "whisper-medium": (0.5e9, 1.1e9),
+              "gemma3-12b": (10e9, 15e9), "qwen2.5-14b": (12e9, 17e9),
+              "internvl2-26b": (18e9, 28e9),
+              "llama4-maverick-400b-a17b": (330e9, 480e9)}
+    for name, (lo, hi) in expect.items():
+        n = param_count(params_sds(get_config(name)))
+        assert lo <= n <= hi, f"{name}: {n:,} outside [{lo:,.0f}, {hi:,.0f}]"

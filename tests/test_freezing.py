@@ -1,0 +1,78 @@
+"""Layer-selection strategies: exact counts, determinism, coverage
+(paper Fig. 4), synchronized mode — incl. hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import freezing
+
+
+@settings(max_examples=30, deadline=None)
+@given(u=st.integers(2, 40), seed=st.integers(0, 2**16))
+def test_uniform_selects_exactly_n(u, seed):
+    n = max(1, u // 3)
+    sel = freezing.select_uniform(jax.random.PRNGKey(seed), u, n)
+    assert sel.shape == (u,)
+    assert int(sel.sum()) == n
+    assert set(np.unique(np.asarray(sel))) <= {0.0, 1.0}
+
+
+def test_deterministic_per_key():
+    a = freezing.select_uniform(jax.random.PRNGKey(7), 14, 4)
+    b = freezing.select_uniform(jax.random.PRNGKey(7), 14, 4)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_clients_independent_vs_synchronized():
+    key = jax.random.PRNGKey(3)
+    ind = freezing.select_clients(key, 8, 14, 7)
+    syn = freezing.select_clients(key, 8, 14, 7, synchronized=True)
+    assert np.asarray(syn).std(axis=0).max() == 0          # all rows equal
+    assert np.asarray(ind).std(axis=0).max() > 0           # rows differ
+    assert (np.asarray(ind).sum(axis=1) == 7).all()
+
+
+def test_fixed_last():
+    sel = freezing.select_clients(jax.random.PRNGKey(0), 3, 10, 4,
+                                  strategy="fixed_last")
+    assert (np.asarray(sel)[:, -4:] == 1).all()
+    assert (np.asarray(sel)[:, :-4] == 0).all()
+
+
+def test_full_strategy():
+    sel = freezing.select_clients(jax.random.PRNGKey(0), 3, 10, 4,
+                                  strategy="full")
+    assert (np.asarray(sel) == 1).all()
+
+
+def test_coverage_over_rounds_is_uniform():
+    """Paper Fig. 4: over many rounds every unit trains ~equally often."""
+    u, n, c, rounds = 14, 4, 10, 300
+    counts = np.zeros(u)
+    for r in range(rounds):
+        sel = freezing.select_clients(jax.random.PRNGKey(r), c, u, n)
+        counts += np.asarray(sel).sum(axis=0)
+    expected = rounds * c * n / u
+    # every unit within 10% of the uniform expectation
+    assert (np.abs(counts - expected) / expected < 0.10).all(), counts
+
+
+def test_weighted_prefers_high_scores():
+    u, n = 20, 5
+    scores = jnp.zeros(u).at[:5].set(8.0)    # strongly favour units 0-4
+    hits = np.zeros(u)
+    for r in range(200):
+        sel = freezing.select_weighted(jax.random.PRNGKey(r), u, n, scores)
+        hits += np.asarray(sel)
+    assert hits[:5].min() > hits[5:].max()
+
+
+@settings(max_examples=20, deadline=None)
+@given(frac=st.sampled_from([0.25, 0.33, 0.5, 0.66, 0.75, 1.0]),
+       u=st.integers(3, 50))
+def test_fraction_mapping(frac, u):
+    n = freezing.n_train_from_fraction(u, frac)
+    assert 1 <= n <= u
+    assert abs(n - frac * u) <= 0.51

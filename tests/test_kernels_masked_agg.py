@@ -1,0 +1,64 @@
+"""Fused masked-FedAvg Pallas kernel vs core.aggregation oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_cfg
+from repro.core.aggregation import masked_fedavg
+from repro.core.masking import build_units_flat, build_units_zoo
+from repro.kernels.masked_agg.ops import masked_fedavg_fused
+from repro.common import flatten_with_paths
+from repro.models import get_model, paper_models as pm
+
+
+def _compare(p, assign, c, sel, w, tile, rng):
+    deltas = jax.tree_util.tree_map(
+        lambda x: jax.random.normal(
+            jax.random.fold_in(rng, abs(hash(str(x.shape))) % 9999),
+            (c,) + x.shape) * 0.05, p)
+    ref = masked_fedavg(p, deltas, sel, w, assign)
+    got = masked_fedavg_fused(p, deltas, sel, w, assign, tile=tile)
+    for (path, a), (_, b) in zip(flatten_with_paths(ref),
+                                 flatten_with_paths(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5, err_msg=path)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma3-12b", "rwkv6-3b"])
+@pytest.mark.parametrize("tile", [256, 1024])
+def test_fused_equals_oracle_zoo(arch, tile, rng):
+    cfg = reduced_cfg(arch)
+    m = get_model(cfg)
+    p = m.init_params(rng)
+    assign = build_units_zoo(cfg, p)
+    c = 4
+    sel = jnp.asarray(np.random.default_rng(0).integers(
+        0, 2, (c, assign.n_units)), jnp.float32)
+    w = jnp.asarray([1.0, 2.0, 0.5, 3.0])
+    _compare(p, assign, c, sel, w, tile, rng)
+
+
+def test_fused_equals_oracle_vgg(rng):
+    p = pm.init_vgg16(rng, width_mult=0.125)
+    assign = build_units_flat(p, pm.vgg16_units(p))
+    c = 10
+    sel = jnp.asarray(np.random.default_rng(1).integers(
+        0, 2, (c, assign.n_units)), jnp.float32)
+    _compare(p, assign, c, sel, jnp.ones(c), 512, rng)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 500), c=st.integers(2, 6))
+def test_property_random_selections(seed, c):
+    rng = jax.random.PRNGKey(seed)
+    cfg = reduced_cfg("qwen3-1.7b")
+    m = get_model(cfg)
+    p = m.init_params(rng)
+    assign = build_units_zoo(cfg, p)
+    sel = jnp.asarray(np.random.default_rng(seed).integers(
+        0, 2, (c, assign.n_units)), jnp.float32)
+    w = jnp.asarray(np.random.default_rng(seed + 1)
+                    .uniform(0.1, 3.0, c), jnp.float32)
+    _compare(p, assign, c, sel, w, 512, rng)

@@ -1,0 +1,115 @@
+"""Freeze-unit masking invariants (the paper's central mechanic).
+
+THE property: a client's local update leaves every frozen unit's params
+bit-exactly unchanged — and its optimizer state too.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_cfg, tiny_batch
+from repro.common import flatten_with_paths
+from repro.core.client import local_update
+from repro.core.masking import (build_units_flat, build_units_zoo, mask_tree,
+                                apply_mask, unit_param_counts)
+from repro.models import get_model, paper_models as pm
+
+
+def test_unit_count_transformer(rng):
+    cfg = reduced_cfg("qwen3-1.7b")
+    m = get_model(cfg)
+    p = m.init_params(rng)
+    a = build_units_zoo(cfg, p)
+    assert a.n_units == cfg.n_layers + 2           # embed + layers + head
+    counts = unit_param_counts(a, p)
+    assert counts.sum() == sum(int(np.prod(x.shape))
+                               for _, x in flatten_with_paths(p))
+    assert (counts > 0).all()
+
+
+def test_unit_count_encdec(rng):
+    cfg = reduced_cfg("whisper-medium")
+    m = get_model(cfg)
+    p = m.init_params(rng)
+    a = build_units_zoo(cfg, p)
+    assert a.n_units == cfg.n_enc_layers + cfg.n_layers + 2
+
+
+def test_unit_count_vgg(rng):
+    p = pm.init_vgg16(rng, width_mult=0.25)
+    a = build_units_flat(p, pm.vgg16_units(p))
+    assert a.n_units == 14                         # the paper's count
+    counts = unit_param_counts(a, p)
+    assert counts.sum() == sum(int(np.prod(x.shape))
+                               for _, x in flatten_with_paths(p))
+
+
+def test_mask_tree_broadcast_shapes(rng):
+    cfg = reduced_cfg("gemma3-12b")               # macro-block layout
+    m = get_model(cfg)
+    p = m.init_params(rng)
+    a = build_units_zoo(cfg, p)
+    sel = jnp.ones(a.n_units)
+    mask = mask_tree(a, sel, p)
+    masked = apply_mask(mask, p)
+    for (path, x), (_, y) in zip(flatten_with_paths(p),
+                                 flatten_with_paths(masked)):
+        assert x.shape == y.shape, path
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-3b", "hymba-1.5b",
+                                  "granite-moe-1b-a400m", "whisper-medium"])
+def test_frozen_units_bitexact_after_local_update(arch, rng):
+    """Alg. 2: frozen layers are untouched by the client update."""
+    cfg = reduced_cfg(arch)
+    m = get_model(cfg)
+    p = m.init_params(rng)
+    a = build_units_zoo(cfg, p)
+    sel = jnp.zeros(a.n_units).at[jnp.asarray([0, a.n_units - 1])].set(1.0)
+    mask = mask_tree(a, sel, p)
+    batch = tiny_batch(cfg, rng)
+    batches = jax.tree_util.tree_map(lambda x: x[None].repeat(2, 0), batch)
+    delta, _ = jax.jit(lambda p_: local_update(
+        m.loss_fn, p_, mask, batches, lr=1e-2))(p)
+    bmask = jax.tree_util.tree_map(
+        lambda x, k: np.broadcast_to(
+            np.reshape(np.asarray(k), np.shape(k) + (1,) *
+                       (x.ndim - np.ndim(k))), x.shape), p, mask)
+    frozen_changed, trained_changed = 0, 0
+    for (path, d), (_, km) in zip(flatten_with_paths(delta),
+                                  flatten_with_paths(bmask)):
+        d = np.asarray(d)
+        frozen = d[km == 0]
+        trained = d[km == 1]
+        assert (frozen == 0).all(), f"{arch} {path}: frozen moved"
+        if trained.size:
+            trained_changed += (trained != 0).any()
+    assert trained_changed > 0, "nothing trained at all"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), n_train=st.integers(1, 4))
+def test_property_vgg_frozen_invariance(seed, n_train):
+    """Property over random selections on the paper's own model family."""
+    key = jax.random.PRNGKey(seed)
+    p = pm.init_vgg16(key, width_mult=0.125)
+    a = build_units_flat(p, pm.vgg16_units(p))
+    from repro.core.freezing import select_uniform
+    sel = select_uniform(key, a.n_units, n_train)
+    mask = mask_tree(a, sel, p)
+
+    def loss_fn(params, batch):
+        return pm.xent_loss(pm.vgg16_apply(params, batch["x"]),
+                            batch["y"]), {}
+
+    x = jax.random.normal(key, (2, 4, 32, 32, 3))
+    y = jax.random.randint(key, (2, 4), 0, 10)
+    delta, _ = local_update(loss_fn, p, mask, {"x": x, "y": y}, lr=1e-2)
+    sel_np = np.asarray(sel)
+    for ui, unit in enumerate(pm.vgg16_units(p)):
+        leaves = jax.tree_util.tree_leaves(delta[unit])
+        moved = any(bool((np.asarray(l) != 0).any()) for l in leaves)
+        if sel_np[ui] == 0:
+            assert not moved, f"frozen unit {unit} moved"

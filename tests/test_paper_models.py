@@ -1,0 +1,69 @@
+"""The paper's own models: exact/near-exact param counts + learnability."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import param_count
+from repro.data import casa_like, cifar_like, imdb_like
+from repro.models import paper_models as pm
+
+
+def test_vgg16_exact_param_count(rng):
+    assert param_count(pm.init_vgg16(rng)) == 14_736_714   # Table 1
+
+
+def test_vgg16_unit_order(rng):
+    p = pm.init_vgg16(rng)
+    units = pm.vgg16_units(p)
+    assert len(units) == 14 and units[-1] == "dense0"
+
+
+def test_casa_param_count_close(rng):
+    n = param_count(pm.init_casa(rng))
+    assert abs(n - 68_884) / 68_884 < 0.005        # paper: 68,884 (~0.1%)
+
+
+def test_imdb_structure(rng):
+    p = pm.init_imdb(rng)
+    assert p["embed_small"]["table"].shape == (20000, 128)
+    assert p["lstm0"]["wh"].shape == (70, 280)
+    assert pm.imdb_units(p) == ["embed_small", "conv0", "lstm0", "dense0"]
+
+
+@pytest.mark.parametrize("model", ["vgg", "imdb", "casa"])
+def test_learnability(model, rng):
+    """A few SGD steps on the synthetic stand-ins reduce loss."""
+    if model == "vgg":
+        p = pm.init_vgg16(rng, width_mult=0.125)
+        x, y = cifar_like(64, key=1)
+        fwd = pm.vgg16_apply
+    elif model == "imdb":
+        p = pm.init_imdb(rng)
+        x, y = imdb_like(64, key=1)
+        fwd = pm.imdb_apply
+    else:
+        p = pm.init_casa(rng)
+        homes = casa_like(2, key=1)
+        x, y = homes[0]
+        x, y = x[:64], y[:64]
+        fwd = pm.casa_apply
+    x, y = jnp.asarray(x), jnp.asarray(y)
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(
+            lambda p_: pm.xent_loss(fwd(p_, x), y))(p)
+        return loss, jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g)
+
+    losses = []
+    for _ in range(8):
+        loss, p = step(p)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"{model}: {losses}"
+
+
+def test_accuracy_metric():
+    logits = jnp.asarray([[2.0, 1.0], [0.0, 3.0], [5.0, 0.0]])
+    labels = jnp.asarray([0, 1, 1])
+    assert float(pm.accuracy(logits, labels)) == pytest.approx(2 / 3)

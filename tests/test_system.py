@@ -1,0 +1,88 @@
+"""End-to-end system behaviour.
+
+1. A full federated experiment through the public API: config -> model ->
+   units -> server -> rounds -> checkpoint -> resume -> comm summary.
+2. A reduced-scale dry-run (lower+compile with sharding) in a subprocess
+   with fake devices, exercising launch/dryrun end to end.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_cfg
+from repro.ckpt import restore_server_state, save_server_state
+from repro.core import (FLConfig, build_round_step, build_units_zoo)
+from repro.core.server import Server
+from repro.data import FederatedLoader, iid_partition, lm_batch
+from repro.models import get_model
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_full_federated_experiment(tmp_path, rng):
+    cfg = reduced_cfg("qwen3-1.7b")
+    m = get_model(cfg)
+    params = m.init_params(rng)
+    assign = build_units_zoo(cfg, params)
+    data = lm_batch(64, 32, cfg.vocab, key=0)
+    shards = iid_partition(64, 4, key=1)
+    loader = FederatedLoader(
+        [{k: v[s] for k, v in data.items()} for s in shards],
+        batch_size=4, steps_per_round=2)
+    fl = FLConfig(n_clients=4,
+                  n_train_units=max(1, assign.n_units // 2), lr=2e-3)
+    srv = Server(build_round_step(m.loss_fn, assign, fl,
+                                  loss_kwargs={"attn_impl": "reference"}),
+                 assign, fl, params,
+                 eval_fn=lambda p: m.loss_fn(
+                     p, jax.tree_util.tree_map(jnp.asarray, data),
+                     attn_impl="reference")[0])
+    hist = srv.run(4, lambda r: jax.tree_util.tree_map(
+        jnp.asarray, loader.round_batches(r)))
+    assert hist[-1].loss < hist[0].loss
+    assert hist[-1].eval_metric is not None
+
+    # checkpoint + resume mid-run
+    path = str(tmp_path / "state")
+    save_server_state(path, srv)
+    srv2 = Server(build_round_step(m.loss_fn, assign, fl,
+                                   loss_kwargs={"attn_impl": "reference"}),
+                  assign, fl, m.init_params(jax.random.fold_in(rng, 5)))
+    meta = restore_server_state(path, srv2)
+    assert meta["round"] == 4
+    rec = srv2.run_round(jax.tree_util.tree_map(
+        jnp.asarray, loader.round_batches(4)))
+    assert np.isfinite(rec.loss)
+
+    summ = srv.comm_summary()
+    assert 0.2 < summ["reduction_vs_full"] < 0.8
+
+
+@pytest.mark.slow
+def test_dryrun_reduced_subprocess():
+    """launch/dryrun machinery end-to-end (lower+compile on 256 fake
+    devices) for one representative pair."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import run_dryrun
+rec = run_dryrun("qwen3-1.7b", "decode_32k", verbose=False)
+print(json.dumps({"fits": rec["fits_hbm_16gb"],
+                  "dominant": rec["roofline"]["dominant"],
+                  "chips": rec["chips"],
+                  "flops": rec["cost_analysis"]["flops_per_device"]}))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    assert rec["chips"] == 256
+    assert rec["flops"] > 0
