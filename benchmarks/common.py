@@ -1,6 +1,12 @@
-"""Shared helpers for the paper-table benchmarks."""
+"""Shared helpers for the paper-table benchmarks.
+
+All federated runs are constructed through the ``Federation`` facade;
+``make_vgg_federation``/``make_paper_federation`` return the facade plus
+its loader so individual tables only pick settings.
+"""
 from __future__ import annotations
 
+import functools
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -8,8 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (FLConfig, build_round_step, build_units_flat)
-from repro.core.server import Server
+from repro.core import FLConfig, Federation, ModelSpec
 from repro.data import FederatedLoader, cifar_like, iid_partition
 from repro.models import paper_models as pm
 
@@ -33,9 +38,10 @@ def make_vgg_federation(n_clients: int, n_train_units: int, *,
                         width=0.125, n_data=600, batch_size=8,
                         steps_per_round=2, lr=1e-3, seed=0,
                         data_key=0):
-    key = jax.random.PRNGKey(seed)
-    params = pm.init_vgg16(key, width_mult=width)
-    assign = build_units_flat(params, pm.vgg16_units(params))
+    spec = ModelSpec(
+        name="vgg16",
+        init_params=functools.partial(pm.init_vgg16, width_mult=width),
+        loss_fn=vgg_loss_fn, unit_order=pm.vgg16_units)
     # one draw -> same class prototypes for train and eval (held-out tail)
     n_eval = 256
     x_all, y_all = cifar_like(n_data + n_eval, key=data_key)
@@ -44,23 +50,19 @@ def make_vgg_federation(n_clients: int, n_train_units: int, *,
     loader = FederatedLoader([{"x": x[s], "y": y[s]} for s in shards],
                              batch_size=batch_size,
                              steps_per_round=steps_per_round, key=seed)
-    fl = FLConfig(n_clients=n_clients, n_train_units=n_train_units, lr=lr)
     xt, yt = jnp.asarray(x_all[n_data:]), jnp.asarray(y_all[n_data:])
 
     def eval_acc(p):
         return pm.accuracy(pm.vgg16_apply(p, xt), yt)
 
-    srv = Server(build_round_step(vgg_loss_fn, assign, fl), assign, fl,
-                 params, eval_fn=eval_acc, seed=seed)
-    return srv, loader, assign
+    fl = FLConfig(n_clients=n_clients, n_train_units=n_train_units, lr=lr)
+    fed = Federation.from_config(spec, fl, data=loader, eval_fn=eval_acc,
+                                 seed=seed)
+    return fed, loader, fed.assign
 
 
-def run_rounds(srv: Server, loader: FederatedLoader, rounds: int,
-               log_every: int = 0):
-    w = jnp.asarray(loader.weights())
-    return srv.run(rounds, lambda r: jax.tree_util.tree_map(
-        jnp.asarray, loader.round_batches(r)), weights=w,
-        log_every=log_every)
+def run_rounds(fed: Federation, rounds: int, log_every: int = 0):
+    return fed.fit(rounds, log_every=log_every)
 
 
 def csv_row(name: str, us_per_call: float, derived: str):

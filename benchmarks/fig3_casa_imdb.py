@@ -4,12 +4,10 @@ from __future__ import annotations
 
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FLConfig, build_round_step, build_units_flat
-from repro.core.server import Server
+from repro.core import FLConfig, Federation, ModelSpec
 from repro.data import FederatedLoader, casa_like, iid_partition, imdb_like
 from repro.models import paper_models as pm
 from .common import csv_row, run_rounds
@@ -17,41 +15,43 @@ from .common import csv_row, run_rounds
 
 def _run_casa(n_train, rounds, n_homes):
     homes = casa_like(n_homes, key=0, min_samples=60, max_samples=240)
-    params = pm.init_casa(jax.random.PRNGKey(0))
-    assign = build_units_flat(params, pm.casa_units(params))
 
     def loss_fn(p, batch):
         return pm.xent_loss(pm.casa_apply(p, batch["x"]), batch["y"]), {}
 
+    spec = ModelSpec(name="casa", init_params=pm.init_casa,
+                     loss_fn=loss_fn, unit_order=pm.casa_units)
     loader = FederatedLoader([{"x": x, "y": y} for x, y in homes],
                              batch_size=16, steps_per_round=2)
     xs = np.concatenate([x[:20] for x, _ in homes])
     ys = np.concatenate([y[:20] for _, y in homes])
     xt, yt = jnp.asarray(xs), jnp.asarray(ys)
     fl = FLConfig(n_clients=n_homes, n_train_units=n_train, lr=3e-3)
-    srv = Server(build_round_step(loss_fn, assign, fl), assign, fl, params,
-                 eval_fn=lambda p: pm.accuracy(pm.casa_apply(p, xt), yt))
-    hist = run_rounds(srv, loader, rounds)
+    fed = Federation.from_config(
+        spec, fl, data=loader,
+        eval_fn=lambda p: pm.accuracy(pm.casa_apply(p, xt), yt))
+    hist = run_rounds(fed, rounds)
     return [h.eval_metric for h in hist]
 
 
 def _run_imdb(n_train, rounds, clients, n_data):
     x, y = imdb_like(n_data, key=0)
-    params = pm.init_imdb(jax.random.PRNGKey(0))
-    assign = build_units_flat(params, pm.imdb_units(params))
 
     def loss_fn(p, batch):
         return pm.xent_loss(pm.imdb_apply(p, batch["x"]), batch["y"]), {}
 
+    spec = ModelSpec(name="imdb", init_params=pm.init_imdb,
+                     loss_fn=loss_fn, unit_order=pm.imdb_units)
     shards = iid_partition(n_data, clients, key=1)
     loader = FederatedLoader([{"x": x[s], "y": y[s]} for s in shards],
                              batch_size=16, steps_per_round=2)
     xt, yt = imdb_like(256, key=9)
     xt, yt = jnp.asarray(xt), jnp.asarray(yt)
     fl = FLConfig(n_clients=clients, n_train_units=n_train, lr=3e-3)
-    srv = Server(build_round_step(loss_fn, assign, fl), assign, fl, params,
-                 eval_fn=lambda p: pm.accuracy(pm.imdb_apply(p, xt), yt))
-    hist = run_rounds(srv, loader, rounds)
+    fed = Federation.from_config(
+        spec, fl, data=loader,
+        eval_fn=lambda p: pm.accuracy(pm.imdb_apply(p, xt), yt))
+    hist = run_rounds(fed, rounds)
     return [h.eval_metric for h in hist]
 
 

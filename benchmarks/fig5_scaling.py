@@ -26,7 +26,7 @@ def run(fast: bool = True):
                                              width=0.125, lr=3e-3,
                                              steps_per_round=3,
                                              batch_size=16)
-        hist = run_rounds(srv, loader, rounds)
+        hist = run_rounds(srv, rounds)
         accs = [h.eval_metric for h in hist]
         finals[(c, n)] = accs[-1]
         print(f"{c},{n},{accs[-1]:.3f}," + "|".join(

@@ -1,22 +1,21 @@
 """End-to-end driver: the paper's Experiment 1 (CIFAR-10 / VGG16) at
 CPU scale — federated training for a few dozen rounds with comm
-accounting, straggler dropout and checkpointing.
+accounting, straggler dropout and checkpointing, all through the
+``Federation`` facade.
 
     PYTHONPATH=src python examples/federated_vision.py \
         [--rounds 12] [--layers 7] [--clients 4] [--dropout 0.1]
 """
 import argparse
+import functools
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import jax.numpy as jnp
 
-from repro.ckpt import save_server_state
-from repro.core import FLConfig, build_round_step, build_units_flat
-from repro.core.server import Server
+from repro.core import Checkpointer, FLConfig, Federation, ModelSpec
 from repro.data import FederatedLoader, cifar_like, iid_partition
 from repro.models import paper_models as pm
 
@@ -33,12 +32,14 @@ def main():
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
-    key = jax.random.PRNGKey(0)
-    params = pm.init_vgg16(key, width_mult=args.width)
-    assign = build_units_flat(params, pm.vgg16_units(params))
-
     def loss_fn(p, batch):
         return pm.xent_loss(pm.vgg16_apply(p, batch["x"]), batch["y"]), {}
+
+    spec = ModelSpec(
+        name="vgg16",
+        init_params=functools.partial(pm.init_vgg16,
+                                      width_mult=args.width),
+        loss_fn=loss_fn, unit_order=pm.vgg16_units)
 
     x_all, y_all = cifar_like(args.n_data + 256, key=0)
     x, y = x_all[:args.n_data], y_all[:args.n_data]
@@ -48,21 +49,19 @@ def main():
     loader = FederatedLoader([{"x": x[s], "y": y[s]} for s in shards],
                              batch_size=16, steps_per_round=3)
 
-    fl = FLConfig(n_clients=args.clients, n_train_units=args.layers,
-                  lr=3e-3)
-    srv = Server(build_round_step(loss_fn, assign, fl), assign, fl, params,
-                 eval_fn=lambda p: pm.accuracy(pm.vgg16_apply(p, xt), yt),
-                 dropout_rate=args.dropout)
-    srv.run(args.rounds, lambda r: jax.tree_util.tree_map(
-        jnp.asarray, loader.round_batches(r)),
-        weights=jnp.asarray(loader.weights()), log_every=1)
+    fed = Federation.from_config(
+        spec, FLConfig(n_clients=args.clients, n_train_units=args.layers,
+                       lr=3e-3),
+        data=loader, dropout_rate=args.dropout,
+        eval_fn=lambda p: pm.accuracy(pm.vgg16_apply(p, xt), yt),
+        hooks=[Checkpointer(args.ckpt)] if args.ckpt else [])
+    fed.fit(args.rounds, log_every=1)
 
-    summ = srv.comm_summary()
+    summ = fed.comm_summary()
     print(f"\ntrained {args.layers}/14 units per client per round")
     print(f"avg uplink/round: {summ['avg_uplink_bytes']/1e6:.1f} MB "
           f"(reduction vs full-model FL: {summ['reduction_vs_full']:.1%})")
     if args.ckpt:
-        save_server_state(args.ckpt, srv)
         print(f"server state saved to {args.ckpt}")
 
 

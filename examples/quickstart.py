@@ -1,8 +1,8 @@
-"""Quickstart: the paper's technique in ~60 lines.
+"""Quickstart: the paper's technique through the Federation facade.
 
 Federated training of a reduced qwen3-family LM across 4 clients where
 each client trains a random HALF of the layers per round (the paper's
-strategy), with participation-weighted FedAvg aggregation.
+``uniform`` strategy), with participation-weighted FedAvg aggregation.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,51 +11,28 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import get_config
-from repro.core import FLConfig, build_round_step, build_units_zoo
-from repro.data import FederatedLoader, iid_partition, lm_batch
-from repro.models import get_model
+from repro.core import FLConfig, Federation
+from repro.data import iid_partition, lm_batch
 
 
 def main():
-    # 1. pick an architecture (any of the 10 assigned configs) and shrink
-    #    it to smoke scale for this CPU host
+    # a zoo architecture at smoke scale for this CPU host
     cfg = get_config("qwen3-1.7b").reduced()
-    model = get_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
 
-    # 2. freeze units = embedding + each layer + head (the paper's "layers")
-    assign = build_units_zoo(cfg, params)
-    print(f"{cfg.name}: {assign.n_units} freeze units "
-          f"({', '.join(assign.unit_names)})")
+    # synthetic LM data, IID across 4 clients
+    data = lm_batch(128, 64, cfg.vocab, key=0)
+    clients = [{k: v[s] for k, v in data.items()}
+               for s in iid_partition(128, 4, key=1)]
 
-    # 3. synthetic LM data, IID across 4 clients
-    n, seq = 128, 64
-    data = lm_batch(n, seq, cfg.vocab, key=0)
-    shards = iid_partition(n, 4, key=1)
-    loader = FederatedLoader([{k: v[s] for k, v in data.items()}
-                              for s in shards],
-                             batch_size=4, steps_per_round=2)
-
-    # 4. the paper's round: each client trains HALF the units, randomly
-    #    re-drawn every round; aggregation averages only trained units
-    fl = FLConfig(n_clients=4, n_train_units=assign.n_units // 2, lr=2e-3)
-    round_step = jax.jit(build_round_step(
-        model.loss_fn, assign, fl, loss_kwargs={"attn_impl": "reference"}))
-
-    weights = jnp.asarray(loader.weights())
-    for r in range(8):
-        batches = jax.tree_util.tree_map(jnp.asarray,
-                                         loader.round_batches(r))
-        params, metrics = round_step(params, batches, weights,
-                                     jax.random.PRNGKey(100 + r))
-        sel = metrics["sel"]
-        print(f"round {r}: loss={float(metrics['loss_mean']):.4f} "
-              f"(client0 trained units: "
-              f"{[i for i, s in enumerate(sel[0]) if s]} )")
+    # the paper's round: each client trains HALF the units, randomly
+    # re-drawn every round; aggregation averages only trained units
+    fl = FLConfig(n_clients=4, train_fraction=0.5, lr=2e-3)
+    fed = Federation.from_config(cfg, fl, data=clients,
+                                 batch_size=4, steps_per_round=2)
+    fed.fit(rounds=8, log_every=1)
+    print(f"{cfg.name}: {fed.assign.n_units} freeze units; comm reduction "
+          f"vs full-model FL: {fed.comm_summary()['reduction_vs_full']:.1%}")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,23 @@
 """The paper's contribution: federated partial-layer freezing (FedPLF).
 
-freezing   — per-round layer-selection strategies (Alg. 2 line 3)
+strategies — pluggable layer-selection strategies + registry (Alg. 2 line 3)
+freezing   — functional wrappers over the strategy registry
 masking    — freeze units over param pytrees, mask trees
 aggregation— FedAvg / participation-weighted masked FedAvg
 client     — ClientUpdate (Alg. 2): masked local training
 federation — the compiled federated round step
-server     — round orchestration (Alg. 1)
+server     — round orchestration (Alg. 1) + composable ServerHooks
+session    — the Federation facade (from_config -> fit/evaluate/comm)
 comm       — exact transfer-byte accounting (Table 4)
 """
-from . import freezing, masking, aggregation, client, federation, server, comm  # noqa: F401
+from . import (freezing, masking, aggregation, client, federation, server,  # noqa: F401
+               comm, strategies, session)
 from .federation import FLConfig, build_round_step, build_fullmodel_round_step  # noqa: F401
 from .masking import build_units, build_units_zoo, build_units_flat, mask_tree, apply_mask, UnitAssignment  # noqa: F401
+from .session import Federation, ModelSpec  # noqa: F401
+from .server import (Server, ServerHook, RoundRecord, StragglerDropout,  # noqa: F401
+                     CommAccounting, RoundLogger, Checkpointer)
+from .strategies import (SelectionStrategy, SelectionContext, Synchronized,  # noqa: F401
+                         register_strategy, unregister_strategy,
+                         registered_strategies, get_strategy,
+                         resolve_strategy, UnknownStrategyError)

@@ -7,7 +7,9 @@ is freshly initialized each round, matching the paper's per-round client
 setup (FEDn clients re-create the optimizer on every round).
 
 FedProx (Sahu et al. 2018) is available through ``prox_mu > 0`` — the
-proximal term pulls trained layers toward the round's global model.
+proximal term pulls only the round's *trained* (unmasked) layers toward
+the global model: the freeze mask is applied inside the prox sum, so
+frozen layers contribute neither loss nor gradient.
 """
 from __future__ import annotations
 
@@ -40,9 +42,13 @@ def local_update(loss_fn: Callable, global_params: PyTree, mask: PyTree,
     def total_loss(params, batch):
         loss, metrics = loss_fn(params, batch, **loss_kwargs)
         if prox_mu > 0.0:
-            sq = sum(jnp.sum(jnp.square((a - b).astype(jnp.float32)))
-                     for a, b in zip(jax.tree_util.tree_leaves(params),
-                                     jax.tree_util.tree_leaves(global_params)))
+            # prox pulls TRAINED layers only: mask the diffs so frozen
+            # layers contribute neither loss nor gradient
+            diffs = apply_mask(mask, jax.tree_util.tree_map(
+                lambda a, b: (a - b).astype(jnp.float32),
+                params, global_params))
+            sq = sum(jnp.sum(jnp.square(d))
+                     for d in jax.tree_util.tree_leaves(diffs))
             loss = loss + 0.5 * prox_mu * sq
         return loss, metrics
 

@@ -1,7 +1,7 @@
 """Federated round as a single compiled step (DESIGN.md §4).
 
-``build_round_step`` closes over the model loss, unit assignment and
-strategy and returns
+``build_round_step`` closes over the model loss, unit assignment and a
+**registered selection strategy** (core/strategies.py) and returns
 
     round_step(global_params, client_batches, weights, round_key)
         -> (new_global_params, metrics)
@@ -13,21 +13,30 @@ local training, participation-weighted aggregation — is one XLA program;
 the cross-client reduce in the aggregation is the only cross-client
 collective.
 
+Strategies whose ``dense`` flag is set (the ``full`` baseline) skip the
+per-unit masking and aggregate with plain FedAvg — the same trace the
+old dedicated full-model path compiled, so results are bit-exact with
+the conventional baseline.  There is no separate full-model builder any
+more; ``build_fullmodel_round_step`` survives only as a deprecation
+shim delegating to the ``full`` strategy.
+
 Topology (cross_device vs cross_silo) changes nothing here; it changes
 the mesh view the step is pjit-ed with (launch/mesh.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+import warnings
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from . import freezing
 from .aggregation import masked_fedavg, fedavg
 from .client import local_update
 from .masking import UnitAssignment, mask_tree
+from .strategies import (SelectionContext, SelectionStrategy,
+                         resolve_strategy)
 
 PyTree = Any
 
@@ -35,35 +44,75 @@ PyTree = Any
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
     n_clients: int
-    n_train_units: int            # N_l in the paper
-    strategy: str = "uniform"     # uniform | fixed_last | weighted | full
+    n_train_units: int = 0        # N_l in the paper
+    strategy: str = "uniform"     # any registered strategy name
     synchronized: bool = False    # beyond-paper collective shrinking
     lr: float = 1e-2              # paper: 0.01
     optimizer: str = "adam"       # paper: ADAM
     prox_mu: float = 0.0          # >0 -> FedProx
     always_train_head: bool = False
+    # alternative to n_train_units when the unit count isn't known yet
+    # (the paper's 25%/50%/75% settings); resolved against the unit
+    # assignment by build_round_step
+    train_fraction: Optional[float] = None
+
+    def resolve_n_train(self, n_units: int) -> int:
+        if self.train_fraction is not None:
+            from .freezing import n_train_from_fraction
+            return n_train_from_fraction(n_units, self.train_fraction)
+        return self.n_train_units
 
 
 def build_round_step(loss_fn: Callable, assign: UnitAssignment,
-                     fl: FLConfig, loss_kwargs: Optional[Dict] = None):
-    """Returns the jit-able round_step function."""
+                     fl: FLConfig, loss_kwargs: Optional[Dict] = None,
+                     *, strategy: Union[str, SelectionStrategy, None] = None,
+                     scores: Optional[jnp.ndarray] = None):
+    """Returns the jit-able round_step function.
+
+    ``strategy`` overrides ``fl.strategy`` with a name or an instance
+    (e.g. one constructed in user code and never registered).
+    """
+    strat = resolve_strategy(strategy if strategy is not None
+                             else fl.strategy, fl.synchronized)
+    n_train = fl.resolve_n_train(assign.n_units)
+    if not strat.dense and not 1 <= n_train <= assign.n_units:
+        raise ValueError(
+            f"n_train={n_train} out of range for {assign.n_units} units; "
+            "set FLConfig.n_train_units or train_fraction")
+    ctx = SelectionContext(n_clients=fl.n_clients, n_units=assign.n_units,
+                           n_train=n_train, scores=scores)
 
     def round_step(global_params, client_batches, weights, round_key):
-        sel = freezing.select_clients(
-            round_key, fl.n_clients, assign.n_units, fl.n_train_units,
-            strategy=fl.strategy, synchronized=fl.synchronized)
+        sel = strat.select(round_key, ctx)
         if fl.always_train_head:
             sel = sel.at[:, -1].set(1.0)
 
-        def one_client(sel_row, batches):
-            mask = mask_tree(assign, sel_row, global_params)
-            return local_update(loss_fn, global_params, mask, batches,
-                                lr=fl.lr, optimizer=fl.optimizer,
-                                prox_mu=fl.prox_mu, loss_kwargs=loss_kwargs)
+        if strat.dense:
+            # every unit trained: unmasked local step + plain FedAvg —
+            # bit-exact with the conventional-FedAvg baseline trace
+            ones_mask = jax.tree_util.tree_map(
+                lambda x: jnp.ones((), jnp.float32), global_params)
 
-        deltas, metrics = jax.vmap(one_client)(sel, client_batches)
-        new_params = masked_fedavg(global_params, deltas, sel, weights,
-                                   assign)
+            def one_client_dense(batches):
+                return local_update(loss_fn, global_params, ones_mask,
+                                    batches, lr=fl.lr,
+                                    optimizer=fl.optimizer,
+                                    prox_mu=fl.prox_mu,
+                                    loss_kwargs=loss_kwargs)
+
+            deltas, metrics = jax.vmap(one_client_dense)(client_batches)
+            new_params = fedavg(global_params, deltas, weights)
+        else:
+            def one_client(sel_row, batches):
+                mask = mask_tree(assign, sel_row, global_params)
+                return local_update(loss_fn, global_params, mask, batches,
+                                    lr=fl.lr, optimizer=fl.optimizer,
+                                    prox_mu=fl.prox_mu,
+                                    loss_kwargs=loss_kwargs)
+
+            deltas, metrics = jax.vmap(one_client)(sel, client_batches)
+            new_params = masked_fedavg(global_params, deltas, sel, weights,
+                                       assign)
         out_metrics = {
             "loss_mean": metrics["loss_mean"].mean(),
             "loss_per_client": metrics["loss_mean"],
@@ -75,22 +124,22 @@ def build_round_step(loss_fn: Callable, assign: UnitAssignment,
 
 
 def build_fullmodel_round_step(loss_fn: Callable, fl: FLConfig,
-                               loss_kwargs: Optional[Dict] = None):
-    """Conventional FedAvg baseline (every unit trained, plain average)."""
+                               loss_kwargs: Optional[Dict] = None,
+                               assign: Optional[UnitAssignment] = None):
+    """Deprecated shim: the conventional FedAvg baseline is now the
+    registered ``full`` strategy on the unified path.
 
-    def round_step(global_params, client_batches, weights, round_key):
-        ones_mask = jax.tree_util.tree_map(
-            lambda x: jnp.ones((), jnp.float32), global_params)
-
-        def one_client(batches):
-            return local_update(loss_fn, global_params, ones_mask, batches,
-                                lr=fl.lr, optimizer=fl.optimizer,
-                                loss_kwargs=loss_kwargs)
-
-        deltas, metrics = jax.vmap(one_client)(client_batches)
-        new_params = fedavg(global_params, deltas, weights)
-        return new_params, {"loss_mean": metrics["loss_mean"].mean(),
-                            "loss_per_client": metrics["loss_mean"],
-                            "sel": jnp.ones((fl.n_clients, 1))}
-
-    return round_step
+    ``assign`` is optional for call-site compatibility; without it the
+    selection matrix in the metrics is (C, 1) as before (a single
+    pseudo-unit covering the whole model).
+    """
+    warnings.warn(
+        "build_fullmodel_round_step is deprecated; use "
+        "build_round_step with FLConfig(strategy='full') or "
+        "Federation.from_config instead", DeprecationWarning, stacklevel=2)
+    if assign is None:
+        assign = UnitAssignment(1, None, ("model",))
+    fl = dataclasses.replace(fl, strategy="full",
+                             n_train_units=assign.n_units,
+                             prox_mu=0.0, always_train_head=False)
+    return build_round_step(loss_fn, assign, fl, loss_kwargs)

@@ -1,45 +1,46 @@
-"""Layer-selection strategies (the paper's core mechanism, Alg. 2 line 3).
+"""Layer-selection helpers (paper Alg. 2 line 3) — thin wrappers.
 
-Every strategy returns a 0/1 selection over freeze units, traced-friendly
-so the whole federated round compiles as one ``jit``.  The paper uses
-per-client independent uniform random selection; we add:
+The actual strategies live in ``core/strategies.py`` as registered
+plugins (``uniform``, ``fixed_last``, ``weighted``, ``full``,
+``synchronized``); this module keeps the original functional API for
+call sites and notebooks that think in terms of one selection draw.
 
-  * ``synchronized``  — all clients of a round share the subset (seeded by
-    the round id).  Beyond-paper: lets the cross-client collective shrink
-    (frozen units never hit the ICI/DCN link) — see core/comm.py and
-    EXPERIMENTS.md §Perf.
-  * ``fixed_last``    — transfer-learning baseline (train the last k units).
-  * ``weighted``      — selection probability proportional to provided
-    per-unit scores (e.g. gradient norms; the paper's "future work").
-
-``n_train`` is static (the paper keeps it fixed over training), so masks
-have static sparsity and the comm accounting is exact.
+Every function returns a 0/1 selection over freeze units, traced-
+friendly so the whole federated round compiles as one ``jit``.
+``n_train`` is static (the paper keeps it fixed over training), so
+masks have static sparsity and the comm accounting is exact.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
+
+from .strategies import (SelectionContext, get_strategy, resolve_strategy)
+
+
+def _ctx(n_clients: int, n_units: int, n_train: int,
+         scores: Optional[jnp.ndarray] = None) -> SelectionContext:
+    return SelectionContext(n_clients=n_clients, n_units=n_units,
+                            n_train=n_train, scores=scores)
 
 
 def select_uniform(key, n_units: int, n_train: int) -> jnp.ndarray:
     """(U,) 0/1 — exactly n_train randomly chosen units."""
-    perm = jax.random.permutation(key, n_units)
-    return (perm < n_train).astype(jnp.float32)
+    return get_strategy("uniform").select_row(
+        key, _ctx(1, n_units, n_train))
 
 
 def select_fixed_last(n_units: int, n_train: int) -> jnp.ndarray:
-    return (jnp.arange(n_units) >= n_units - n_train).astype(jnp.float32)
+    return get_strategy("fixed_last").select_row(
+        None, _ctx(1, n_units, n_train))
 
 
 def select_weighted(key, n_units: int, n_train: int,
                     scores: jnp.ndarray) -> jnp.ndarray:
-    """Top-n_train by perturbed score (Gumbel top-k sampling ∝ softmax(scores))."""
-    g = jax.random.gumbel(key, (n_units,))
-    ranked = jnp.argsort(-(scores + g))
-    sel = jnp.zeros(n_units).at[ranked[:n_train]].set(1.0)
-    return sel
+    """Top-n_train by perturbed score (Gumbel top-k ∝ softmax(scores))."""
+    return get_strategy("weighted").select_row(
+        key, _ctx(1, n_units, n_train, scores))
 
 
 def select_clients(key, n_clients: int, n_units: int, n_train: int, *,
@@ -51,24 +52,8 @@ def select_clients(key, n_clients: int, n_units: int, n_train: int, *,
     otherwise each client folds its index into the round key (paper
     semantics: independent per-client selection).
     """
-    if strategy == "full":
-        return jnp.ones((n_clients, n_units), jnp.float32)
-    if strategy == "fixed_last":
-        row = select_fixed_last(n_units, n_train)
-        return jnp.broadcast_to(row, (n_clients, n_units))
-
-    def one(k):
-        if strategy == "uniform":
-            return select_uniform(k, n_units, n_train)
-        if strategy == "weighted":
-            return select_weighted(k, n_units, n_train, scores)
-        raise ValueError(f"unknown strategy {strategy!r}")
-
-    if synchronized:
-        row = one(key)
-        return jnp.broadcast_to(row, (n_clients, n_units))
-    keys = jax.random.split(key, n_clients)
-    return jax.vmap(one)(keys)
+    strat = resolve_strategy(strategy, synchronized)
+    return strat.select(key, _ctx(n_clients, n_units, n_train, scores))
 
 
 def n_train_from_fraction(n_units: int, fraction: float) -> int:

@@ -1,23 +1,34 @@
 """Round orchestration (paper Alg. 1) — the FEDn-combiner role.
 
-The ``Server`` drives rounds at the Python level: per-round client
-sampling, handing shards to the compiled ``round_step``, evaluation,
-straggler dropout simulation, comm accounting and history.  Everything
-numerically heavy is inside the jitted round step.
+The ``Server`` drives rounds at the Python level: handing shards to the
+compiled ``round_step``, evaluation and history.  Everything numerically
+heavy is inside the jitted round step; everything *situational* —
+straggler dropout, comm accounting, logging, checkpointing — is a
+composable :class:`ServerHook` rather than an inlined branch, so
+deployments mix and match without touching the loop.
+
+Hook call order per round::
+
+    on_round_start(server, round_idx, weights) -> weights   (may reweight)
+    ... compiled round step ...
+    on_round_end(server, record, metrics)                   (may annotate)
+
+If every client drops (all weights zero) the round is a recorded no-op:
+the global params are untouched and the ``RoundRecord`` carries
+``skipped=True`` with zero participants.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..common import pytree as pt
 from . import comm
-from .federation import FLConfig, build_round_step
+from .federation import FLConfig
 from .masking import UnitAssignment
 
 
@@ -29,82 +40,202 @@ class RoundRecord:
     seconds: float
     uplink_bytes: float
     trained_params: float
+    n_participants: int = 0
+    skipped: bool = False
+
+
+class ServerHook:
+    """Override any subset; defaults are no-ops."""
+
+    def on_round_start(self, server: "Server", round_idx: int,
+                       weights: jnp.ndarray) -> Optional[jnp.ndarray]:
+        """Return new weights to reweight/drop clients, or None."""
+        return None
+
+    def on_round_end(self, server: "Server", record: RoundRecord,
+                     metrics: Optional[Dict]) -> None:
+        pass
+
+    def on_fit_end(self, server: "Server",
+                   history: List[RoundRecord]) -> None:
+        pass
+
+
+class StragglerDropout(ServerHook):
+    """Simulated stragglers: each client independently drops with
+    probability ``rate``; dropped clients contribute weight 0.  Draws
+    from the server's key stream (reproducible per server seed)."""
+
+    def __init__(self, rate: float):
+        self.rate = rate
+
+    def on_round_start(self, server, round_idx, weights):
+        keep = jax.random.bernoulli(server.next_key(), 1.0 - self.rate,
+                                    (server.fl.n_clients,))
+        return weights * keep.astype(jnp.float32)
+
+
+class CommAccounting(ServerHook):
+    """Exact per-round transfer accounting (paper Table 4) from the
+    round's selection matrix — fills ``uplink_bytes``/``trained_params``
+    on the record."""
+
+    def on_round_end(self, server, record, metrics):
+        if record.skipped or metrics is None:
+            return
+        sel = np.asarray(metrics["sel"])
+        ub = server.unit_bytes()
+        if sel.shape[1] != server.assign.n_units:
+            # legacy no-assign shim emits a (C, 1) pseudo-unit: the
+            # whole model ships for every client
+            record.uplink_bytes = float(ub.sum()) * sel.shape[0]
+            record.trained_params = float(np.einsum(
+                "u->", comm.unit_param_counts(
+                    server.assign, server.params))) * sel.shape[0]
+            return
+        record.uplink_bytes = comm.hub_round_bytes(sel, ub)["uplink"]
+        record.trained_params = float(np.einsum(
+            "cu,u->", sel,
+            comm.unit_param_counts(server.assign, server.params)))
+
+
+class RoundLogger(ServerHook):
+    """Print a one-line round summary every ``every`` rounds."""
+
+    def __init__(self, every: int = 1, total: Optional[int] = None):
+        self.every = max(1, every)
+        self.total = total
+
+    def on_round_end(self, server, record, metrics):
+        last = self.total is not None and record.round == self.total - 1
+        if record.round % self.every and not last:
+            return
+        line = f"  round {record.round:>4d}"
+        if record.skipped:
+            line += " SKIPPED (all clients dropped)"
+        else:
+            line += f" loss={record.loss:.4f}"
+            if record.eval_metric is not None:
+                line += f" eval={record.eval_metric:.4f}"
+            line += f" uplink={record.uplink_bytes/1e6:.1f}MB"
+        print(line)
+
+
+class Checkpointer(ServerHook):
+    """Persist restartable server state every ``every`` rounds (and at
+    fit end)."""
+
+    def __init__(self, path: str, every: int = 0):
+        self.path = path
+        self.every = every
+
+    def _save(self, server):
+        from ..ckpt import save_server_state
+        save_server_state(self.path, server)
+
+    def on_round_end(self, server, record, metrics):
+        if self.every and (record.round + 1) % self.every == 0:
+            self._save(server)
+
+    def on_fit_end(self, server, history):
+        self._save(server)
 
 
 class Server:
     def __init__(self, round_step: Callable, assign: UnitAssignment,
                  fl: FLConfig, params, *, eval_fn: Optional[Callable] = None,
-                 seed: int = 0, dropout_rate: float = 0.0):
+                 seed: int = 0, dropout_rate: float = 0.0,
+                 hooks: Sequence[ServerHook] = ()):
         self.round_step = jax.jit(round_step)
         self.assign = assign
         self.fl = fl
         self.params = params
         self.eval_fn = eval_fn
         self.key = jax.random.PRNGKey(seed)
-        self.dropout_rate = dropout_rate
+        self.hooks: List[ServerHook] = [CommAccounting()]
+        if dropout_rate > 0.0:
+            self.hooks.append(StragglerDropout(dropout_rate))
+        self.hooks.extend(hooks)
         self.history: List[RoundRecord] = []
         self.sel_history: List[np.ndarray] = []
         self._ubytes = None
 
-    def _unit_bytes(self):
+    def next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def unit_bytes(self) -> np.ndarray:
         if self._ubytes is None:
             self._ubytes = comm.unit_bytes(self.assign, self.params)
         return self._ubytes
+
+    def add_hook(self, hook: ServerHook) -> "Server":
+        self.hooks.append(hook)
+        return self
 
     def run_round(self, client_batches, weights=None) -> RoundRecord:
         """client_batches: pytree with (C, steps, ...) leaves."""
         t0 = time.perf_counter()
         r = len(self.history)
-        self.key, rk = jax.random.split(self.key)
+        rk = self.next_key()
         c = self.fl.n_clients
         if weights is None:
             weights = jnp.ones((c,), jnp.float32)
-        if self.dropout_rate > 0.0:
-            # straggler simulation: dropped clients contribute weight 0
-            self.key, dk = jax.random.split(self.key)
-            keep = jax.random.bernoulli(dk, 1.0 - self.dropout_rate, (c,))
-            weights = weights * keep.astype(jnp.float32)
-        self.params, metrics = self.round_step(self.params, client_batches,
-                                               weights, rk)
-        sel = np.asarray(metrics["sel"])
-        self.sel_history.append(sel)
-        ub = self._unit_bytes()
-        if sel.shape[1] == self.assign.n_units:
-            hub = comm.hub_round_bytes(sel, ub)
-            uplink = hub["uplink"]
-            trained = float(np.einsum(
-                "cu,u->", sel, comm.unit_param_counts(self.assign,
-                                                      self.params)))
-        else:  # full-model baseline records full transfer
-            uplink = float(ub.sum()) * c
-            trained = float(pt.param_count(self.params)) * c
-        ev = None
-        if self.eval_fn is not None:
-            ev = float(self.eval_fn(self.params))
-        rec = RoundRecord(r, float(metrics["loss_mean"]), ev,
-                          time.perf_counter() - t0, uplink, trained)
+        for hook in self.hooks:
+            new_w = hook.on_round_start(self, r, weights)
+            if new_w is not None:
+                weights = new_w
+        n_part = int(np.count_nonzero(np.asarray(weights)))
+        if n_part == 0:
+            # every client dropped: a FedAvg denominator of zero — the
+            # round is a recorded no-op, global params unchanged
+            rec = RoundRecord(r, float("nan"), None,
+                              time.perf_counter() - t0, 0.0, 0.0,
+                              n_participants=0, skipped=True)
+            self.sel_history.append(
+                np.zeros((c, self.assign.n_units), np.float32))
+            metrics = None
+        else:
+            self.params, metrics = self.round_step(
+                self.params, client_batches, weights, rk)
+            self.sel_history.append(np.asarray(metrics["sel"]))
+            ev = None
+            if self.eval_fn is not None:
+                ev = float(self.eval_fn(self.params))
+            rec = RoundRecord(r, float(metrics["loss_mean"]), ev,
+                              time.perf_counter() - t0, 0.0, 0.0,
+                              n_participants=n_part)
+        for hook in self.hooks:
+            hook.on_round_end(self, rec, metrics)
+        rec.seconds = time.perf_counter() - t0
         self.history.append(rec)
         return rec
 
     def run(self, rounds: int, batch_fn: Callable[[int], Any],
             weights=None, log_every: int = 0) -> List[RoundRecord]:
-        for r in range(rounds):
-            rec = self.run_round(batch_fn(r), weights)
-            if log_every and (r % log_every == 0 or r == rounds - 1):
-                print(f"  round {rec.round:>4d} loss={rec.loss:.4f}"
-                      + (f" eval={rec.eval_metric:.4f}"
-                         if rec.eval_metric is not None else "")
-                      + f" uplink={rec.uplink_bytes/1e6:.1f}MB")
+        extra = [RoundLogger(log_every, total=len(self.history) + rounds)] \
+            if log_every else []
+        self.hooks.extend(extra)
+        try:
+            for r in range(rounds):
+                self.run_round(batch_fn(r), weights)
+        finally:
+            for h in extra:
+                self.hooks.remove(h)
+        for hook in self.hooks:
+            hook.on_fit_end(self, self.history)
         return self.history
 
     def comm_summary(self) -> Dict[str, float]:
-        ub = self._unit_bytes()
-        hist = np.stack(self.sel_history) if self.sel_history else \
-            np.zeros((0, self.fl.n_clients, self.assign.n_units))
-        if hist.size and hist.shape[2] == self.assign.n_units:
-            return comm.table4_row(self.assign, self.params, hist)
-        return {"avg_uplink_bytes": float(ub.sum()) * self.fl.n_clients,
-                "avg_trained_params": float(pt.param_count(self.params)),
-                "total_uplink_bytes": float(ub.sum()) * self.fl.n_clients *
-                max(len(self.history), 1),
-                "reduction_vs_full": 0.0}
+        if not self.sel_history:
+            return {"avg_uplink_bytes": 0.0, "avg_trained_params": 0.0,
+                    "total_uplink_bytes": 0.0, "reduction_vs_full": 0.0}
+        hist = np.stack(self.sel_history)
+        if hist.shape[2] != self.assign.n_units:   # legacy no-assign shim
+            per_round = [r.uplink_bytes for r in self.history]
+            return {"avg_uplink_bytes": float(np.mean(per_round)),
+                    "avg_trained_params": float(np.mean(
+                        [r.trained_params for r in self.history])),
+                    "total_uplink_bytes": float(np.sum(per_round)),
+                    "reduction_vs_full": 0.0}
+        return comm.table4_row(self.assign, self.params, hist)

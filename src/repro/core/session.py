@@ -1,0 +1,171 @@
+"""The ``Federation`` facade: one object that owns a federated run.
+
+Every entry point (launcher, example, benchmark) used to re-implement
+the same wiring by hand: model init -> unit assignment -> loader ->
+``build_round_step`` -> ``Server``.  ``Federation.from_config`` does
+that wiring once, for both model worlds:
+
+* a zoo :class:`ArchConfig` (``repro.configs``) — model comes from
+  ``repro.models.get_model``, units from ``build_units_zoo``;
+* a :class:`ModelSpec` — any hand-rolled model (the paper's VGG16 /
+  IMDB / CASA live in ``repro.models.paper_models``), units from
+  ``build_units_flat``.
+
+Usage::
+
+    fed = Federation.from_config(cfg, fl, data=loader, eval_fn=acc)
+    fed.fit(rounds=20, log_every=1)
+    fed.comm_summary()
+
+Strategy selection is the registered-plugin name in ``fl.strategy``
+(see core/strategies.py); pass ``strategy=`` to override with an
+unregistered instance.  Cross-cutting behaviour (straggler dropout,
+checkpointing, logging, custom metrics) attaches as ``ServerHook``s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..data import FederatedLoader
+from .federation import FLConfig, build_round_step
+from .masking import UnitAssignment, build_units_flat, build_units_zoo
+from .server import RoundRecord, Server, ServerHook
+from .strategies import SelectionStrategy
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A model described by plain functions (non-zoo architectures).
+
+    ``unit_order`` is either the explicit freeze-unit order (top-level
+    param keys) or a callable ``params -> order`` (e.g.
+    ``paper_models.vgg16_units``).
+    """
+    name: str
+    init_params: Callable[[Any], PyTree]            # PRNGKey -> params
+    loss_fn: Callable                               # (params, batch) -> (loss, aux)
+    unit_order: Union[Sequence[str], Callable[[PyTree], Sequence[str]]]
+
+
+class Federation:
+    """Owns params, unit assignment, compiled round step, server, data."""
+
+    def __init__(self, *, loss_fn: Callable, params: PyTree,
+                 assign: UnitAssignment, fl: FLConfig,
+                 loader: Optional[FederatedLoader] = None,
+                 eval_fn: Optional[Callable] = None,
+                 loss_kwargs: Optional[Dict] = None, seed: int = 0,
+                 dropout_rate: float = 0.0,
+                 hooks: Sequence[ServerHook] = (),
+                 strategy: Union[str, SelectionStrategy, None] = None,
+                 scores: Optional[jnp.ndarray] = None):
+        self.fl = fl
+        self.assign = assign
+        self.loader = loader
+        round_step = build_round_step(loss_fn, assign, fl, loss_kwargs,
+                                      strategy=strategy, scores=scores)
+        self.server = Server(round_step, assign, fl, params,
+                             eval_fn=eval_fn, seed=seed,
+                             dropout_rate=dropout_rate, hooks=hooks)
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def from_config(cls, cfg, fl: FLConfig, *, data=None, seed: int = 0,
+                    eval_fn: Optional[Callable] = None,
+                    loss_kwargs: Optional[Dict] = None,
+                    batch_size: int = 8, steps_per_round: int = 2,
+                    **kwargs) -> "Federation":
+        """Wire a full federated run from a config.
+
+        ``cfg`` is a zoo ``ArchConfig`` or a :class:`ModelSpec`.
+        ``data`` is a :class:`FederatedLoader`, or a list of per-client
+        array dicts (then ``batch_size``/``steps_per_round`` apply), or
+        None (supply batches to ``run_round`` yourself).
+        Remaining ``kwargs`` go to the constructor (hooks,
+        dropout_rate, strategy, scores).
+        """
+        key = jax.random.PRNGKey(seed)
+        if isinstance(cfg, ModelSpec):
+            params = cfg.init_params(key)
+            order = cfg.unit_order(params) if callable(cfg.unit_order) \
+                else list(cfg.unit_order)
+            assign = build_units_flat(params, order)
+            loss_fn = cfg.loss_fn
+        elif hasattr(cfg, "family"):
+            from ..models import get_model
+            model = get_model(cfg)
+            params = model.init_params(key)
+            assign = build_units_zoo(cfg, params)
+            loss_fn = model.loss_fn
+            if loss_kwargs is None:
+                # CPU-host default; pod launchers pass their own
+                loss_kwargs = {} if cfg.family == "ssm" else \
+                    {"attn_impl": "reference"}
+        else:
+            raise TypeError(
+                f"cfg must be an ArchConfig or ModelSpec, got {type(cfg)}")
+        loader = cls._as_loader(data, batch_size=batch_size,
+                                steps_per_round=steps_per_round, seed=seed)
+        return cls(loss_fn=loss_fn, params=params, assign=assign, fl=fl,
+                   loader=loader, eval_fn=eval_fn, loss_kwargs=loss_kwargs,
+                   seed=seed, **kwargs)
+
+    @staticmethod
+    def _as_loader(data, *, batch_size: int, steps_per_round: int,
+                   seed: int) -> Optional[FederatedLoader]:
+        if data is None or isinstance(data, FederatedLoader):
+            return data
+        return FederatedLoader(list(data), batch_size=batch_size,
+                               steps_per_round=steps_per_round, key=seed)
+
+    # -- the run ----------------------------------------------------------
+
+    def fit(self, rounds: int, *, log_every: int = 0,
+            weights=None) -> List[RoundRecord]:
+        """Run ``rounds`` federated rounds off the attached loader."""
+        if self.loader is None:
+            raise ValueError("Federation has no data attached; pass "
+                             "data= to from_config or use run_round")
+        base = len(self.server.history)
+        if weights is None:
+            weights = jnp.asarray(self.loader.weights())
+        return self.server.run(
+            rounds, lambda r: jax.tree_util.tree_map(
+                jnp.asarray, self.loader.round_batches(base + r)),
+            weights=weights, log_every=log_every)
+
+    def run_round(self, client_batches, weights=None) -> RoundRecord:
+        return self.server.run_round(client_batches, weights)
+
+    def evaluate(self) -> Optional[float]:
+        if self.server.eval_fn is None:
+            return None
+        return float(self.server.eval_fn(self.server.params))
+
+    def comm_summary(self) -> Dict[str, float]:
+        return self.server.comm_summary()
+
+    # -- state ------------------------------------------------------------
+
+    @property
+    def params(self) -> PyTree:
+        return self.server.params
+
+    @property
+    def history(self) -> List[RoundRecord]:
+        return self.server.history
+
+    def save(self, path: str, extra: Optional[Dict] = None) -> None:
+        from ..ckpt import save_server_state
+        save_server_state(path, self.server, extra=extra)
+
+    def restore(self, path: str) -> Dict:
+        from ..ckpt import restore_server_state
+        return restore_server_state(path, self.server)

@@ -1,0 +1,205 @@
+"""Pluggable layer-selection strategies (the paper's Alg. 2 line 3 as a
+plugin point).
+
+A **strategy** decides, per round, which freeze units each client
+trains.  The paper's four variants (random subsets, fixed-last transfer
+learning, weighted selection, full-model baseline) are registered
+plugins here; adding a new one (depth dropout, successive layer
+training, ...) is a subclass + ``@register_strategy`` — no change to
+``federation.py`` or any launcher.
+
+Contract: ``select_row(key, ctx) -> (U,)`` 0/1 float32 over freeze
+units, traced-friendly (the whole federated round compiles as one
+``jit``).  ``n_train`` is static, so masks have static sparsity and the
+comm accounting stays exact.
+
+``Synchronized`` wraps any stochastic strategy so all clients of a
+round share one subset (seeded by the round key) — the beyond-paper
+variant that lets the cross-client collective shrink (core/comm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, Optional, Tuple, Type, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionContext:
+    """Static per-run facts a strategy may consult."""
+    n_clients: int
+    n_units: int
+    n_train: int                       # N_l in the paper
+    scores: Optional[jnp.ndarray] = None   # (U,) per-unit scores (weighted)
+
+
+class SelectionStrategy:
+    """Base class for layer-selection plugins.
+
+    Subclasses set ``name`` and implement ``select_row``.  Flags:
+
+    * ``stochastic`` — row depends on the PRNG key; False means the row
+      is a pure function of the context (fixed_last, full) and is
+      broadcast to all clients.
+    * ``dense`` — every unit is trained every round by construction
+      (the ``full`` baseline).  The round builder uses this to fall back
+      to plain FedAvg + unmasked local training, which is bit-exact
+      with the conventional FedAvg baseline.
+    """
+
+    name: ClassVar[str] = ""
+    stochastic: ClassVar[bool] = True
+    dense: ClassVar[bool] = False
+
+    def select_row(self, key, ctx: SelectionContext) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def select(self, key, ctx: SelectionContext) -> jnp.ndarray:
+        """(C, U) selection matrix for one round.
+
+        Stochastic strategies fold each client's index into the round
+        key (paper semantics: independent per-client selection);
+        deterministic ones broadcast a single row.
+        """
+        if not self.stochastic:
+            row = self.select_row(key, ctx)
+            return jnp.broadcast_to(row, (ctx.n_clients, ctx.n_units))
+        keys = jax.random.split(key, ctx.n_clients)
+        return jax.vmap(lambda k: self.select_row(k, ctx))(keys)
+
+    def __repr__(self):
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+class Synchronized(SelectionStrategy):
+    """All clients of a round share the inner strategy's subset."""
+
+    def __init__(self, inner: "SelectionStrategy"):
+        self.inner = inner
+        self.name = f"synchronized({inner.name})"
+
+    @property
+    def dense(self):                       # type: ignore[override]
+        return self.inner.dense
+
+    def select_row(self, key, ctx):
+        return self.inner.select_row(key, ctx)
+
+    def select(self, key, ctx):
+        row = self.inner.select_row(key, ctx)
+        return jnp.broadcast_to(row, (ctx.n_clients, ctx.n_units))
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+_REGISTRY: Dict[str, SelectionStrategy] = {}
+
+
+class UnknownStrategyError(ValueError):
+    pass
+
+
+def register_strategy(obj: Union[Type[SelectionStrategy], SelectionStrategy],
+                      *, name: Optional[str] = None):
+    """Register a strategy class (instantiated with no args) or instance.
+
+    Usable as a decorator::
+
+        @register_strategy
+        class Mine(SelectionStrategy):
+            name = "mine"
+            ...
+    """
+    strat = obj() if isinstance(obj, type) else obj
+    key = name or strat.name
+    if not key:
+        raise ValueError(f"strategy {obj!r} has no name")
+    _REGISTRY[key] = strat
+    return obj
+
+
+def unregister_strategy(name: str):
+    _REGISTRY.pop(name, None)
+
+
+def registered_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_strategy(name: str) -> SelectionStrategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownStrategyError(
+            f"unknown selection strategy {name!r}; registered: "
+            f"{', '.join(registered_strategies())}") from None
+
+
+def resolve_strategy(spec: Union[str, SelectionStrategy],
+                     synchronized: bool = False) -> SelectionStrategy:
+    """Name or instance -> instance, optionally wrapped in Synchronized."""
+    strat = get_strategy(spec) if isinstance(spec, str) else spec
+    if synchronized and not isinstance(strat, Synchronized) \
+            and strat.stochastic:
+        strat = Synchronized(strat)
+    return strat
+
+
+# ---------------------------------------------------------------------------
+# built-in strategies (the paper's family)
+
+@register_strategy
+class Uniform(SelectionStrategy):
+    """Exactly n_train units, uniformly at random per client (paper)."""
+    name = "uniform"
+
+    def select_row(self, key, ctx):
+        perm = jax.random.permutation(key, ctx.n_units)
+        return (perm < ctx.n_train).astype(jnp.float32)
+
+
+@register_strategy
+class FixedLast(SelectionStrategy):
+    """Transfer-learning baseline: always the last n_train units."""
+    name = "fixed_last"
+    stochastic = False
+
+    def select_row(self, key, ctx):
+        return (jnp.arange(ctx.n_units) >=
+                ctx.n_units - ctx.n_train).astype(jnp.float32)
+
+
+@register_strategy
+class Weighted(SelectionStrategy):
+    """Top-n_train by perturbed score (Gumbel top-k ∝ softmax(scores)).
+
+    ``ctx.scores`` defaults to all-zeros, which degenerates to uniform
+    sampling — so the strategy is usable before any score signal (e.g.
+    gradient norms) is wired in.
+    """
+    name = "weighted"
+
+    def select_row(self, key, ctx):
+        scores = ctx.scores if ctx.scores is not None \
+            else jnp.zeros((ctx.n_units,))
+        g = jax.random.gumbel(key, (ctx.n_units,))
+        ranked = jnp.argsort(-(scores + g))
+        return jnp.zeros(ctx.n_units).at[ranked[:ctx.n_train]].set(1.0)
+
+
+@register_strategy
+class Full(SelectionStrategy):
+    """Conventional FedAvg baseline: every unit trained by every client."""
+    name = "full"
+    stochastic = False
+    dense = True
+
+    def select_row(self, key, ctx):
+        return jnp.ones((ctx.n_units,), jnp.float32)
+
+
+# the beyond-paper synchronized variant as a named plugin of its own
+register_strategy(Synchronized(Uniform()), name="synchronized")

@@ -3,31 +3,26 @@ scale; on a pod the same code runs under the production mesh).
 
     PYTHONPATH=src python -m repro.launch.train \
         --arch qwen3-1.7b --reduced --clients 4 --rounds 20 \
-        --train-fraction 0.5 [--strategy uniform|fixed_last|full]
+        --train-fraction 0.5 [--strategy uniform|fixed_last|weighted|full]
         [--synchronized] [--ckpt results/ck/run1]
 
-Drives the paper's federated round (random per-client layer subsets,
-masked local Adam, participation-weighted FedAvg) over synthetic LM data
-partitioned IID across clients.
+Drives the paper's federated round (per-client layer subsets from the
+registered strategy, masked local Adam, participation-weighted FedAvg)
+over synthetic LM data partitioned IID across clients — all through the
+``Federation`` facade.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import get_config, list_configs
-from ..core import FLConfig, build_round_step, build_units_zoo
-from ..core.freezing import n_train_from_fraction
-from ..core.server import Server
+from ..core import (Checkpointer, FLConfig, Federation,
+                    registered_strategies)
 from ..data import FederatedLoader, iid_partition, lm_batch
-from ..models import get_model
-from ..ckpt import save_server_state
 
 
 def main():
@@ -39,7 +34,7 @@ def main():
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--train-fraction", type=float, default=0.5)
     ap.add_argument("--strategy", default="uniform",
-                    choices=["uniform", "fixed_last", "weighted", "full"])
+                    choices=registered_strategies())
     ap.add_argument("--synchronized", action="store_true")
     ap.add_argument("--fedprox-mu", type=float, default=0.0)
     ap.add_argument("--dropout", type=float, default=0.0)
@@ -54,14 +49,6 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    model = get_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init_params(key)
-    assign = build_units_zoo(cfg, params)
-    n_train = n_train_from_fraction(assign.n_units, args.train_fraction)
-    print(f"arch={cfg.name} reduced={args.reduced} units={assign.n_units} "
-          f"train={n_train} clients={args.clients}")
-
     n = args.clients * args.batch_size * args.steps_per_round * 8
     data = lm_batch(n, args.seq, cfg.vocab, key=args.seed)
     if cfg.family == "vlm":
@@ -77,21 +64,23 @@ def main():
                              batch_size=args.batch_size,
                              steps_per_round=args.steps_per_round,
                              key=args.seed)
-    fl = FLConfig(n_clients=args.clients, n_train_units=n_train,
+
+    fl = FLConfig(n_clients=args.clients,
+                  train_fraction=args.train_fraction,
                   strategy=args.strategy, synchronized=args.synchronized,
                   lr=args.lr, prox_mu=args.fedprox_mu)
-    srv = Server(build_round_step(model.loss_fn, assign, fl,
-                                  loss_kwargs={"attn_impl": "reference"}),
-                 assign, fl, params, seed=args.seed,
-                 dropout_rate=args.dropout)
+    hooks = [Checkpointer(args.ckpt)] if args.ckpt else []
+    fed = Federation.from_config(cfg, fl, data=loader, seed=args.seed,
+                                 dropout_rate=args.dropout, hooks=hooks)
+    print(f"arch={cfg.name} reduced={args.reduced} "
+          f"units={fed.assign.n_units} "
+          f"train={fl.resolve_n_train(fed.assign.n_units)} "
+          f"clients={args.clients}")
     t0 = time.time()
-    srv.run(args.rounds, lambda r: jax.tree_util.tree_map(
-        jnp.asarray, loader.round_batches(r)),
-        weights=jnp.asarray(loader.weights()), log_every=1)
+    fed.fit(args.rounds, log_every=1)
     print(f"total {time.time()-t0:.1f}s; comm summary:")
-    print(json.dumps(srv.comm_summary(), indent=1))
+    print(json.dumps(fed.comm_summary(), indent=1))
     if args.ckpt:
-        save_server_state(args.ckpt, srv)
         print(f"saved server state to {args.ckpt}")
 
 

@@ -126,10 +126,18 @@ def _rank_within(keys, n_keys):
 
 def apply_moe_tp_local(p, x, mcfg, *, act: str = "silu",
                        capacity_factor=None,
-                       axis_name: str = "model", data_axes=()):
+                       axis_name: str = "model", data_axes=(),
+                       data_shards: int = 1):
     """Runs INSIDE shard_map.  x (B_loc, S, d) replicated over axis_name;
     p['w_*'] (E_loc, d, ff) = this rank's expert shard; p['router'] (d, E)
-    replicated.  Returns (y (B_loc,S,d) [psum-combined], aux scalar)."""
+    replicated.  Returns (y (B_loc,S,d) [psum-combined], aux scalar).
+
+    ``data_shards`` is the static size of ``data_axes``: the per-expert
+    capacity must be budgeted from the GLOBAL token count so a data
+    shard never drops a token the unsharded reference keeps.  The cost
+    is that dispatch buffers scale with the global (not local) batch —
+    deliberate: equivalence with ``apply_moe`` over memory; pass an
+    explicit ``capacity_factor`` to trade back."""
     b, s, d = x.shape
     e = mcfg.num_experts
     k = mcfg.top_k
@@ -137,7 +145,7 @@ def apply_moe_tp_local(p, x, mcfg, *, act: str = "silu",
     t = b * s
     if capacity_factor is None:
         capacity_factor = getattr(mcfg, "capacity_factor", 1.25)
-    cap = capacity_for(t, e, k, capacity_factor)
+    cap = capacity_for(t * data_shards, e, k, capacity_factor)
     xf = x.reshape(t, d)
 
     logits = (xf @ p["router"]).astype(jnp.float32)
@@ -197,14 +205,24 @@ def apply_moe_sharded(p, x, mcfg, *, act: str = "silu", mesh,
         "w_up": P("model", None, None),
         "w_down": P("model", None, None),
     }
+    sharded_tokens = x_spec[0] is not None
     fn = functools.partial(apply_moe_tp_local, mcfg=mcfg, act=act,
                            capacity_factor=capacity_factor,
                            axis_name="model",
-                           data_axes=dp if x_spec[0] is not None else ())
-    mapped = jax.shard_map(
+                           data_axes=dp if sharded_tokens else (),
+                           data_shards=int(np.prod(
+                               [mesh.shape[a] for a in dp]))
+                           if sharded_tokens else 1)
+    try:                                    # jax >= 0.6 top-level API
+        _shard_map = jax.shard_map
+        extra = {"check_vma": False}
+    except AttributeError:                  # jax 0.4.x
+        from jax.experimental.shard_map import shard_map as _shard_map
+        extra = {"check_rep": False}
+    mapped = _shard_map(
         lambda pp, xx: fn(pp, xx),
         mesh=mesh, in_specs=(p_specs, x_spec),
-        out_specs=(x_spec, P()), check_vma=False)
+        out_specs=(x_spec, P()), **extra)
     return mapped(p, x)
 
 

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 gate + dry-run smoke.
+#
+#   ./test.sh              # pytest (8 fake CPU devices) + dryrun smoke
+#   ./test.sh --fast       # pytest only
+#   ./test.sh -k pattern   # extra args forwarded to pytest
+#
+# XLA_FLAGS forces 8 host devices so the multi-device pjit paths are
+# exercised on CPU; launch/dryrun subprocesses override it themselves
+# (they need 512).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+
+FAST=0
+ARGS=()
+for a in "$@"; do
+  if [[ "$a" == "--fast" ]]; then FAST=1; else ARGS+=("$a"); fi
+done
+
+python -m pytest -q "${ARGS[@]+"${ARGS[@]}"}"
+
+if [[ "$FAST" == "0" ]]; then
+  # one representative (arch x shape x mesh) dry-run as a smoke gate
+  python -m benchmarks.run_dryrun_all --mesh single \
+    --archs qwen3-1.7b --shapes train_4k --timeout 900 \
+    --out results/dryrun-smoke
+fi

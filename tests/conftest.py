@@ -5,12 +5,24 @@ import sys
 # confined to launch/dryrun.py subprocesses — see the dry-run contract).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # offline container: fall back to the deterministic stub
+    import _hypothesis_stub
+    _hypothesis_stub.install()
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import get_config, list_configs
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running subprocess/compile tests")
 
 
 @pytest.fixture(scope="session")

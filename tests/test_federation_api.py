@@ -1,0 +1,214 @@
+"""The redesigned federation API: strategy registry, Federation facade,
+server hooks, legacy shims.
+
+Covers the migration guarantees: the ``full`` registered strategy on the
+unified path is bit-exact with the old dedicated full-model round step;
+custom strategies round-trip through ``Federation.from_config``; unknown
+names fail with the registered list; an all-dropped round is a recorded
+no-op.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FLConfig, Federation, ModelSpec, SelectionStrategy,
+                        Server, ServerHook, UnknownStrategyError,
+                        build_fullmodel_round_step, build_round_step,
+                        build_units_flat, get_strategy, register_strategy,
+                        registered_strategies, unregister_strategy)
+from repro.core.aggregation import fedavg
+from repro.core.client import local_update
+from repro.data import FederatedLoader, cifar_like, iid_partition
+from repro.models import paper_models as pm
+
+
+def vgg_loss(p, batch):
+    return pm.xent_loss(pm.vgg16_apply(p, batch["x"]), batch["y"]), {}
+
+
+def _vgg_setup(rng, c=3, steps=2, bs=4):
+    params = pm.init_vgg16(rng, width_mult=0.125)
+    assign = build_units_flat(params, pm.vgg16_units(params))
+    x, y = cifar_like(c * steps * bs, key=0)
+    batches = {
+        "x": jnp.asarray(x).reshape(c, steps, bs, 32, 32, 3),
+        "y": jnp.asarray(y).reshape(c, steps, bs),
+    }
+    return params, assign, batches
+
+
+def _spec(width=0.125):
+    return ModelSpec(
+        name="vgg16",
+        init_params=functools.partial(pm.init_vgg16, width_mult=width),
+        loss_fn=vgg_loss, unit_order=pm.vgg16_units)
+
+
+def _loader(c=3, n=96):
+    x, y = cifar_like(n, key=0)
+    shards = iid_partition(n, c, key=1)
+    return FederatedLoader([{"x": x[s], "y": y[s]} for s in shards],
+                           batch_size=4, steps_per_round=2)
+
+
+def _legacy_fullmodel_round_step(loss_fn, fl, loss_kwargs=None):
+    """Verbatim re-implementation of the deleted dedicated full-model
+    path (conventional FedAvg baseline) — the bit-exactness oracle."""
+
+    def round_step(global_params, client_batches, weights, round_key):
+        ones_mask = jax.tree_util.tree_map(
+            lambda x: jnp.ones((), jnp.float32), global_params)
+
+        def one_client(batches):
+            return local_update(loss_fn, global_params, ones_mask, batches,
+                                lr=fl.lr, optimizer=fl.optimizer,
+                                loss_kwargs=loss_kwargs)
+
+        deltas, metrics = jax.vmap(one_client)(client_batches)
+        new_params = fedavg(global_params, deltas, weights)
+        return new_params, {"loss_mean": metrics["loss_mean"].mean(),
+                            "sel": jnp.ones((fl.n_clients, 1))}
+
+    return round_step
+
+
+def _assert_trees_bitexact(a, b):
+    for pa, pb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(pa), np.asarray(pb)), \
+            "params diverged bitwise"
+
+
+def test_full_strategy_bitexact_with_legacy_path(rng):
+    params, assign, batches = _vgg_setup(rng)
+    fl = FLConfig(n_clients=3, n_train_units=assign.n_units, lr=1e-3,
+                  strategy="full")
+    unified = jax.jit(build_round_step(vgg_loss, assign, fl))
+    legacy = jax.jit(_legacy_fullmodel_round_step(vgg_loss, fl))
+    w = jnp.asarray([1.0, 2.0, 1.0])
+    key = jax.random.PRNGKey(7)
+    p1, m1 = unified(params, batches, w, key)
+    p2, m2 = legacy(params, batches, w, key)
+    _assert_trees_bitexact(p1, p2)
+    assert float(m1["loss_mean"]) == float(m2["loss_mean"])
+    # unified path reports the full-width selection matrix
+    assert m1["sel"].shape == (3, assign.n_units)
+    assert float(jnp.asarray(m1["sel"]).min()) == 1.0
+
+
+def test_fullmodel_shim_deprecated_and_equivalent(rng):
+    params, assign, batches = _vgg_setup(rng)
+    fl = FLConfig(n_clients=3, n_train_units=assign.n_units, lr=1e-3)
+    with pytest.warns(DeprecationWarning):
+        shim = jax.jit(build_fullmodel_round_step(vgg_loss, fl,
+                                                  assign=assign))
+    unified = jax.jit(build_round_step(
+        vgg_loss, assign, dataclasses.replace(fl, strategy="full")))
+    w = jnp.ones(3)
+    key = jax.random.PRNGKey(3)
+    p1, _ = shim(params, batches, w, key)
+    p2, _ = unified(params, batches, w, key)
+    _assert_trees_bitexact(p1, p2)
+
+
+def test_custom_strategy_roundtrips_through_federation():
+    @register_strategy
+    class EveryOther(SelectionStrategy):
+        name = "_test_every_other"
+        stochastic = False
+
+        def select_row(self, key, ctx):
+            return (jnp.arange(ctx.n_units) % 2 == 0).astype(jnp.float32)
+
+    try:
+        assert "_test_every_other" in registered_strategies()
+        fed = Federation.from_config(
+            _spec(), FLConfig(n_clients=3, n_train_units=7, lr=1e-3,
+                              strategy="_test_every_other"),
+            data=_loader())
+        fed.fit(2)
+        assert len(fed.history) == 2
+        expected = (np.arange(fed.assign.n_units) % 2 == 0).astype(float)
+        for sel in fed.server.sel_history:
+            assert np.array_equal(sel, np.tile(expected, (3, 1)))
+    finally:
+        unregister_strategy("_test_every_other")
+    assert "_test_every_other" not in registered_strategies()
+
+
+def test_unknown_strategy_lists_registered_names(rng):
+    with pytest.raises(UnknownStrategyError, match="uniform"):
+        get_strategy("does_not_exist")
+    params, assign, _ = _vgg_setup(rng)
+    with pytest.raises(UnknownStrategyError, match="fixed_last"):
+        build_round_step(vgg_loss, assign,
+                         FLConfig(n_clients=3, n_train_units=4,
+                                  strategy="does_not_exist"))
+
+
+def test_all_clients_dropped_is_recorded_noop(rng):
+    params, assign, batches = _vgg_setup(rng)
+    fl = FLConfig(n_clients=3, n_train_units=4, lr=1e-3)
+    srv = Server(build_round_step(vgg_loss, assign, fl), assign, fl, params)
+    before = jax.tree_util.tree_map(np.asarray, srv.params)
+    rec = srv.run_round(batches, weights=jnp.zeros(3))
+    assert rec.skipped and rec.n_participants == 0
+    assert rec.uplink_bytes == 0.0 and rec.trained_params == 0.0
+    _assert_trees_bitexact(srv.params, before)
+    # the server recovers on the next (participating) round
+    rec2 = srv.run_round(batches, weights=jnp.ones(3))
+    assert not rec2.skipped and np.isfinite(rec2.loss)
+    assert rec2.round == 1 and rec2.n_participants == 3
+
+
+def test_federation_facade_end_to_end():
+    loader = _loader()
+    xt, yt = cifar_like(48, key=5)
+    fed = Federation.from_config(
+        _spec(), FLConfig(n_clients=3, train_fraction=0.5, lr=1e-3),
+        data=loader,
+        eval_fn=lambda p: pm.accuracy(pm.vgg16_apply(
+            p, jnp.asarray(xt)), jnp.asarray(yt)))
+    hist = fed.fit(3)
+    assert len(hist) == 3
+    assert all(r.n_participants == 3 for r in hist)
+    assert fed.evaluate() is not None
+    summ = fed.comm_summary()
+    assert 0.0 < summ["reduction_vs_full"] < 1.0
+    # 50% of 14 units selected per client per round
+    assert all(s.sum(axis=1).max() == 7 for s in fed.server.sel_history)
+
+
+def test_synchronized_registered_plugin():
+    fed = Federation.from_config(
+        _spec(), FLConfig(n_clients=4, n_train_units=5, lr=1e-3,
+                          strategy="synchronized"),
+        data=_loader(c=4))
+    fed.fit(1)
+    sel = fed.server.sel_history[0]
+    assert np.ptp(sel, axis=0).max() == 0      # all clients share the row
+    assert sel.sum(axis=1).max() == 5
+
+
+def test_hooks_compose(rng):
+    params, assign, batches = _vgg_setup(rng)
+    calls = []
+
+    class Recorder(ServerHook):
+        def on_round_start(self, server, r, weights):
+            calls.append(("start", r))
+            return weights * 2.0                 # reweighting is honored
+
+        def on_round_end(self, server, record, metrics):
+            calls.append(("end", record.round, record.uplink_bytes > 0))
+
+    fl = FLConfig(n_clients=3, n_train_units=4, lr=1e-3)
+    srv = Server(build_round_step(vgg_loss, assign, fl), assign, fl,
+                 params, hooks=[Recorder()])
+    srv.run(2, lambda r: batches)
+    assert calls == [("start", 0), ("end", 0, True),
+                     ("start", 1), ("end", 1, True)]
