@@ -19,13 +19,15 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.launch import roofline, specs
 from repro.launch.dryrun import build_jitted, depth_variants, param_counts
-from repro.launch.mesh import make_fl_mesh, make_production_mesh
+from repro.launch.mesh import (make_fl_mesh, make_hier_fl_mesh,
+                               make_production_mesh)
 from repro.launch.shapes import SHAPES
 
 
 def measure(arch, shape_name, step_kind, *, layout, mesh=None,
             remat=True, fl_synchronized=False, fl_fraction=0.5,
-            cfg_overrides=None, loss_overrides=None, label=""):
+            fl_topology="hub", cfg_overrides=None, loss_overrides=None,
+            label=""):
     cfg = get_config(arch)
     if cfg_overrides:
         cfg = cfg.replace(**cfg_overrides)
@@ -38,7 +40,8 @@ def measure(arch, shape_name, step_kind, *, layout, mesh=None,
     j, a, tokens, train, _ = build_jitted(
         cfg, shape, step_kind, mesh, layout, unroll=False, remat=remat,
         fl_synchronized=fl_synchronized, fl_fraction=fl_fraction,
-        fl_clients=fl_clients, loss_overrides=loss_overrides)
+        fl_clients=fl_clients, fl_topology=fl_topology,
+        loss_overrides=loss_overrides)
     with mesh:
         comp = j.lower(*a).compile()
     ma = roofline.memory_analysis_terms(comp)
@@ -50,7 +53,8 @@ def measure(arch, shape_name, step_kind, *, layout, mesh=None,
         j2, a2, _, _, _ = build_jitted(
             c, shape, step_kind, mesh, layout, unroll=True, remat=remat,
             fl_synchronized=fl_synchronized, fl_fraction=fl_fraction,
-            fl_clients=fl_clients, loss_overrides=loss_overrides)
+            fl_clients=fl_clients, fl_topology=fl_topology,
+            loss_overrides=loss_overrides)
         with mesh:
             comp2 = j2.lower(*a2).compile()
         acct.append((roofline.cost_analysis_terms(comp2),
@@ -158,6 +162,25 @@ def fl_round():
         out.append(measure("qwen3-1.7b", "train_4k", "fl_round",
                            layout="tp", mesh=mesh, fl_synchronized=sync,
                            fl_fraction=frac, label=label))
+    return out
+
+
+@pair("fl_topology")
+def fl_topology():
+    """Topology plugins at pod scale: the same 50% uniform selection
+    compiled under the hub star, hierarchical edge aggregation (the
+    edge axis carve-out keeps intra-edge reduces on local interconnect)
+    and ring gossip (per-client replicas, no global model)."""
+    out = [measure("qwen3-1.7b", "train_4k", "fl_round", layout="tp",
+                   mesh=make_fl_mesh(16), fl_topology="hub",
+                   label="fl 50% hub (star, paper)")]
+    out.append(measure("qwen3-1.7b", "train_4k", "fl_round", layout="tp",
+                       mesh=make_hier_fl_mesh(4, 16),
+                       fl_topology="hierarchical",
+                       label="fl 50% hierarchical (4 edges)"))
+    out.append(measure("qwen3-1.7b", "train_4k", "fl_round", layout="tp",
+                       mesh=make_fl_mesh(16), fl_topology="gossip",
+                       label="fl 50% gossip (ring replicas)"))
     return out
 
 

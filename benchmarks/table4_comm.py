@@ -1,8 +1,17 @@
 """Paper Table 4: transferred data size / trainable params per round,
 10 clients, 4/7/10/14 trained VGG16 layers — EXACT accounting on the
-paper's exact VGG16 (14,736,714 params)."""
+paper's exact VGG16 (14,736,714 params).
+
+``--topology`` sweeps the registered federation topologies
+(core/topology.py): ``hub`` reproduces the paper's numbers;
+``hierarchical`` additionally reports the edge->hub WAN uplink (per-edge
+selection unions — strictly below the flat-hub uplink whenever edges
+hold >1 client); ``gossip`` shows why partial freezing cannot shrink
+peer-exchange traffic.  ``all`` sweeps every topology.
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -17,29 +26,37 @@ from .common import csv_row
 PAPER = {4: (34.88e6, 133.1e6), 7: (67.92e6, 259.1e6),
          10: (101.3e6, 386.5e6), 14: (147.2e6, 561.6e6)}
 
+CLIENTS = 10
+N_EDGES = 2
 
-def run(fast: bool = True):
-    t0 = time.perf_counter()
+
+def _setup():
     p = pm.init_vgg16(jax.random.PRNGKey(0))
     assign = build_units_flat(p, pm.vgg16_units(p))
-    counts = unit_param_counts(assign, p)
-    ub = comm.unit_bytes(assign, p)
+    return assign, unit_param_counts(assign, p), comm.unit_bytes(assign, p)
+
+
+def _sel_history(n, rounds, n_units):
+    return [np.asarray(freezing.select_clients(
+        jax.random.PRNGKey(1000 * n + r), CLIENTS, n_units, n))
+        for r in range(rounds)]
+
+
+def run_hub(fast: bool = True):
+    t0 = time.perf_counter()
+    assign, counts, ub = _setup()
     rounds = 100 if fast else 500
-    clients = 10
     print("# Table 4 reproduction (avg over "
-          f"{rounds} rounds x {clients} clients, 4 B/param)")
+          f"{rounds} rounds x {CLIENTS} clients, 4 B/param)")
     print("# layers, avg_trained_params(M), paper_params(M), "
           "avg_uplink(MB), paper_uplink(MB), reduction_vs_full")
     for n in (4, 7, 10, 14):
         tp, tb = [], []
-        for r in range(rounds):
-            sel = np.asarray(freezing.select_clients(
-                jax.random.PRNGKey(1000 * n + r), clients,
-                assign.n_units, n))
+        for sel in _sel_history(n, rounds, assign.n_units):
             tp.append((sel @ counts).sum())
-            tb.append((sel @ ub).sum())
+            tb.append(comm.hub_round_bytes(sel, ub)["uplink"])
         mp, mb = np.mean(tp), np.mean(tb)
-        red = 1 - mb / (ub.sum() * clients)
+        red = 1 - mb / (ub.sum() * CLIENTS)
         pp, pb = PAPER[n]
         print(f"{n},{mp/1e6:.2f},{pp/1e6:.2f},{mb/1e6:.1f},{pb/1e6:.1f},"
               f"{red:.3f}")
@@ -48,5 +65,66 @@ def run(fast: bool = True):
             "reduction@25pct~0.71(paper 0.75) @50pct~0.50(paper 0.53)")
 
 
+def run_hierarchical(fast: bool = True):
+    """Beyond-paper: the same selections under edge aggregation.  The
+    WAN (edge->hub) term carries only per-edge selection unions, so it
+    sits strictly below the flat-hub uplink at the paper's settings."""
+    t0 = time.perf_counter()
+    assign, counts, ub = _setup()
+    rounds = 100 if fast else 500
+    mem = comm.edge_membership(CLIENTS, N_EDGES)
+    print(f"# hierarchical topology ({N_EDGES} edges x "
+          f"{CLIENTS // N_EDGES} clients, avg over {rounds} rounds)")
+    print("# layers, flat_hub_uplink(MB), client_edge(MB), "
+          "edge_hub_WAN(MB), wan_vs_flat")
+    for n in (4, 7, 10, 14):
+        flat, lan, wan = [], [], []
+        for sel in _sel_history(n, rounds, assign.n_units):
+            flat.append(comm.hub_round_bytes(sel, ub)["uplink"])
+            d = comm.hierarchical_round_bytes(sel, ub, mem)
+            lan.append(d["client_edge_uplink"])
+            wan.append(d["edge_hub_uplink"])
+        mf, ml, mw = np.mean(flat), np.mean(lan), np.mean(wan)
+        assert n == assign.n_units or mw < mf, \
+            f"edge->hub WAN {mw} not below flat hub {mf} at {n} layers"
+        print(f"{n},{mf/1e6:.1f},{ml/1e6:.1f},{mw/1e6:.1f},{mw/mf:.3f}")
+    dt = (time.perf_counter() - t0) * 1e6 / (4 * rounds)
+    csv_row("table4_comm_hierarchical", dt,
+            f"edge->hub WAN < flat hub at 25%/50% ({N_EDGES} edges)")
+
+
+def run_gossip(fast: bool = True):
+    t0 = time.perf_counter()
+    assign, counts, ub = _setup()
+    rounds = 20 if fast else 100
+    print(f"# gossip topology (ring, {CLIENTS} peers, "
+          f"avg over {rounds} rounds)")
+    print("# layers, flat_hub_uplink(MB), gossip_peer_bytes(MB), ratio")
+    for n in (4, 7, 14):
+        flat, peer = [], []
+        for sel in _sel_history(n, rounds, assign.n_units):
+            flat.append(comm.hub_round_bytes(sel, ub)["uplink"])
+            peer.append(comm.gossip_round_bytes(sel, ub)["peer_bytes"])
+        mf, mg = np.mean(flat), np.mean(peer)
+        print(f"{n},{mf/1e6:.1f},{mg/1e6:.1f},{mg/mf:.2f}")
+    dt = (time.perf_counter() - t0) * 1e6 / (3 * rounds)
+    csv_row("table4_comm_gossip", dt,
+            "freezing does not shrink peer-exchange traffic")
+
+
+TOPOLOGIES = {"hub": run_hub, "hierarchical": run_hierarchical,
+              "gossip": run_gossip}
+
+
+def run(fast: bool = True, topology: str = "hub"):
+    for name in (TOPOLOGIES if topology == "all" else [topology]):
+        TOPOLOGIES[name](fast)
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topology", default="all",
+                    choices=sorted(TOPOLOGIES) + ["all"])
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(fast=not args.full, topology=args.topology)

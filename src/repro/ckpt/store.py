@@ -61,6 +61,7 @@ def save_server_state(path: str, server, extra: Optional[Dict] = None):
     meta = {
         "round": len(server.history),
         "history": [vars(r) for r in server.history],
+        "sel_history": [np.asarray(s).tolist() for s in server.sel_history],
         "key": np.asarray(jax.random.key_data(server.key)).tolist()
         if hasattr(jax.random, "key_data") else np.asarray(server.key).tolist(),
     }
@@ -69,6 +70,22 @@ def save_server_state(path: str, server, extra: Optional[Dict] = None):
 
 
 def restore_server_state(path: str, server):
+    """Restore params (= topology state), history, selection history and
+    the RNG stream, so a resumed ``fit`` continues bit-exactly: the next
+    round's key, loader base and log cadence all pick up where the saved
+    run stopped."""
     server.params = load_pytree(path, server.params)
     meta = load_metadata(path)
+    if "history" in meta:
+        from ..core.server import RoundRecord
+        server.history = [RoundRecord(**r) for r in meta["history"]]
+    if "sel_history" in meta:
+        server.sel_history = [np.asarray(s, np.float32)
+                              for s in meta["sel_history"]]
+    if "key" in meta:
+        kd = np.asarray(meta["key"], np.uint32)
+        typed = (hasattr(jax.dtypes, "prng_key") and
+                 jnp.issubdtype(server.key.dtype, jax.dtypes.prng_key))
+        server.key = jax.random.wrap_key_data(kd) if typed \
+            else jnp.asarray(kd, server.key.dtype)
     return meta

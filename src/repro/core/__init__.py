@@ -1,17 +1,18 @@
 """The paper's contribution: federated partial-layer freezing (FedPLF).
 
 strategies — pluggable layer-selection strategies + registry (Alg. 2 line 3)
+topology   — pluggable federation topologies + registry (hub/hierarchical/gossip)
 freezing   — functional wrappers over the strategy registry
 masking    — freeze units over param pytrees, mask trees
-aggregation— FedAvg / participation-weighted masked FedAvg
+aggregation— FedAvg / participation-weighted masked FedAvg (flat + two-stage)
 client     — ClientUpdate (Alg. 2): masked local training
 federation — the compiled federated round step
 server     — round orchestration (Alg. 1) + composable ServerHooks
 session    — the Federation facade (from_config -> fit/evaluate/comm)
-comm       — exact transfer-byte accounting (Table 4)
+comm       — exact transfer-byte accounting (Table 4), per topology
 """
 from . import (freezing, masking, aggregation, client, federation, server,  # noqa: F401
-               comm, strategies, session)
+               comm, strategies, session, topology)
 from .federation import FLConfig, build_round_step, build_fullmodel_round_step  # noqa: F401
 from .masking import build_units, build_units_zoo, build_units_flat, mask_tree, apply_mask, UnitAssignment  # noqa: F401
 from .session import Federation, ModelSpec  # noqa: F401
@@ -21,3 +22,7 @@ from .strategies import (SelectionStrategy, SelectionContext, Synchronized,  # n
                          register_strategy, unregister_strategy,
                          registered_strategies, get_strategy,
                          resolve_strategy, UnknownStrategyError)
+from .topology import (Topology, register_topology, unregister_topology,  # noqa: F401
+                       registered_topologies, get_topology,
+                       resolve_topology, UnknownTopologyError,
+                       ring_mixing_matrix)

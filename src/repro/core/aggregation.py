@@ -5,6 +5,13 @@
   clients ship disjoint layer subsets, each unit averages only over the
   clients that trained it (the paper's "minor modifications to the FEDn
   aggregation server").  Units nobody trained keep the global value.
+* ``hierarchical_masked_fedavg`` — the same average computed in two
+  genuine stages: per-edge partial numerator/denominator sums (each edge
+  aggregator reduces its own clients), then a hub combine over edges.
+  Partial weighted sums are associative, so the result matches the flat
+  hub average up to reduce ordering — but the staging is real: only the
+  per-edge partial aggregates (one slot per unit some edge client
+  trained) cross the edge->hub boundary (core/comm.py accounts this).
 * ``fedprox`` client proximal term lives in core/client.py.
 
 All functions take client deltas stacked along a leading client axis
@@ -59,6 +66,49 @@ def masked_fedavg(global_params, deltas, sel, weights,
         num = jnp.tensordot(wm, d.astype(jnp.float32), axes=(0, 0)) \
             if m.ndim == 1 else \
             jnp.einsum("cm,cm...->m...", wm, d.astype(jnp.float32))
+        denom_b = jnp.reshape(denom, jnp.shape(denom) +
+                              (1,) * (num.ndim - jnp.ndim(denom)))
+        upd = jnp.where(denom_b > 0, num / jnp.maximum(denom_b, 1e-9), 0.0)
+        return (g.astype(jnp.float32) + upd).astype(g.dtype)
+
+    from .masking import _is_leafunit
+    return jax.tree_util.tree_map(one, assign.leaf_units, global_params,
+                                  deltas, is_leaf=_is_leafunit)
+
+
+def hierarchical_masked_fedavg(global_params, deltas, sel, weights,
+                               assign: UnitAssignment,
+                               membership: jnp.ndarray) -> PyTree:
+    """Two-stage participation-weighted FedAvg (edge aggregators -> hub).
+
+    membership (E, C) 0/1: client c belongs to edge e (each client to
+    exactly one edge).  Stage 1 computes, per edge, the partial weighted
+    numerator and denominator over that edge's clients; stage 2 combines
+    the E partial aggregates at the hub.  Units with zero participation
+    anywhere keep the global value exactly, as in ``masked_fedavg``.
+    """
+    wf = weights.astype(jnp.float32)
+    mem = membership.astype(jnp.float32)
+
+    def one(lu, g, d):
+        if lu.kind == "scalar":
+            m = sel[:, lu.base]                                  # (C,)
+        else:
+            nm = g.shape[0]
+            idx = lu.base + lu.stride * jnp.arange(nm)
+            m = sel[:, idx]                                      # (C, nm)
+        wm = m * wf.reshape((-1,) + (1,) * (m.ndim - 1))         # (C[,nm])
+        df = d.astype(jnp.float32)
+        if m.ndim == 1:
+            # stage 1: per-edge partials
+            e_num = jnp.einsum("ec,c,c...->e...", mem, wm, df)   # (E, ...)
+            e_den = mem @ wm                                     # (E,)
+        else:
+            e_num = jnp.einsum("ec,cm,cm...->em...", mem, wm, df)
+            e_den = jnp.einsum("ec,cm->em", mem, wm)
+        # stage 2: hub combine of the edge partial aggregates
+        num = e_num.sum(axis=0)
+        denom = e_den.sum(axis=0)
         denom_b = jnp.reshape(denom, jnp.shape(denom) +
                               (1,) * (num.ndim - jnp.ndim(denom)))
         upd = jnp.where(denom_b > 0, num / jnp.maximum(denom_b, 1e-9), 0.0)

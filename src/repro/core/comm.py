@@ -1,12 +1,31 @@
 """Network-transfer accounting (paper Table 4 / §4.2.5).
 
 Byte counts are exact functions of the unit assignment and the selection
-matrix — no simulation noise.  Two topologies:
+matrix — no simulation noise.  One function per topology (the plugin
+layer in ``core/topology.py`` routes ``CommAccounting``/``comm_summary``
+through these):
 
 * **hub** (the paper's FEDn combiner): per round,
     uplink_c   = Σ_u sel_cu · unit_bytes_u      (only trained layers ship)
     downlink_c = full model                     (server broadcasts globals)
-  The paper's Table 4 reports the 10-client uplink sum.
+  The paper's Table 4 reports the 10-client uplink sum.  With
+  ``downlink="selected"`` the server broadcasts only the units the round
+  updated (exact, not approximate: aggregation changes *only* units
+  somebody trained, so re-broadcasting the round's selection union keeps
+  every client's copy of the global model current) — under synchronized
+  selection that union is the shared subset, matching the collective-
+  shrinking story instead of always charging the full model.
+
+* **hierarchical** (edge aggregators -> hub): clients upload selected
+  units to their edge aggregator (LAN); each edge forwards ONE partial
+  aggregate per unit any of its clients trained (the per-edge selection
+  union) over the WAN to the hub.  The edge->hub term is the paper's
+  WAN bottleneck and is what ``uplink`` reports.
+
+* **gossip** (hubless peer averaging): each client ships its replica to
+  its out-neighbours in the mixing graph every round.  Mixing blends
+  every entry of a replica, so partial-freezing does NOT shrink gossip
+  traffic — the accounting makes that cost visible.
 
 * **collective** (pod FL, DESIGN.md §2): aggregation is an all-reduce
   over the client axis.  With *independent* per-client selection (paper
@@ -31,17 +50,106 @@ def unit_bytes(assign: UnitAssignment, params, bytes_per_param: int = 4
 
 
 def hub_round_bytes(sel: np.ndarray, ubytes: np.ndarray,
-                    include_downlink: bool = False) -> Dict[str, float]:
-    """sel (C, U) 0/1 for one round."""
+                    include_downlink: bool = False,
+                    downlink: str = "full") -> Dict[str, float]:
+    """sel (C, U) 0/1 for one round.
+
+    ``downlink="full"``: the server broadcasts the whole model to every
+    client (the paper's FEDn behaviour).  ``downlink="selected"``: the
+    server broadcasts only the units the round's aggregation touched —
+    the per-round selection union — which is sufficient to keep every
+    client's global copy exact (frozen units never change server-side).
+    Under synchronized selection the union equals the shared subset, so
+    downlink shrinks by the same frozen fraction as uplink.
+    """
     sel = np.asarray(sel)
     uplink = float((sel @ ubytes).sum())
     total_model = float(ubytes.sum())
-    downlink = total_model * sel.shape[0]
+    if downlink == "full":
+        down = total_model * sel.shape[0]
+    elif downlink == "selected":
+        union = sel.max(axis=0)
+        down = float(union @ ubytes) * sel.shape[0]
+    else:
+        raise ValueError(f"downlink must be 'full' or 'selected', "
+                         f"got {downlink!r}")
     out = {"uplink": uplink,
            "uplink_frac": uplink / (total_model * sel.shape[0]),
-           "downlink": downlink}
-    out["total"] = uplink + (downlink if include_downlink else 0.0)
+           "downlink": down}
+    out["total"] = uplink + (down if include_downlink else 0.0)
     return out
+
+
+def edge_membership(n_clients: int, n_edges: int) -> np.ndarray:
+    """(E, C) 0/1 — contiguous near-equal client groups per edge."""
+    if not 1 <= n_edges <= n_clients:
+        raise ValueError(f"n_edges={n_edges} out of range for "
+                         f"{n_clients} clients")
+    mem = np.zeros((n_edges, n_clients), np.float32)
+    for e, grp in enumerate(np.array_split(np.arange(n_clients), n_edges)):
+        mem[e, grp] = 1.0
+    return mem
+
+
+def hierarchical_round_bytes(sel: np.ndarray, ubytes: np.ndarray,
+                             membership: np.ndarray,
+                             include_downlink: bool = False,
+                             downlink: str = "full") -> Dict[str, float]:
+    """Two-stage accounting: client->edge (LAN) and edge->hub (WAN).
+
+    Each edge uploads one partial aggregate per unit in its selection
+    *union* — a unit trained by several of the edge's clients crosses
+    the WAN once, which is where hierarchical beats the flat hub.
+    ``uplink`` is the WAN (edge->hub) term.
+    """
+    sel = np.asarray(sel)
+    membership = np.asarray(membership)
+    n_edges, n_clients = membership.shape
+    total_model = float(ubytes.sum())
+    client_edge = float((sel @ ubytes).sum())
+    # per-edge selection union: (E, U)
+    union = (membership @ sel > 0).astype(np.float64)
+    edge_hub = float((union @ ubytes).sum())
+    if downlink == "full":
+        down = total_model * (n_edges + n_clients)
+    elif downlink == "selected":
+        gu = sel.max(axis=0)
+        down = float(gu @ ubytes) * (n_edges + n_clients)
+    else:
+        raise ValueError(f"downlink must be 'full' or 'selected', "
+                         f"got {downlink!r}")
+    out = {"uplink": edge_hub,
+           "uplink_frac": edge_hub / (total_model * n_edges),
+           "edge_hub_uplink": edge_hub,
+           "client_edge_uplink": client_edge,
+           "downlink": down}
+    out["total"] = edge_hub + client_edge + (down if include_downlink
+                                             else 0.0)
+    return out
+
+
+def gossip_round_bytes(sel: np.ndarray, ubytes: np.ndarray,
+                       degree: Optional[int] = None) -> Dict[str, float]:
+    """Peer-exchange accounting for one gossip round.
+
+    Every client ships its FULL replica to each of its ``degree``
+    out-neighbours (ring default: 2, capped by C-1); the mixing step
+    blends all entries of a replica, so selection cannot shrink the
+    payload — ``uplink_frac`` is 1 by construction and ``sel`` only
+    informs ``trained_params`` elsewhere.
+    """
+    sel = np.asarray(sel)
+    n_clients = sel.shape[0]
+    if degree is None:
+        degree = min(2, max(n_clients - 1, 0))
+    total_model = float(ubytes.sum())
+    payload = total_model * n_clients * degree
+    return {"uplink": payload,
+            "uplink_frac": 1.0 if n_clients > 1 else 0.0,
+            "peer_bytes": payload,
+            "degree": float(degree),
+            "downlink": 0.0,
+            "total": payload}
 
 
 def collective_round_bytes(sel: np.ndarray, ubytes: np.ndarray,

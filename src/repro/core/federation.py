@@ -20,8 +20,13 @@ the conventional baseline.  There is no separate full-model builder any
 more; ``build_fullmodel_round_step`` survives only as a deprecation
 shim delegating to the ``full`` strategy.
 
-Topology (cross_device vs cross_silo) changes nothing here; it changes
-the mesh view the step is pjit-ed with (launch/mesh.py).
+Topology is a second plugin axis (core/topology.py): ``fl.topology``
+names a registered :class:`Topology` plugin that owns the aggregation
+stage of the round step (hub star, hierarchical two-stage, gossip
+mixing), its byte accounting and its mesh view.  ``build_round_step``
+here is a thin resolver that delegates to the plugin — the ``hub``
+default compiles the identical trace this module compiled before the
+topology layer existed (bit-exact, regression-tested).
 """
 from __future__ import annotations
 
@@ -29,14 +34,11 @@ import dataclasses
 import warnings
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 
-from .aggregation import masked_fedavg, fedavg
-from .client import local_update
-from .masking import UnitAssignment, mask_tree
-from .strategies import (SelectionContext, SelectionStrategy,
-                         resolve_strategy)
+from .masking import UnitAssignment
+from .strategies import SelectionStrategy
+from .topology import Topology, resolve_topology
 
 PyTree = Any
 
@@ -55,6 +57,12 @@ class FLConfig:
     # (the paper's 25%/50%/75% settings); resolved against the unit
     # assignment by build_round_step
     train_fraction: Optional[float] = None
+    # federation topology: any registered Topology plugin name
+    # (core/topology.py: "hub" | "hierarchical" | "gossip" | custom)
+    topology: str = "hub"
+    # edge-aggregator count for the hierarchical topology; None means
+    # ~sqrt(n_clients) so neither tier degenerates
+    n_edges: Optional[int] = None
 
     def resolve_n_train(self, n_units: int) -> int:
         if self.train_fraction is not None:
@@ -62,65 +70,32 @@ class FLConfig:
             return n_train_from_fraction(n_units, self.train_fraction)
         return self.n_train_units
 
+    def resolve_n_edges(self) -> int:
+        if self.n_edges is not None:
+            if not 1 <= self.n_edges <= self.n_clients:
+                raise ValueError(f"n_edges={self.n_edges} out of range "
+                                 f"for {self.n_clients} clients")
+            return self.n_edges
+        return max(1, round(self.n_clients ** 0.5))
+
 
 def build_round_step(loss_fn: Callable, assign: UnitAssignment,
                      fl: FLConfig, loss_kwargs: Optional[Dict] = None,
                      *, strategy: Union[str, SelectionStrategy, None] = None,
-                     scores: Optional[jnp.ndarray] = None):
+                     scores: Optional[jnp.ndarray] = None,
+                     topology: Union[str, Topology, None] = None):
     """Returns the jit-able round_step function.
 
-    ``strategy`` overrides ``fl.strategy`` with a name or an instance
-    (e.g. one constructed in user code and never registered).
+    ``strategy`` overrides ``fl.strategy`` and ``topology`` overrides
+    ``fl.topology`` with a name or an instance (e.g. one constructed in
+    user code and never registered).  For stateful topologies (gossip)
+    the step maps topology *state* -> state; ``Topology.init_state`` /
+    ``global_params`` convert to and from a single model.
     """
-    strat = resolve_strategy(strategy if strategy is not None
-                             else fl.strategy, fl.synchronized)
-    n_train = fl.resolve_n_train(assign.n_units)
-    if not strat.dense and not 1 <= n_train <= assign.n_units:
-        raise ValueError(
-            f"n_train={n_train} out of range for {assign.n_units} units; "
-            "set FLConfig.n_train_units or train_fraction")
-    ctx = SelectionContext(n_clients=fl.n_clients, n_units=assign.n_units,
-                           n_train=n_train, scores=scores)
-
-    def round_step(global_params, client_batches, weights, round_key):
-        sel = strat.select(round_key, ctx)
-        if fl.always_train_head:
-            sel = sel.at[:, -1].set(1.0)
-
-        if strat.dense:
-            # every unit trained: unmasked local step + plain FedAvg —
-            # bit-exact with the conventional-FedAvg baseline trace
-            ones_mask = jax.tree_util.tree_map(
-                lambda x: jnp.ones((), jnp.float32), global_params)
-
-            def one_client_dense(batches):
-                return local_update(loss_fn, global_params, ones_mask,
-                                    batches, lr=fl.lr,
-                                    optimizer=fl.optimizer,
-                                    prox_mu=fl.prox_mu,
-                                    loss_kwargs=loss_kwargs)
-
-            deltas, metrics = jax.vmap(one_client_dense)(client_batches)
-            new_params = fedavg(global_params, deltas, weights)
-        else:
-            def one_client(sel_row, batches):
-                mask = mask_tree(assign, sel_row, global_params)
-                return local_update(loss_fn, global_params, mask, batches,
-                                    lr=fl.lr, optimizer=fl.optimizer,
-                                    prox_mu=fl.prox_mu,
-                                    loss_kwargs=loss_kwargs)
-
-            deltas, metrics = jax.vmap(one_client)(sel, client_batches)
-            new_params = masked_fedavg(global_params, deltas, sel, weights,
-                                       assign)
-        out_metrics = {
-            "loss_mean": metrics["loss_mean"].mean(),
-            "loss_per_client": metrics["loss_mean"],
-            "sel": sel,
-        }
-        return new_params, out_metrics
-
-    return round_step
+    topo = resolve_topology(topology if topology is not None
+                            else fl.topology)
+    return topo.build_round_step(loss_fn, assign, fl, loss_kwargs,
+                                 strategy=strategy, scores=scores)
 
 
 def build_fullmodel_round_step(loss_fn: Callable, fl: FLConfig,

@@ -30,6 +30,7 @@ import numpy as np
 from . import comm
 from .federation import FLConfig
 from .masking import UnitAssignment
+from .topology import Topology, resolve_topology
 
 
 @dataclasses.dataclass
@@ -78,7 +79,11 @@ class StragglerDropout(ServerHook):
 class CommAccounting(ServerHook):
     """Exact per-round transfer accounting (paper Table 4) from the
     round's selection matrix — fills ``uplink_bytes``/``trained_params``
-    on the record."""
+    on the record.  The byte math is the server's topology plugin's
+    (``Topology.round_bytes``), not hard-coded hub formulas: ``uplink``
+    is whatever crosses that topology's WAN boundary (hub: client
+    uploads; hierarchical: edge->hub partial aggregates; gossip: peer
+    replica exchange)."""
 
     def on_round_end(self, server, record, metrics):
         if record.skipped or metrics is None:
@@ -91,24 +96,32 @@ class CommAccounting(ServerHook):
             record.uplink_bytes = float(ub.sum()) * sel.shape[0]
             record.trained_params = float(np.einsum(
                 "u->", comm.unit_param_counts(
-                    server.assign, server.params))) * sel.shape[0]
+                    server.assign, server.global_params()))) * sel.shape[0]
             return
-        record.uplink_bytes = comm.hub_round_bytes(sel, ub)["uplink"]
+        record.uplink_bytes = server.topology.round_bytes(
+            sel, ub, server.fl)["uplink"]
         record.trained_params = float(np.einsum(
             "cu,u->", sel,
-            comm.unit_param_counts(server.assign, server.params)))
+            comm.unit_param_counts(server.assign, server.global_params())))
 
 
 class RoundLogger(ServerHook):
-    """Print a one-line round summary every ``every`` rounds."""
+    """Print a one-line round summary every ``every`` rounds.
 
-    def __init__(self, every: int = 1, total: Optional[int] = None):
+    ``base`` anchors the cadence: a resumed run (non-zero history base,
+    e.g. after ``Federation.restore``) logs on the same relative cadence
+    as a fresh one — rounds ``base``, ``base+every``, ... — and the
+    final round (``total - 1``) always prints."""
+
+    def __init__(self, every: int = 1, total: Optional[int] = None,
+                 base: int = 0):
         self.every = max(1, every)
         self.total = total
+        self.base = base
 
     def on_round_end(self, server, record, metrics):
         last = self.total is not None and record.round == self.total - 1
-        if record.round % self.every and not last:
+        if (record.round - self.base) % self.every and not last:
             return
         line = f"  round {record.round:>4d}"
         if record.skipped:
@@ -142,14 +155,24 @@ class Checkpointer(ServerHook):
 
 
 class Server:
+    """``params`` is the topology *state*: the single global model for
+    star topologies (hub, hierarchical), the stacked per-client replica
+    tree for gossip.  ``global_params()`` is always the single-model
+    view (what ``eval_fn`` sees and what accounting sizes against).
+    Callers passing plain model params get them lifted into state via
+    ``Topology.init_state`` (identity for star topologies)."""
+
     def __init__(self, round_step: Callable, assign: UnitAssignment,
                  fl: FLConfig, params, *, eval_fn: Optional[Callable] = None,
                  seed: int = 0, dropout_rate: float = 0.0,
-                 hooks: Sequence[ServerHook] = ()):
+                 hooks: Sequence[ServerHook] = (),
+                 topology: Optional[Topology] = None):
         self.round_step = jax.jit(round_step)
         self.assign = assign
         self.fl = fl
-        self.params = params
+        self.topology = resolve_topology(topology if topology is not None
+                                         else fl.topology)
+        self.params = self.topology.init_state(params, fl)
         self.eval_fn = eval_fn
         self.key = jax.random.PRNGKey(seed)
         self.hooks: List[ServerHook] = [CommAccounting()]
@@ -164,9 +187,13 @@ class Server:
         self.key, k = jax.random.split(self.key)
         return k
 
+    def global_params(self):
+        """Single-model view of the topology state."""
+        return self.topology.global_params(self.params, self.fl)
+
     def unit_bytes(self) -> np.ndarray:
         if self._ubytes is None:
-            self._ubytes = comm.unit_bytes(self.assign, self.params)
+            self._ubytes = comm.unit_bytes(self.assign, self.global_params())
         return self._ubytes
 
     def add_hook(self, hook: ServerHook) -> "Server":
@@ -201,7 +228,7 @@ class Server:
             self.sel_history.append(np.asarray(metrics["sel"]))
             ev = None
             if self.eval_fn is not None:
-                ev = float(self.eval_fn(self.params))
+                ev = float(self.eval_fn(self.global_params()))
             rec = RoundRecord(r, float(metrics["loss_mean"]), ev,
                               time.perf_counter() - t0, 0.0, 0.0,
                               n_participants=n_part)
@@ -213,7 +240,8 @@ class Server:
 
     def run(self, rounds: int, batch_fn: Callable[[int], Any],
             weights=None, log_every: int = 0) -> List[RoundRecord]:
-        extra = [RoundLogger(log_every, total=len(self.history) + rounds)] \
+        extra = [RoundLogger(log_every, total=len(self.history) + rounds,
+                             base=len(self.history))] \
             if log_every else []
         self.hooks.extend(extra)
         try:
@@ -238,4 +266,5 @@ class Server:
                         [r.trained_params for r in self.history])),
                     "total_uplink_bytes": float(np.sum(per_round)),
                     "reduction_vs_full": 0.0}
-        return comm.table4_row(self.assign, self.params, hist)
+        return self.topology.summary(self.assign, self.global_params(),
+                                     hist, self.fl)

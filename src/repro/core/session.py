@@ -18,9 +18,12 @@ Usage::
     fed.comm_summary()
 
 Strategy selection is the registered-plugin name in ``fl.strategy``
-(see core/strategies.py); pass ``strategy=`` to override with an
-unregistered instance.  Cross-cutting behaviour (straggler dropout,
-checkpointing, logging, custom metrics) attaches as ``ServerHook``s.
+(see core/strategies.py); the federation topology is the registered
+plugin name in ``fl.topology`` (core/topology.py: ``hub`` |
+``hierarchical`` | ``gossip``).  Pass ``strategy=`` / ``topology=`` to
+override either with an unregistered instance.  Cross-cutting behaviour
+(straggler dropout, checkpointing, logging, custom metrics) attaches as
+``ServerHook``s.
 """
 from __future__ import annotations
 
@@ -35,6 +38,7 @@ from .federation import FLConfig, build_round_step
 from .masking import UnitAssignment, build_units_flat, build_units_zoo
 from .server import RoundRecord, Server, ServerHook
 from .strategies import SelectionStrategy
+from .topology import Topology, resolve_topology
 
 PyTree = Any
 
@@ -64,15 +68,20 @@ class Federation:
                  dropout_rate: float = 0.0,
                  hooks: Sequence[ServerHook] = (),
                  strategy: Union[str, SelectionStrategy, None] = None,
-                 scores: Optional[jnp.ndarray] = None):
+                 scores: Optional[jnp.ndarray] = None,
+                 topology: Union[str, Topology, None] = None):
         self.fl = fl
         self.assign = assign
         self.loader = loader
+        self.topology = resolve_topology(topology if topology is not None
+                                         else fl.topology)
         round_step = build_round_step(loss_fn, assign, fl, loss_kwargs,
-                                      strategy=strategy, scores=scores)
+                                      strategy=strategy, scores=scores,
+                                      topology=self.topology)
         self.server = Server(round_step, assign, fl, params,
                              eval_fn=eval_fn, seed=seed,
-                             dropout_rate=dropout_rate, hooks=hooks)
+                             dropout_rate=dropout_rate, hooks=hooks,
+                             topology=self.topology)
 
     # -- construction -----------------------------------------------------
 
@@ -89,7 +98,7 @@ class Federation:
         array dicts (then ``batch_size``/``steps_per_round`` apply), or
         None (supply batches to ``run_round`` yourself).
         Remaining ``kwargs`` go to the constructor (hooks,
-        dropout_rate, strategy, scores).
+        dropout_rate, strategy, scores, topology).
         """
         key = jax.random.PRNGKey(seed)
         if isinstance(cfg, ModelSpec):
@@ -147,7 +156,7 @@ class Federation:
     def evaluate(self) -> Optional[float]:
         if self.server.eval_fn is None:
             return None
-        return float(self.server.eval_fn(self.server.params))
+        return float(self.server.eval_fn(self.server.global_params()))
 
     def comm_summary(self) -> Dict[str, float]:
         return self.server.comm_summary()
@@ -156,6 +165,12 @@ class Federation:
 
     @property
     def params(self) -> PyTree:
+        """Single-model view (the mean replica under gossip)."""
+        return self.server.global_params()
+
+    @property
+    def state(self) -> PyTree:
+        """The raw topology state the server carries across rounds."""
         return self.server.params
 
     @property

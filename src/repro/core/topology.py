@@ -1,0 +1,391 @@
+"""Federation topologies as registered plugins (DESIGN.md §6).
+
+PR 1 made *what each client trains* pluggable (core/strategies.py);
+this module makes *how updates flow between nodes* pluggable the same
+way.  A **topology** owns three cross-layer responsibilities:
+
+1. the compiled round step — where its aggregation stage lives
+   (``build_round_step``; hub and hierarchical share the star skeleton
+   and differ only in the aggregation callback, gossip carries
+   per-client replicas instead of one global model);
+2. its exact byte accounting (``round_bytes``/``summary`` route
+   ``CommAccounting`` and ``Server.comm_summary`` through the plugin
+   instead of hard-coded hub math — core/comm.py has the formulas);
+3. its mesh view (``make_mesh``: launch/mesh.py grows an edge-group
+   axis carve-out for hierarchical).
+
+Registered plugins:
+
+* ``hub`` — the paper's FEDn combiner star (the default).  Its round
+  step is the exact trace PR 1 compiled, so results are bit-exact with
+  the pre-topology path (regression-tested).
+* ``hierarchical`` — clients partitioned under ``FLConfig.n_edges``
+  edge aggregators; two-stage masked FedAvg (per-edge partial
+  aggregates, then hub combine) inside the single compiled round step.
+  Only the per-edge selection *union* crosses the edge->hub WAN link,
+  compounding the paper's partial-update savings.
+* ``gossip`` — hubless peer averaging over a doubly-stochastic ring
+  mixing matrix; per-client parameter replicas are the server state and
+  are carried across rounds (``stateful = True``).
+
+Adding a topology is a subclass + ``@register_topology`` — no change to
+``federation.py``, ``Server``, launchers or benchmarks.
+"""
+from __future__ import annotations
+
+from typing import (Any, Callable, ClassVar, Dict, Optional, Tuple, Type,
+                    Union)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import comm
+from .aggregation import fedavg, hierarchical_masked_fedavg, masked_fedavg
+from .client import local_update
+from .masking import UnitAssignment, mask_tree
+from .strategies import SelectionContext, resolve_strategy
+
+PyTree = Any
+
+
+def ring_mixing_matrix(n: int) -> np.ndarray:
+    """Doubly-stochastic Metropolis weights on a ring of ``n`` peers.
+
+    n=1 -> identity; n=2 -> exact pair averaging; n>=3 -> 1/3 self +
+    1/3 to each ring neighbour.  Rows AND columns sum to one, so the
+    uniform average of the replicas is invariant under mixing.
+    """
+    if n < 1:
+        raise ValueError("ring needs at least one peer")
+    if n == 1:
+        return np.ones((1, 1), np.float32)
+    if n == 2:
+        return np.full((2, 2), 0.5, np.float32)
+    w = np.eye(n, dtype=np.float32) / 3.0
+    w += np.roll(np.eye(n, dtype=np.float32), 1, axis=1) / 3.0
+    w += np.roll(np.eye(n, dtype=np.float32), -1, axis=1) / 3.0
+    return w
+
+
+def _selection_setup(assign: UnitAssignment, fl, strategy, scores):
+    """Shared preamble of every topology's round step: resolve the
+    strategy, validate n_train, build the static selection context."""
+    strat = resolve_strategy(strategy if strategy is not None
+                             else fl.strategy, fl.synchronized)
+    n_train = fl.resolve_n_train(assign.n_units)
+    if not strat.dense and not 1 <= n_train <= assign.n_units:
+        raise ValueError(
+            f"n_train={n_train} out of range for {assign.n_units} units; "
+            "set FLConfig.n_train_units or train_fraction")
+    ctx = SelectionContext(n_clients=fl.n_clients, n_units=assign.n_units,
+                           n_train=n_train, scores=scores)
+    return strat, ctx
+
+
+def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
+                     loss_kwargs: Optional[Dict], *, strategy, scores,
+                     aggregate: Callable, aggregate_dense: Callable):
+    """The star-topology skeleton: selection -> vmapped masked local
+    training -> a topology-supplied aggregation stage.
+
+    ``aggregate(global_params, deltas, sel, weights)`` is the masked
+    path; ``aggregate_dense`` the dense (full-strategy) path.  The hub
+    plugin passes ``masked_fedavg``/``fedavg`` so its trace is exactly
+    the pre-topology round step (bit-exactness is regression-tested).
+    """
+    strat, ctx = _selection_setup(assign, fl, strategy, scores)
+
+    def round_step(global_params, client_batches, weights, round_key):
+        sel = strat.select(round_key, ctx)
+        if fl.always_train_head:
+            sel = sel.at[:, -1].set(1.0)
+
+        if strat.dense:
+            # every unit trained: unmasked local step + the topology's
+            # dense aggregation — for hub, bit-exact with the
+            # conventional-FedAvg baseline trace
+            ones_mask = jax.tree_util.tree_map(
+                lambda x: jnp.ones((), jnp.float32), global_params)
+
+            def one_client_dense(batches):
+                return local_update(loss_fn, global_params, ones_mask,
+                                    batches, lr=fl.lr,
+                                    optimizer=fl.optimizer,
+                                    prox_mu=fl.prox_mu,
+                                    loss_kwargs=loss_kwargs)
+
+            deltas, metrics = jax.vmap(one_client_dense)(client_batches)
+            new_params = aggregate_dense(global_params, deltas, sel, weights)
+        else:
+            def one_client(sel_row, batches):
+                mask = mask_tree(assign, sel_row, global_params)
+                return local_update(loss_fn, global_params, mask, batches,
+                                    lr=fl.lr, optimizer=fl.optimizer,
+                                    prox_mu=fl.prox_mu,
+                                    loss_kwargs=loss_kwargs)
+
+            deltas, metrics = jax.vmap(one_client)(sel, client_batches)
+            new_params = aggregate(global_params, deltas, sel, weights)
+        out_metrics = {
+            "loss_mean": metrics["loss_mean"].mean(),
+            "loss_per_client": metrics["loss_mean"],
+            "sel": sel,
+        }
+        return new_params, out_metrics
+
+    return round_step
+
+
+class Topology:
+    """Base class for federation-topology plugins.
+
+    Subclasses set ``name`` and implement the three responsibilities:
+    ``build_round_step`` (aggregation stage), ``round_bytes``/``summary``
+    (exact accounting) and ``make_mesh`` (device view).  ``stateful``
+    declares that the server state is not a single global model —
+    ``init_state``/``global_params`` convert between the two (identity
+    for star topologies).
+    """
+
+    name: ClassVar[str] = ""
+    stateful: ClassVar[bool] = False
+
+    # -- server state -----------------------------------------------------
+
+    def init_state(self, params: PyTree, fl) -> PyTree:
+        return params
+
+    def global_params(self, state: PyTree, fl) -> PyTree:
+        return state
+
+    # -- the compiled round ----------------------------------------------
+
+    def build_round_step(self, loss_fn: Callable, assign: UnitAssignment,
+                         fl, loss_kwargs: Optional[Dict] = None, *,
+                         strategy=None, scores=None):
+        raise NotImplementedError
+
+    # -- exact byte accounting -------------------------------------------
+
+    def round_bytes(self, sel: np.ndarray, ubytes: np.ndarray,
+                    fl) -> Dict[str, float]:
+        raise NotImplementedError
+
+    def summary(self, assign: UnitAssignment, params: PyTree,
+                sel_history: np.ndarray, fl) -> Dict[str, float]:
+        """Run-level comm summary; same core keys for every topology."""
+        ub = comm.unit_bytes(assign, params)
+        counts = comm.unit_param_counts(assign, params)
+        hist = np.asarray(sel_history)
+        per_round = [self.round_bytes(s, ub, fl)["uplink"] for s in hist]
+        per_round_params = np.einsum("rcu,u->r", hist, counts)
+        full = self.round_bytes(np.ones_like(hist[0]), ub, fl)["uplink"]
+        return {
+            "avg_uplink_bytes": float(np.mean(per_round)),
+            "avg_trained_params": float(per_round_params.mean()),
+            "total_uplink_bytes": float(np.sum(per_round)),
+            "reduction_vs_full": 1.0 - float(np.mean(per_round)) / full
+            if full else 0.0,
+        }
+
+    # -- mesh view --------------------------------------------------------
+
+    def make_mesh(self, fl, *, multi_pod: bool = False):
+        from ..launch.mesh import make_fl_mesh
+        return make_fl_mesh(fl.n_clients, multi_pod=multi_pod)
+
+    def __repr__(self):
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors core/strategies.py)
+
+_REGISTRY: Dict[str, Topology] = {}
+
+
+class UnknownTopologyError(ValueError):
+    pass
+
+
+def register_topology(obj: Union[Type[Topology], Topology], *,
+                      name: Optional[str] = None):
+    """Register a topology class (instantiated with no args) or instance.
+
+    Usable as a decorator::
+
+        @register_topology
+        class Mine(Topology):
+            name = "mine"
+            ...
+    """
+    topo = obj() if isinstance(obj, type) else obj
+    key = name or topo.name
+    if not key:
+        raise ValueError(f"topology {obj!r} has no name")
+    _REGISTRY[key] = topo
+    return obj
+
+
+def unregister_topology(name: str):
+    _REGISTRY.pop(name, None)
+
+
+def registered_topologies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_topology(name: str) -> Topology:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownTopologyError(
+            f"unknown topology {name!r}; registered: "
+            f"{', '.join(registered_topologies())}") from None
+
+
+def resolve_topology(spec: Union[str, Topology, None]) -> Topology:
+    """Name or instance -> instance (None -> the hub default)."""
+    if spec is None:
+        return get_topology("hub")
+    return get_topology(spec) if isinstance(spec, str) else spec
+
+
+# ---------------------------------------------------------------------------
+# built-in topologies
+
+@register_topology
+class Hub(Topology):
+    """The paper's FEDn combiner star: every client talks to one hub.
+
+    The default — its round step is the identical trace the
+    pre-topology ``build_round_step`` compiled (bit-exact).
+    """
+    name = "hub"
+
+    def build_round_step(self, loss_fn, assign, fl, loss_kwargs=None, *,
+                         strategy=None, scores=None):
+        return _star_round_step(
+            loss_fn, assign, fl, loss_kwargs, strategy=strategy,
+            scores=scores,
+            aggregate=lambda g, d, sel, w: masked_fedavg(g, d, sel, w,
+                                                         assign),
+            aggregate_dense=lambda g, d, sel, w: fedavg(g, d, w))
+
+    def round_bytes(self, sel, ubytes, fl):
+        return comm.hub_round_bytes(
+            sel, ubytes,
+            downlink="selected" if fl.synchronized else "full")
+
+    def summary(self, assign, params, sel_history, fl):
+        # the exact Table 4 reproduction, unchanged from PR 1
+        return comm.table4_row(assign, params, sel_history)
+
+
+@register_topology
+class Hierarchical(Topology):
+    """Edge aggregators between clients and hub (FLConfig.n_edges).
+
+    Clients are partitioned into contiguous edge groups; each edge
+    reduces its clients' masked deltas into per-unit partial aggregates
+    and only the per-edge selection union crosses the edge->hub WAN
+    link — ``round_bytes`` reports that WAN term as ``uplink``.
+    """
+    name = "hierarchical"
+
+    def build_round_step(self, loss_fn, assign, fl, loss_kwargs=None, *,
+                         strategy=None, scores=None):
+        mem = jnp.asarray(comm.edge_membership(fl.n_clients,
+                                               fl.resolve_n_edges()))
+        agg = lambda g, d, sel, w: hierarchical_masked_fedavg(
+            g, d, sel, w, assign, mem)
+        return _star_round_step(
+            loss_fn, assign, fl, loss_kwargs, strategy=strategy,
+            scores=scores, aggregate=agg, aggregate_dense=agg)
+
+    def round_bytes(self, sel, ubytes, fl):
+        mem = comm.edge_membership(fl.n_clients, fl.resolve_n_edges())
+        return comm.hierarchical_round_bytes(
+            sel, ubytes, mem,
+            downlink="selected" if fl.synchronized else "full")
+
+    def make_mesh(self, fl, *, multi_pod: bool = False):
+        from ..launch.mesh import make_hier_fl_mesh
+        return make_hier_fl_mesh(fl.resolve_n_edges(), fl.n_clients,
+                                 multi_pod=multi_pod)
+
+
+@register_topology
+class Gossip(Topology):
+    """Hubless peer averaging over a doubly-stochastic ring.
+
+    The server state is a stacked pytree of per-client replicas
+    (leading C axis) carried across rounds.  Per round each client runs
+    masked local training from its OWN replica, then replicas mix:
+    ``x' = W @ x`` with the ring Metropolis matrix W.  W is doubly
+    stochastic, so the uniform replica average — ``global_params`` — is
+    exactly preserved by mixing and drifts only through local training.
+    Client data weights reweight nothing here (mixing is fixed);
+    zero-weight clients (stragglers) skip their local update but still
+    mix.
+    """
+    name = "gossip"
+    stateful = True
+
+    def init_state(self, params, fl):
+        c = fl.n_clients
+        return jax.tree_util.tree_map(
+            lambda x: jnp.tile(x[None], (c,) + (1,) * jnp.ndim(x)), params)
+
+    def global_params(self, state, fl):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
+            state)
+
+    def build_round_step(self, loss_fn, assign, fl, loss_kwargs=None, *,
+                         strategy=None, scores=None):
+        strat, ctx = _selection_setup(assign, fl, strategy, scores)
+        mix = jnp.asarray(ring_mixing_matrix(fl.n_clients))
+
+        def round_step(state, client_batches, weights, round_key):
+            sel = strat.select(round_key, ctx)
+            if fl.always_train_head:
+                sel = sel.at[:, -1].set(1.0)
+            active = (weights > 0).astype(jnp.float32)       # (C,)
+
+            def one_client(params_c, sel_row, batches):
+                mask = mask_tree(assign, sel_row, params_c)
+                return local_update(loss_fn, params_c, mask, batches,
+                                    lr=fl.lr, optimizer=fl.optimizer,
+                                    prox_mu=fl.prox_mu,
+                                    loss_kwargs=loss_kwargs)
+
+            deltas, metrics = jax.vmap(one_client)(state, sel,
+                                                   client_batches)
+            trained = jax.tree_util.tree_map(
+                lambda x, d: x + (d * active.reshape(
+                    (-1,) + (1,) * (d.ndim - 1))).astype(x.dtype),
+                state, deltas)
+            mixed = jax.tree_util.tree_map(
+                lambda x: jnp.tensordot(
+                    mix, x.astype(jnp.float32), axes=(1, 0)).astype(x.dtype),
+                trained)
+            out_metrics = {
+                "loss_mean": metrics["loss_mean"].mean(),
+                "loss_per_client": metrics["loss_mean"],
+                "sel": sel,
+            }
+            return mixed, out_metrics
+
+        return round_step
+
+    def round_bytes(self, sel, ubytes, fl):
+        return comm.gossip_round_bytes(sel, ubytes)
+
+    def summary(self, assign, params, sel_history, fl):
+        out = Topology.summary(self, assign, params, sel_history, fl)
+        hist = np.asarray(sel_history)
+        ub = comm.unit_bytes(assign, params)
+        out["degree"] = comm.gossip_round_bytes(hist[0], ub)["degree"]
+        return out

@@ -37,7 +37,8 @@ from ..configs.base import get_config
 from ..common import pytree as pt
 from ..sharding import layout_for
 from . import roofline, specs
-from .mesh import make_production_mesh, make_fl_mesh
+from .mesh import (make_fl_mesh, make_hier_fl_mesh,
+                   make_production_mesh)
 from .shapes import SHAPES, shape_applicable
 from .steps import (default_loss_kwargs, make_decode_step, make_fl_round_step,
                     make_prefill_step, make_train_step)
@@ -83,7 +84,7 @@ def logits_pspec(layout, mesh, shape, step_kind):
 
 def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
                  fl_fraction=0.5, fl_synchronized=False, fl_clients=None,
-                 loss_overrides=None):
+                 fl_topology="hub", fl_edges=None, loss_overrides=None):
     """Returns (jitted, args, tokens_processed, is_train, extra_record)."""
     from ..models import layers as _layers
     _layers.set_logits_partition(
@@ -133,11 +134,26 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
         c = fl_clients
         fn, assign, fl = make_fl_round_step(
             cfg, n_clients=c, train_fraction=fl_fraction,
-            synchronized=fl_synchronized,
+            synchronized=fl_synchronized, topology=fl_topology,
+            n_edges=fl_edges,
             loss_kwargs=default_loss_kwargs(cfg, remat=remat, unroll=unroll))
         extra["fl"] = {"n_clients": c, "n_units": assign.n_units,
                        "n_train_units": fl.n_train_units,
-                       "synchronized": fl_synchronized}
+                       "synchronized": fl_synchronized,
+                       "topology": fl_topology}
+        if fl_topology == "hierarchical":
+            extra["fl"]["n_edges"] = fl.resolve_n_edges()
+        # hierarchical meshes split the flat client dim edge-major
+        client_axes = ("edge", "client") if "edge" in mesh.axis_names \
+            else "client"
+        if fl_topology == "gossip":
+            # stateful topology: per-client replicas, client-sharded
+            params = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((c,) + s.shape, s.dtype),
+                params)
+            p_sh = jax.tree_util.tree_map(
+                lambda sh: NamedSharding(mesh, P(client_axes, *sh.spec)),
+                p_sh)
         b_per = max(shape.global_batch // c, 1)
         bspec = specs.batch_specs(
             cfg, dataclasses.replace(shape, global_batch=b_per))
@@ -146,7 +162,7 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
         weights = jax.ShapeDtypeStruct((c,), jnp.float32)
         key = jax.ShapeDtypeStruct((2,), jnp.uint32)
         b_sh = jax.tree_util.tree_map(
-            lambda v: NamedSharding(mesh, P("client", None, "data",
+            lambda v: NamedSharding(mesh, P(client_axes, None, "data",
                                             *(None,) * (v.ndim - 3))), batch)
         jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, rep, rep),
                          out_shardings=(p_sh, None))
@@ -158,6 +174,7 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
 def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                step_kind: str = "auto", layout: Optional[str] = None,
                fl_fraction: float = 0.5, fl_synchronized: bool = False,
+               fl_topology: str = "hub",
                lower_only: bool = False, remat: bool = True,
                skip_accounting: bool = False,
                verbose: bool = True) -> Dict[str, Any]:
@@ -183,8 +200,18 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         "step": step_kind, "layout": layout, "skipped": False,
     }
     fl_clients = cfg.fl_clients_single_pod * (2 if multi_pod else 1)
+    fl_edges = None
     if step_kind == "fl_round":
-        mesh = make_fl_mesh(cfg.fl_clients_single_pod, multi_pod=multi_pod)
+        if fl_topology == "hierarchical":
+            from ..core.federation import FLConfig
+            fl_edges = FLConfig(n_clients=fl_clients).resolve_n_edges()
+            while cfg.fl_clients_single_pod % fl_edges:  # mesh needs even
+                fl_edges -= 1                            # edge groups
+            mesh = make_hier_fl_mesh(fl_edges, cfg.fl_clients_single_pod,
+                                     multi_pod=multi_pod)
+        else:
+            mesh = make_fl_mesh(cfg.fl_clients_single_pod,
+                                multi_pod=multi_pod)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
@@ -198,7 +225,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
     jitted, args, tokens, train, extra = build_jitted(
         cfg, shape, step_kind, mesh, layout, unroll=False, remat=remat,
         fl_fraction=fl_fraction, fl_synchronized=fl_synchronized,
-        fl_clients=fl_clients)
+        fl_clients=fl_clients, fl_topology=fl_topology, fl_edges=fl_edges)
     record.update(extra)
     with mesh:
         lowered = jitted.lower(*args)
@@ -223,7 +250,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         j, a, _, _, _ = build_jitted(
             c, shape, step_kind, mesh, layout, unroll=True, remat=remat,
             fl_fraction=fl_fraction, fl_synchronized=fl_synchronized,
-            fl_clients=fl_clients)
+            fl_clients=fl_clients, fl_topology=fl_topology,
+            fl_edges=fl_edges)
         with mesh:
             comp = j.lower(*a).compile()
         acct.append((roofline.cost_analysis_terms(comp),
@@ -282,6 +310,8 @@ def main():
     ap.add_argument("--layout", default=None)
     ap.add_argument("--fl-fraction", type=float, default=0.5)
     ap.add_argument("--fl-synchronized", action="store_true")
+    ap.add_argument("--fl-topology", default="hub",
+                    choices=["hub", "hierarchical", "gossip"])
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--skip-accounting", action="store_true")
     ap.add_argument("--lower-only", action="store_true")
@@ -292,6 +322,7 @@ def main():
                      step_kind=args.step, layout=args.layout,
                      fl_fraction=args.fl_fraction,
                      fl_synchronized=args.fl_synchronized,
+                     fl_topology=args.fl_topology,
                      lower_only=args.lower_only, remat=not args.no_remat,
                      skip_accounting=args.skip_accounting)
     os.makedirs(args.out, exist_ok=True)

@@ -11,6 +11,13 @@ mode, multi-pod: clients never span a pod, so the pod axis folds into
 the client axis and the paper's WAN bottleneck lands on the pod-to-pod
 DCN link).
 
+``make_hier_fl_mesh`` is the hierarchical topology's view (DESIGN.md
+§6): the client axis further carved into a leading ``edge`` group axis,
+``(edge, client, data, model)``.  Clients of one edge are adjacent mesh
+subgroups (their reduce stays on local interconnect — the edge
+aggregator); only the per-edge partial aggregates cross the ``edge``
+axis boundary, which is the edge->hub WAN link.
+
 Functions, not module constants: importing this module never touches
 jax device state (dryrun.py must set XLA_FLAGS before first jax init).
 """
@@ -39,6 +46,27 @@ def make_fl_mesh(n_clients: int, *, multi_pod: bool = False):
         raise ValueError(f"client axis {n_clients} must divide {total_dp}")
     shape = (n_clients, total_dp // n_clients, 16)
     return jax.make_mesh(shape, ("client", "data", "model"),
+                         devices=jax.devices()[: _size(shape)])
+
+
+def make_hier_fl_mesh(n_edges: int, n_clients: int, *,
+                      multi_pod: bool = False):
+    """(edge, client, data, model) view: edge * client * data = DP chips.
+
+    The flat client axis of ``make_fl_mesh`` is split edge-major, so
+    client c lands in edge c // (n_clients/n_edges) — matching the
+    contiguous edge groups the hierarchical aggregation stage uses
+    (core/comm.py ``edge_membership``).
+    """
+    pods = 2 if multi_pod else 1
+    total_dp = pods * 16
+    if n_edges < 1 or n_clients % n_edges:
+        raise ValueError(f"edge axis {n_edges} must divide the "
+                         f"{n_clients} clients evenly")
+    if total_dp % n_clients:
+        raise ValueError(f"client axis {n_clients} must divide {total_dp}")
+    shape = (n_edges, n_clients // n_edges, total_dp // n_clients, 16)
+    return jax.make_mesh(shape, ("edge", "client", "data", "model"),
                          devices=jax.devices()[: _size(shape)])
 
 

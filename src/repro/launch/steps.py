@@ -87,8 +87,14 @@ def make_fl_round_step(cfg: ArchConfig, *, n_clients: int,
                        train_fraction: float = 0.5,
                        strategy: str = "uniform",
                        synchronized: bool = False, lr: float = 3e-4,
+                       topology: str = "hub",
+                       n_edges: Optional[int] = None,
                        loss_kwargs: Optional[Dict] = None):
-    """The paper's technique at pod scale: one compiled federated round."""
+    """The paper's technique at pod scale: one compiled federated round.
+
+    ``topology`` picks the registered federation topology; hierarchical
+    gets ``n_edges`` edge aggregators (default ~sqrt of the clients).
+    """
     model = get_model(cfg)
     params_shape = jax.eval_shape(
         lambda k: model.init_params(k, jnp.dtype(cfg.lowering_dtype)),
@@ -98,7 +104,8 @@ def make_fl_round_step(cfg: ArchConfig, *, n_clients: int,
     fl = FLConfig(
         n_clients=n_clients,
         n_train_units=n_train_from_fraction(assign.n_units, train_fraction),
-        strategy=strategy, synchronized=synchronized, lr=lr)
+        strategy=strategy, synchronized=synchronized, lr=lr,
+        topology=topology, n_edges=n_edges)
     kw = loss_kwargs if loss_kwargs is not None else \
         default_loss_kwargs(cfg, remat=True)
     return build_round_step(model.loss_fn, assign, fl, loss_kwargs=kw), \

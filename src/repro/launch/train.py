@@ -4,7 +4,8 @@ scale; on a pod the same code runs under the production mesh).
     PYTHONPATH=src python -m repro.launch.train \
         --arch qwen3-1.7b --reduced --clients 4 --rounds 20 \
         --train-fraction 0.5 [--strategy uniform|fixed_last|weighted|full]
-        [--synchronized] [--ckpt results/ck/run1]
+        [--synchronized] [--topology hub|hierarchical|gossip [--edges 2]]
+        [--ckpt results/ck/run1]
 
 Drives the paper's federated round (per-client layer subsets from the
 registered strategy, masked local Adam, participation-weighted FedAvg)
@@ -21,7 +22,7 @@ import numpy as np
 
 from ..configs.base import get_config, list_configs
 from ..core import (Checkpointer, FLConfig, Federation,
-                    registered_strategies)
+                    registered_strategies, registered_topologies)
 from ..data import FederatedLoader, iid_partition, lm_batch
 
 
@@ -36,6 +37,10 @@ def main():
     ap.add_argument("--strategy", default="uniform",
                     choices=registered_strategies())
     ap.add_argument("--synchronized", action="store_true")
+    ap.add_argument("--topology", default="hub",
+                    choices=registered_topologies())
+    ap.add_argument("--edges", type=int, default=None,
+                    help="edge aggregators (hierarchical; default ~sqrt)")
     ap.add_argument("--fedprox-mu", type=float, default=0.0)
     ap.add_argument("--dropout", type=float, default=0.0)
     ap.add_argument("--lr", type=float, default=2e-3)
@@ -68,14 +73,17 @@ def main():
     fl = FLConfig(n_clients=args.clients,
                   train_fraction=args.train_fraction,
                   strategy=args.strategy, synchronized=args.synchronized,
-                  lr=args.lr, prox_mu=args.fedprox_mu)
+                  lr=args.lr, prox_mu=args.fedprox_mu,
+                  topology=args.topology, n_edges=args.edges)
     hooks = [Checkpointer(args.ckpt)] if args.ckpt else []
     fed = Federation.from_config(cfg, fl, data=loader, seed=args.seed,
                                  dropout_rate=args.dropout, hooks=hooks)
     print(f"arch={cfg.name} reduced={args.reduced} "
           f"units={fed.assign.n_units} "
           f"train={fl.resolve_n_train(fed.assign.n_units)} "
-          f"clients={args.clients}")
+          f"clients={args.clients} topology={args.topology}" +
+          (f" edges={fl.resolve_n_edges()}"
+           if args.topology == "hierarchical" else ""))
     t0 = time.time()
     fed.fit(args.rounds, log_every=1)
     print(f"total {time.time()-t0:.1f}s; comm summary:")

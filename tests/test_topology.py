@@ -1,0 +1,338 @@
+"""Topology plugin layer (DESIGN.md §6): registry, hub bit-exactness vs
+the pre-topology round step, hierarchical two-stage aggregation + exact
+byte accounting, gossip mixing + convergence, and save/restore resume.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FLConfig, Federation, ModelSpec, RoundLogger,
+                        Topology, UnknownTopologyError, build_round_step,
+                        build_units_flat, comm, get_topology,
+                        register_topology, registered_topologies,
+                        resolve_strategy, ring_mixing_matrix,
+                        unregister_topology)
+from repro.core.aggregation import (hierarchical_masked_fedavg,
+                                    masked_fedavg)
+from repro.core.client import local_update
+from repro.core.masking import mask_tree
+from repro.core.strategies import SelectionContext
+from repro.data import FederatedLoader, cifar_like, iid_partition
+from repro.models import paper_models as pm
+
+
+def vgg_loss(p, batch):
+    return pm.xent_loss(pm.vgg16_apply(p, batch["x"]), batch["y"]), {}
+
+
+def _vgg_setup(rng, c=4, steps=2, bs=4):
+    params = pm.init_vgg16(rng, width_mult=0.125)
+    assign = build_units_flat(params, pm.vgg16_units(params))
+    x, y = cifar_like(c * steps * bs, key=0)
+    batches = {
+        "x": jnp.asarray(x).reshape(c, steps, bs, 32, 32, 3),
+        "y": jnp.asarray(y).reshape(c, steps, bs),
+    }
+    return params, assign, batches
+
+
+def _spec(width=0.125):
+    return ModelSpec(
+        name="vgg16",
+        init_params=functools.partial(pm.init_vgg16, width_mult=width),
+        loss_fn=vgg_loss, unit_order=pm.vgg16_units)
+
+
+def _loader(c=4, n=96):
+    x, y = cifar_like(n, key=0)
+    shards = iid_partition(n, c, key=1)
+    return FederatedLoader([{"x": x[s], "y": y[s]} for s in shards],
+                           batch_size=4, steps_per_round=2)
+
+
+def _assert_trees_bitexact(a, b):
+    for pa, pb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(pa), np.asarray(pb)), \
+            "params diverged bitwise"
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_builtin_topologies_registered():
+    assert {"hub", "hierarchical", "gossip"} <= set(registered_topologies())
+
+
+def test_unknown_topology_lists_registered_names():
+    with pytest.raises(UnknownTopologyError, match="hierarchical"):
+        get_topology("does_not_exist")
+
+
+def test_custom_topology_roundtrips():
+    @register_topology
+    class Echo(Topology):
+        name = "_test_echo"
+
+        def build_round_step(self, loss_fn, assign, fl, loss_kwargs=None,
+                             *, strategy=None, scores=None):
+            return get_topology("hub").build_round_step(
+                loss_fn, assign, fl, loss_kwargs, strategy=strategy,
+                scores=scores)
+
+        def round_bytes(self, sel, ubytes, fl):
+            return comm.hub_round_bytes(sel, ubytes)
+
+    try:
+        assert "_test_echo" in registered_topologies()
+        fed = Federation.from_config(
+            _spec(), FLConfig(n_clients=3, n_train_units=4, lr=1e-3,
+                              topology="_test_echo"),
+            data=_loader(c=3))
+        fed.fit(1)
+        assert fed.history[0].uplink_bytes > 0
+    finally:
+        unregister_topology("_test_echo")
+    assert "_test_echo" not in registered_topologies()
+
+
+# -- hub: bit-exact with the pre-topology path ------------------------------
+
+def _pretopology_round_step(loss_fn, assign, fl, scores=None):
+    """Verbatim re-implementation of the pre-topology masked round step
+    (PR 1's build_round_step body) — the bit-exactness oracle."""
+    strat = resolve_strategy(fl.strategy, fl.synchronized)
+    n_train = fl.resolve_n_train(assign.n_units)
+    ctx = SelectionContext(n_clients=fl.n_clients, n_units=assign.n_units,
+                           n_train=n_train, scores=scores)
+
+    def round_step(global_params, client_batches, weights, round_key):
+        sel = strat.select(round_key, ctx)
+
+        def one_client(sel_row, batches):
+            mask = mask_tree(assign, sel_row, global_params)
+            return local_update(loss_fn, global_params, mask, batches,
+                                lr=fl.lr, optimizer=fl.optimizer,
+                                prox_mu=fl.prox_mu)
+
+        deltas, metrics = jax.vmap(one_client)(sel, client_batches)
+        new_params = masked_fedavg(global_params, deltas, sel, weights,
+                                   assign)
+        return new_params, {"loss_mean": metrics["loss_mean"].mean(),
+                            "sel": sel}
+
+    return round_step
+
+
+def test_hub_bitexact_with_pretopology_path(rng):
+    params, assign, batches = _vgg_setup(rng)
+    fl = FLConfig(n_clients=4, n_train_units=5, lr=1e-3)
+    assert fl.topology == "hub"                      # the default
+    unified = jax.jit(build_round_step(vgg_loss, assign, fl))
+    oracle = jax.jit(_pretopology_round_step(vgg_loss, assign, fl))
+    w = jnp.asarray([1.0, 2.0, 1.0, 3.0])
+    p1, p2 = params, params
+    for r in range(3):                               # multi-round drift check
+        key = jax.random.PRNGKey(100 + r)
+        p1, m1 = unified(p1, batches, w, key)
+        p2, m2 = oracle(p2, batches, w, key)
+    _assert_trees_bitexact(p1, p2)
+    assert float(m1["loss_mean"]) == float(m2["loss_mean"])
+    assert np.array_equal(np.asarray(m1["sel"]), np.asarray(m2["sel"]))
+
+
+# -- hierarchical -----------------------------------------------------------
+
+def test_hierarchical_two_stage_matches_flat_average(rng):
+    """Partial weighted sums are associative: the two-stage edge->hub
+    average agrees with the flat hub average to float tolerance."""
+    params, assign, batches = _vgg_setup(rng)
+    fl = FLConfig(n_clients=4, n_train_units=5, lr=1e-3)
+    key = jax.random.PRNGKey(0)
+    sel = resolve_strategy("uniform").select(
+        key, SelectionContext(4, assign.n_units, 5))
+    w = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+
+    def one_client(sel_row, b):
+        mask = mask_tree(assign, sel_row, params)
+        return local_update(vgg_loss, params, mask, b, lr=1e-3)
+
+    deltas, _ = jax.vmap(one_client)(sel, batches)
+    flat = masked_fedavg(params, deltas, sel, w, assign)
+    mem = jnp.asarray(comm.edge_membership(4, 2))
+    hier = hierarchical_masked_fedavg(params, deltas, sel, w, assign, mem)
+    for a, b in zip(jax.tree_util.tree_leaves(flat),
+                    jax.tree_util.tree_leaves(hier)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_hierarchical_bytes_closed_form():
+    """Hand-built selection: byte accounting must equal the closed-form
+    expectation exactly."""
+    ub = np.array([10.0, 20.0, 40.0])                # 3 units
+    mem = comm.edge_membership(4, 2)                 # edges {0,1} {2,3}
+    sel = np.array([[1, 0, 0],                       # edge 0 union: u0,u1
+                    [0, 1, 0],
+                    [0, 1, 0],                       # edge 1 union: u1,u2
+                    [0, 0, 1]], np.float32)
+    d = comm.hierarchical_round_bytes(sel, ub, mem)
+    assert d["client_edge_uplink"] == 10 + 20 + 20 + 40          # per client
+    assert d["edge_hub_uplink"] == (10 + 20) + (20 + 40)         # per union
+    assert d["uplink"] == d["edge_hub_uplink"]
+    assert d["uplink_frac"] == pytest.approx(90 / (70 * 2))
+    # full downlink: hub -> 2 edges + edges -> 4 clients, full model each
+    assert d["downlink"] == 70 * (2 + 4)
+    # a unit double-trained inside one edge crosses the WAN once
+    sel2 = np.array([[1, 0, 0], [1, 0, 0],
+                     [0, 0, 0], [0, 0, 0]], np.float32)
+    d2 = comm.hierarchical_round_bytes(sel2, ub, mem)
+    assert d2["client_edge_uplink"] == 20 and d2["edge_hub_uplink"] == 10
+
+
+def test_hierarchical_wan_below_flat_hub_at_paper_settings():
+    """The acceptance bound: edge->hub WAN strictly below flat-hub
+    uplink for the paper's 25% (4/14) and 50% (7/14) settings."""
+    from repro.core import freezing
+    ub = np.ones(14) * 4e6
+    mem = comm.edge_membership(10, 2)
+    for n in (4, 7):
+        flat = wan = 0.0
+        for r in range(50):
+            sel = np.asarray(freezing.select_clients(
+                jax.random.PRNGKey(r), 10, 14, n))
+            flat += comm.hub_round_bytes(sel, ub)["uplink"]
+            wan += comm.hierarchical_round_bytes(sel, ub,
+                                                 mem)["edge_hub_uplink"]
+        assert wan < flat
+
+
+def test_hierarchical_federation_end_to_end():
+    fed = Federation.from_config(
+        _spec(), FLConfig(n_clients=4, n_train_units=7, lr=1e-3,
+                          topology="hierarchical", n_edges=2),
+        data=_loader())
+    hist = fed.fit(2)
+    assert len(hist) == 2 and all(np.isfinite(r.loss) for r in hist)
+    ub = comm.unit_bytes(fed.assign, fed.params)
+    mem = comm.edge_membership(4, 2)
+    for rec, sel in zip(hist, fed.server.sel_history):
+        expect = comm.hierarchical_round_bytes(sel, ub, mem)["uplink"]
+        assert rec.uplink_bytes == pytest.approx(expect)
+    summ = fed.comm_summary()
+    assert 0.0 < summ["reduction_vs_full"] < 1.0
+
+
+def test_bad_n_edges_rejected():
+    with pytest.raises(ValueError, match="n_edges"):
+        FLConfig(n_clients=4, n_train_units=2, n_edges=9,
+                 topology="hierarchical").resolve_n_edges()
+
+
+# -- gossip -----------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 7])
+def test_ring_mixing_matrix_doubly_stochastic(n):
+    w = ring_mixing_matrix(n)
+    assert w.shape == (n, n) and (w >= 0).all()
+    np.testing.assert_allclose(w.sum(axis=1), np.ones(n), atol=1e-6)
+    np.testing.assert_allclose(w.sum(axis=0), np.ones(n), atol=1e-6)
+
+
+def test_gossip_converges_quickstart_scale():
+    fed = Federation.from_config(
+        _spec(), FLConfig(n_clients=4, n_train_units=7, lr=3e-3,
+                          topology="gossip"),
+        data=_loader())
+    hist = fed.fit(5)
+    # state is a stacked replica tree; params is the mean-replica view
+    for leaf, ref in zip(jax.tree_util.tree_leaves(fed.state),
+                         jax.tree_util.tree_leaves(fed.params)):
+        assert leaf.shape == (4,) + ref.shape
+    assert hist[-1].loss < hist[0].loss
+    # peer traffic is full replicas: no reduction from freezing
+    assert fed.comm_summary()["reduction_vs_full"] == 0.0
+
+
+def test_gossip_mixing_preserves_replica_mean(rng):
+    """Doubly-stochastic mixing keeps the uniform replica average
+    invariant: a round with zero active clients (weights 0) must leave
+    the mean replica numerically unchanged."""
+    params, assign, batches = _vgg_setup(rng)
+    fl = FLConfig(n_clients=4, n_train_units=5, lr=1e-3,
+                  topology="gossip")
+    topo = get_topology("gossip")
+    state = topo.init_state(params, fl)
+    # perturb replicas so mixing actually moves them
+    state = jax.tree_util.tree_map(
+        lambda x: x * (1.0 + 0.01 * jnp.arange(4.0).reshape(
+            (4,) + (1,) * (x.ndim - 1))), state)
+    before = topo.global_params(state, fl)
+    step = jax.jit(build_round_step(vgg_loss, assign, fl))
+    new_state, _ = step(state, batches, jnp.zeros(4), jax.random.PRNGKey(0))
+    after = topo.global_params(new_state, fl)
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(after)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# -- save / restore mid-fit -------------------------------------------------
+
+def test_federation_save_restore_roundtrip_midfit(tmp_path):
+    path = str(tmp_path / "mid")
+    fl = FLConfig(n_clients=4, n_train_units=5, lr=1e-3)
+    fed = Federation.from_config(_spec(), fl, data=_loader(), seed=3)
+    fed.fit(2)
+    fed.save(path)
+    fed.fit(2)
+    p_straight = jax.tree_util.tree_map(np.asarray, fed.params)
+
+    fed2 = Federation.from_config(_spec(), fl, data=_loader(), seed=3)
+    meta = fed2.restore(path)
+    assert meta["round"] == 2 and len(fed2.history) == 2
+    assert len(fed2.server.sel_history) == 2
+    fed2.fit(2)                       # resumes rounds 2..3 bit-exactly
+    _assert_trees_bitexact(p_straight, fed2.params)
+    assert [r.round for r in fed2.history] == [0, 1, 2, 3]
+
+
+def test_gossip_save_restore_roundtrip(tmp_path):
+    path = str(tmp_path / "gos")
+    fl = FLConfig(n_clients=3, n_train_units=5, lr=1e-3,
+                  topology="gossip")
+    fed = Federation.from_config(_spec(), fl, data=_loader(c=3), seed=0)
+    fed.fit(1)
+    fed.save(path)
+    fed2 = Federation.from_config(_spec(), fl, data=_loader(c=3), seed=0)
+    fed2.restore(path)
+    _assert_trees_bitexact(fed.state, fed2.state)    # full replica state
+
+
+# -- hub downlink accounting + resumed logging cadence ----------------------
+
+def test_hub_downlink_selected_mode():
+    ub = np.array([10.0, 20.0, 40.0])
+    sel = np.array([[1, 1, 0], [1, 1, 0]], np.float32)   # synchronized row
+    full = comm.hub_round_bytes(sel, ub, downlink="full")
+    assert full["downlink"] == 70 * 2
+    seld = comm.hub_round_bytes(sel, ub, downlink="selected")
+    assert seld["downlink"] == 30 * 2 == seld["uplink"]
+    with pytest.raises(ValueError, match="downlink"):
+        comm.hub_round_bytes(sel, ub, downlink="nope")
+
+
+def test_round_logger_resumed_cadence(capsys):
+    from repro.core import RoundRecord
+    log = RoundLogger(every=2, total=8, base=3)
+    for r in range(3, 8):
+        rec = RoundRecord(round=r, loss=1.0, eval_metric=None,
+                          seconds=0.0, uplink_bytes=0.0,
+                          trained_params=0.0, n_participants=1)
+        log.on_round_end(None, rec, {})
+    rounds = [int(l.split()[1]) for l in
+              capsys.readouterr().out.strip().splitlines()]
+    # cadence anchored at the resume base, final round always printed
+    assert rounds == [3, 5, 7]
