@@ -8,10 +8,15 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.aggregation import masked_fedavg
+from repro.core.masking import build_units_flat
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_decode.ops import decode_attention
+from repro.kernels.masked_agg.ops import build_agg_plan, masked_fedavg_fused
 from repro.kernels.rwkv6_scan.ops import wkv
+from repro.models import paper_models as pm
 from repro.models.attention import attend_reference, decode_attend
 from repro.models.linear_scan import chunked_linear_scan
 from .common import csv_row, timed
@@ -48,6 +53,37 @@ def run(fast: bool = True):
                                 chunk=16)
     err = float(jnp.abs(ow - oc).max())
     csv_row("kernel_rwkv6_scan_interp", dt * 1e6, f"maxerr={err:.1e}")
+
+    # fused masked FedAvg at realistic paper-model tile counts: the
+    # VGG16 reproduction (14 freeze units), 10 clients, 25% selection —
+    # so kernel-level and round-level (round_step_bench) numbers land
+    # in the same report
+    p = pm.init_vgg16(ks[0], width_mult=0.125)
+    assign = build_units_flat(p, pm.vgg16_units(p))
+    c = 10
+    rng = np.random.default_rng(0)
+    sel = np.zeros((c, assign.n_units), np.float32)
+    n_train = max(1, round(assign.n_units * 0.25))
+    for i in range(c):
+        sel[i, rng.choice(assign.n_units, n_train, replace=False)] = 1.0
+    sel = jnp.asarray(sel)
+    w = jnp.ones((c,))
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    deltas = jax.tree_util.tree_unflatten(treedef, [
+        jax.random.normal(jax.random.fold_in(ks[1], i),
+                          (c,) + x.shape) * 0.05
+        for i, x in enumerate(leaves)])
+    plan = build_agg_plan(assign, p)
+    dt, oa = timed(jax.jit(lambda g, d, s, ww: masked_fedavg_fused(
+        g, d, s, ww, assign, plan=plan)), p, deltas, sel, w, reps=2)
+    ref = masked_fedavg(p, deltas, sel, w, assign)
+    err = float(max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))
+                    .max() for a, b in
+                    zip(jax.tree_util.tree_leaves(oa),
+                        jax.tree_util.tree_leaves(ref))))
+    csv_row("kernel_masked_agg_interp", dt * 1e6,
+            f"tiles={plan.n_rows},units={assign.n_units},"
+            f"clients={c},maxerr={err:.1e}")
 
 
 if __name__ == "__main__":

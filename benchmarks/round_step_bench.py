@@ -1,0 +1,182 @@
+"""Round-step bench: dense-masked vs packed vs fused (DESIGN.md §7).
+
+Compiles one full federated round step of the stacked-block toy model
+(``repro.models.toy`` — scalar + stacked leaf kinds, blocks applied
+under ``lax.scan``) at the paper's 25%/50%/75% train fractions and
+records, per variant:
+
+* wall time per round step (jitted, warmed up);
+* XLA peak temp memory (``compiled.memory_analysis()`` — the live
+  buffers of the compiled program, where the packed path's optimizer-
+  state savings show up);
+* max abs deviation of the new global params vs the dense-masked
+  reference (packed is bit-exact; fused is kernel-tolerance).
+
+Writes BENCH_round_step.json — the repo's first bench trajectory
+point; EXPERIMENTS.md §Perf records the methodology.  ``--smoke`` is
+the CI gate variant (tiny model, fewer reps, same JSON shape).
+
+    PYTHONPATH=src python -m benchmarks.round_step_bench [--smoke]
+        [--out BENCH_round_step.json] [--reps 5]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.federation import FLConfig, build_round_step
+from repro.models.toy import (init_toy_mlp, toy_batches, toy_loss,
+                              toy_units)
+
+
+def timed_min(fn, *args, reps=5, warmup=1):
+    """Best-of-reps wall time: the min is the least load-noise-sensitive
+    estimator for a deterministic compiled step (unlike the mean, a
+    single preempted rep cannot flip a comparison)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+FULL = dict(n_blocks=16, d=64, hidden=256, out=16,
+            n_clients=8, steps=4, batch=8)
+SMOKE = dict(n_blocks=8, d=32, hidden=64, out=8,
+             n_clients=4, steps=2, batch=4)
+
+
+def _variant_fl(variant: str, base: FLConfig) -> FLConfig:
+    # dense/packed pin fused_agg="off": under the default "auto" a
+    # TPU/GPU host would silently fuse the baseline's aggregation too,
+    # and every comparison would be against the wrong reference
+    if variant == "dense_masked":
+        return dataclasses.replace(base, fused_agg="off")
+    if variant == "packed":
+        return dataclasses.replace(base, packed=True, fused_agg="off")
+    if variant == "fused":
+        return dataclasses.replace(base, fused_agg="on")
+    raise ValueError(variant)
+
+
+def bench_round_step(*, fractions, reps, cfg) -> dict:
+    key = jax.random.PRNGKey(0)
+    params = init_toy_mlp(key, n_blocks=cfg["n_blocks"], d=cfg["d"],
+                          hidden=cfg["hidden"], out=cfg["out"])
+    assign = toy_units(params)
+    batches = toy_batches(jax.random.fold_in(key, 1),
+                          n_clients=cfg["n_clients"], steps=cfg["steps"],
+                          batch=cfg["batch"], d=cfg["d"], out=cfg["out"])
+    weights = jnp.ones((cfg["n_clients"],), jnp.float32)
+    rk = jax.random.PRNGKey(42)
+
+    out = {}
+    for frac in fractions:
+        base = FLConfig(n_clients=cfg["n_clients"], train_fraction=frac,
+                        strategy="uniform", lr=1e-2)
+        row = {}
+        ref_params = None
+        for variant in ("dense_masked", "packed", "fused"):
+            fl = _variant_fl(variant, base)
+            step = build_round_step(toy_loss, assign, fl)
+            jitted = jax.jit(step)
+            compiled = jitted.lower(params, batches, weights, rk).compile()
+            mem = compiled.memory_analysis()
+            dt, (new_p, _) = timed_min(jitted, params, batches, weights,
+                                       rk, reps=reps, warmup=1)
+            entry = {
+                "wall_s": dt,
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+            }
+            if variant == "dense_masked":
+                ref_params = new_p
+            else:
+                entry["max_abs_diff_vs_dense"] = float(max(
+                    jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))
+                    .max()
+                    for a, b in zip(jax.tree_util.tree_leaves(ref_params),
+                                    jax.tree_util.tree_leaves(new_p))))
+            row[variant] = entry
+            print(f"frac={frac:.2f} {variant:12s} wall={dt*1e3:8.2f}ms "
+                  f"temp={entry['temp_bytes']/1e6:8.2f}MB"
+                  + (f" maxdiff={entry.get('max_abs_diff_vs_dense', 0):.1e}"
+                     if variant != "dense_masked" else ""))
+        row["packed_speedup"] = (row["dense_masked"]["wall_s"]
+                                 / row["packed"]["wall_s"])
+        row["packed_temp_ratio"] = (row["packed"]["temp_bytes"]
+                                    / row["dense_masked"]["temp_bytes"])
+        out[f"{frac:.2f}"] = row
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale run (tiny model, fewer reps)")
+    ap.add_argument("--out", default="BENCH_round_step.json")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--fractions", type=float, nargs="+",
+                    default=[0.25, 0.50, 0.75])
+    args = ap.parse_args(argv)
+
+    cfg = SMOKE if args.smoke else FULL
+    reps = args.reps if args.reps is not None else (2 if args.smoke else 5)
+    results = bench_round_step(fractions=args.fractions, reps=reps, cfg=cfg)
+
+    # correctness gate (this is what CI relies on): packed must stay
+    # bit-exact with dense-masked, fused within kernel tolerance
+    failures = []
+    for frac, row in results.items():
+        if row["packed"]["max_abs_diff_vs_dense"] != 0.0:
+            failures.append(f"packed diverged at frac={frac}: "
+                            f"{row['packed']['max_abs_diff_vs_dense']:.3e}")
+        if row["fused"]["max_abs_diff_vs_dense"] > 2e-5:
+            failures.append(f"fused diverged at frac={frac}: "
+                            f"{row['fused']['max_abs_diff_vs_dense']:.3e}")
+
+    at25 = results.get("0.25")
+    report = {
+        "bench": "round_step",
+        "mode": "smoke" if args.smoke else "full",
+        "model": cfg,
+        "reps": reps,
+        "backend": jax.default_backend(),
+        "n_devices": jax.device_count(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "results": results,
+    }
+    if at25 is not None:
+        report["packed_wins_time_at_25"] = (
+            at25["packed"]["wall_s"] < at25["dense_masked"]["wall_s"])
+        report["packed_wins_memory_at_25"] = (
+            at25["packed"]["temp_bytes"] < at25["dense_masked"]["temp_bytes"])
+    report["equivalence_ok"] = not failures
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    if at25 is not None:
+        print(f"packed @25%: time win={report['packed_wins_time_at_25']} "
+              f"memory win={report['packed_wins_memory_at_25']} "
+              f"(speedup {at25['packed_speedup']:.2f}x, "
+              f"temp ratio {at25['packed_temp_ratio']:.2f})")
+    if failures:
+        raise SystemExit("equivalence gate FAILED: " + "; ".join(failures))
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,9 @@ comm       — exact transfer-byte accounting (Table 4), per topology
 from . import (freezing, masking, aggregation, client, federation, server,  # noqa: F401
                comm, strategies, session, topology)
 from .federation import FLConfig, build_round_step, build_fullmodel_round_step  # noqa: F401
-from .masking import build_units, build_units_zoo, build_units_flat, mask_tree, apply_mask, UnitAssignment  # noqa: F401
+from .masking import (build_units, build_units_zoo, build_units_flat,  # noqa: F401
+                      mask_tree, apply_mask, UnitAssignment,
+                      slot_plan, slot_gather, slot_merge)
 from .session import Federation, ModelSpec  # noqa: F401
 from .server import (Server, ServerHook, RoundRecord, StragglerDropout,  # noqa: F401
                      CommAccounting, RoundLogger, Checkpointer)

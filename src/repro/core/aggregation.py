@@ -12,6 +12,17 @@
   hub average up to reduce ordering — but the staging is real: only the
   per-edge partial aggregates (one slot per unit some edge client
   trained) cross the edge->hub boundary (core/comm.py accounts this).
+* ``masked_fedavg_packed`` / ``hierarchical_masked_fedavg_packed`` —
+  the same averages computed from **packed slot buffers** (DESIGN.md
+  §7): each client contributes only its ``(n_slots, …)`` trained rows
+  plus a ``(C, L)`` slot->row index, and the combiner scatter-
+  accumulates client uploads in client order — the collective moves
+  ~``n_slots/U`` of the model instead of a full-size masked tree, and
+  the accumulate shares XLA's fused multiply-add with the dense
+  einsum, so packed == dense holds bitwise.
+* ``hierarchical_edge_partials`` — stage 1 of the two-stage average on
+  its own (per-edge partial means + weight mass), so the hub combine
+  can run through the fused Pallas kernel (``kernels/masked_agg``).
 * ``fedprox`` client proximal term lives in core/client.py.
 
 All functions take client deltas stacked along a leading client axis
@@ -21,7 +32,7 @@ reduce — see launch/dryrun.py).  The fused Pallas variant is
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +40,20 @@ import jax.numpy as jnp
 from .masking import UnitAssignment, mask_tree, apply_mask
 
 PyTree = Any
+
+
+def _scalar_update(m, wf, g, d):
+    """Shared scalar-leaf branch: participation-weighted unit average.
+
+    ``m (C,)`` is the unit's selection column — the same einsum the
+    dense ``masked_fedavg`` runs, so packed and dense paths are
+    bit-identical on scalar leaves.
+    """
+    wm = m * wf                                              # (C,)
+    denom = wm.sum()
+    num = jnp.tensordot(wm, d.astype(jnp.float32), axes=(0, 0))
+    upd = jnp.where(denom > 0, num / jnp.maximum(denom, 1e-9), 0.0)
+    return (g.astype(jnp.float32) + upd).astype(g.dtype)
 
 
 def fedavg(global_params, deltas, weights) -> PyTree:
@@ -74,6 +99,152 @@ def masked_fedavg(global_params, deltas, sel, weights,
     from .masking import _is_leafunit
     return jax.tree_util.tree_map(one, assign.leaf_units, global_params,
                                   deltas, is_leaf=_is_leafunit)
+
+
+def masked_fedavg_packed(global_params, packed_deltas, rows, valid, sel,
+                         weights, assign: UnitAssignment) -> PyTree:
+    """Participation-weighted FedAvg over packed slot buffers (§7).
+
+    ``packed_deltas`` stacked-leaf entries are ``(C, L, ...)`` slot
+    deltas with ``rows (C, L)`` macro indices and ``valid (C, L)``
+    slot masks (from ``slot_plan`` under vmap); scalar leaves carry
+    dense ``(C, ...)`` deltas.  The cross-client reduce only ever
+    reads a client's ``n_slots`` trained rows — the combiner
+    scatter-accumulates each client's slots in client order (the FEDn
+    server accumulating uploads one by one), which is bit-identical to
+    the dense einsum's sequential reduction, so packed == dense holds
+    bitwise (regression-tested).  Per-unit denominators are functions
+    of ``sel``/``weights`` alone and reuse the dense path's own
+    expression.  Units with zero participation keep the global value
+    exactly (zero denominator).
+    """
+    wf = weights.astype(jnp.float32)
+
+    def one(lu, g, d, r, v):
+        if lu.kind == "scalar":
+            return _scalar_update(sel[:, lu.base], wf, g, d)
+        nm = g.shape[0]
+        idx = lu.base + lu.stride * jnp.arange(nm)
+        denom = (sel[:, idx] * wf[:, None]).sum(0)            # (nm,)
+        wv = v * wf[:, None]                                  # (C, L)
+        df = d.astype(jnp.float32)
+        shape1 = (nm,) + (1,) * (df.ndim - 2)
+
+        def accumulate(num, xs):
+            # scatter the client's RAW slot rows + weights to full
+            # width, then one fused multiply-add: XLA contracts the
+            # dense einsum with fma, so pre-rounding the w*delta
+            # product would diverge in the last bit
+            r_c, wv_c, d_c = xs
+            d_full = jnp.zeros_like(num).at[r_c].set(d_c)
+            w_full = jnp.zeros((nm,), jnp.float32).at[r_c].set(wv_c)
+            return num + w_full.reshape(shape1) * d_full, None
+
+        num, _ = jax.lax.scan(accumulate,
+                              jnp.zeros((nm,) + df.shape[2:]), (r, wv, df))
+        den_b = denom.reshape(shape1)
+        upd = jnp.where(den_b > 0, num / jnp.maximum(den_b, 1e-9), 0.0)
+        return (g.astype(jnp.float32) + upd).astype(g.dtype)
+
+    from .masking import _is_leafunit
+    return jax.tree_util.tree_map(one, assign.leaf_units, global_params,
+                                  packed_deltas, rows, valid,
+                                  is_leaf=_is_leafunit)
+
+
+def hierarchical_masked_fedavg_packed(global_params, packed_deltas, rows,
+                                      valid, sel, weights,
+                                      assign: UnitAssignment,
+                                      membership: jnp.ndarray) -> PyTree:
+    """Two-stage (edge -> hub) FedAvg over packed slot buffers.
+
+    Stage 1 scatter-accumulates each client's slots into its edge's
+    partial aggregate (per-edge ``(E, nm, ...)`` buffers, clients in
+    upload order); stage 2 sums the ``E`` partials at the hub — the
+    same staging as ``hierarchical_masked_fedavg`` but reading only
+    trained slots.  Per-edge denominators reuse the dense path's own
+    ``sel``-based expression.
+    """
+    wf = weights.astype(jnp.float32)
+    mem = membership.astype(jnp.float32)
+    n_edges = mem.shape[0]
+    edge_of = jnp.argmax(mem, axis=0)                         # (C,)
+
+    def one(lu, g, d, r, v):
+        if lu.kind == "scalar":
+            m = sel[:, lu.base]
+            wm = m * wf
+            df = d.astype(jnp.float32)
+            e_num = jnp.einsum("ec,c,c...->e...", mem, wm, df)
+            e_den = mem @ wm
+            num = e_num.sum(axis=0)
+            denom = e_den.sum(axis=0)
+            upd = jnp.where(denom > 0, num / jnp.maximum(denom, 1e-9), 0.0)
+            return (g.astype(jnp.float32) + upd).astype(g.dtype)
+        nm = g.shape[0]
+        idx = lu.base + lu.stride * jnp.arange(nm)
+        wm = sel[:, idx] * wf[:, None]                        # (C, nm)
+        e_den = jnp.einsum("ec,cm->em", mem, wm)              # (E, nm)
+        wv = v * wf[:, None]                                  # (C, L)
+        df = d.astype(jnp.float32)
+        wd = df * wv.reshape(wv.shape + (1,) * (df.ndim - 2))
+
+        def accumulate(e_num, xs):
+            e_c, r_c, wd_c = xs
+            return e_num.at[e_c, r_c].add(wd_c), None
+
+        e_num, _ = jax.lax.scan(
+            accumulate, jnp.zeros((n_edges, nm) + df.shape[2:]),
+            (edge_of, r, wd))
+        num = e_num.sum(axis=0)
+        den = e_den.sum(axis=0)
+        den_b = den.reshape((nm,) + (1,) * (num.ndim - 1))
+        upd = jnp.where(den_b > 0, num / jnp.maximum(den_b, 1e-9), 0.0)
+        return (g.astype(jnp.float32) + upd).astype(g.dtype)
+
+    from .masking import _is_leafunit
+    return jax.tree_util.tree_map(one, assign.leaf_units, global_params,
+                                  packed_deltas, rows, valid,
+                                  is_leaf=_is_leafunit)
+
+
+def hierarchical_edge_partials(deltas, sel, weights,
+                               assign: UnitAssignment,
+                               membership: jnp.ndarray
+                               ) -> Tuple[PyTree, jnp.ndarray]:
+    """Stage 1 of the two-stage masked FedAvg, exposed on its own.
+
+    Returns ``(edge_means, e_den)``: per-edge partial *means* (pytree
+    with a leading E axis; zero where an edge had no participant) and
+    the per-edge per-unit weight mass ``e_den (E, U)``.  Feeding these
+    to any flat combiner with ``wsel = e_den`` — in particular the
+    fused Pallas ``masked_combine_fused`` — reproduces the hub combine:
+    ``Σ_e e_den·mean / Σ_e e_den = Σ_e num / Σ_e den``.
+    """
+    wf = weights.astype(jnp.float32)
+    mem = membership.astype(jnp.float32)
+    wsel = sel * wf[:, None]                                  # (C, U)
+    e_den = mem @ wsel                                        # (E, U)
+
+    def one(lu, d):
+        df = d.astype(jnp.float32)
+        if lu.kind == "scalar":
+            wm = sel[:, lu.base] * wf
+            e_num = jnp.einsum("ec,c,c...->e...", mem, wm, df)
+            den = e_den[:, lu.base]
+        else:
+            nm = df.shape[1]
+            idx = lu.base + lu.stride * jnp.arange(nm)
+            wm = sel[:, idx] * wf[:, None]
+            e_num = jnp.einsum("ec,cm,cm...->em...", mem, wm, df)
+            den = e_den[:, idx]
+        den_b = jnp.reshape(den, den.shape + (1,) * (e_num.ndim - den.ndim))
+        return jnp.where(den_b > 0, e_num / jnp.maximum(den_b, 1e-9), 0.0)
+
+    from .masking import _is_leafunit
+    means = jax.tree_util.tree_map(one, assign.leaf_units, deltas,
+                                   is_leaf=_is_leafunit)
+    return means, e_den
 
 
 def hierarchical_masked_fedavg(global_params, deltas, sel, weights,

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from ..common import pytree as pt
 from ..optim.masked import adam_init, adam_step, sgd_init, sgd_step
-from .masking import apply_mask
+from .masking import apply_mask, slot_gather, slot_merge
 
 PyTree = Any
 
@@ -64,4 +64,60 @@ def local_update(loss_fn: Callable, global_params: PyTree, mask: PyTree,
     (params, _), losses = jax.lax.scan(
         step, (global_params, opt_init(global_params)), batches)
     delta = pt.tree_sub(params, global_params)
+    return delta, {"loss_mean": losses.mean(), "loss_last": losses[-1]}
+
+
+def local_update_packed(loss_fn: Callable, global_params: PyTree,
+                        assign, rows: PyTree, valid: PyTree,
+                        batches: PyTree, *, lr: float = 1e-2,
+                        optimizer: str = "adam", prox_mu: float = 0.0,
+                        loss_kwargs: Optional[Dict] = None
+                        ) -> Tuple[PyTree, Dict[str, jnp.ndarray]]:
+    """Packed variant of :func:`local_update` (DESIGN.md §7).
+
+    ``rows``/``valid`` come from ``masking.slot_plan``: the client's
+    trained macro rows of every stacked leaf, gathered into fixed-shape
+    ``(L, ...)`` slot buffers.  The scan carry — packed params plus
+    freshly initialized optimizer moments — holds only those slots, so
+    frozen stacked rows cost **zero optimizer memory**; the loss sees
+    the full model reconstructed by scattering the slots into
+    ``stop_gradient(global_params)``, so no cotangent flows into frozen
+    rows and XLA can dead-code-eliminate their weight-gradient work.
+    Scalar leaves (embed/head) are carried whole with masked grads —
+    exactly the dense path, which keeps the two paths bit-comparable.
+
+    Returns ``(packed_delta, metrics)``: stacked leaves carry ``(L,
+    ...)`` slot deltas (exact zeros on pad slots — pads never receive an
+    optimizer update), scalar leaves full-shape masked deltas.
+    """
+    loss_kwargs = loss_kwargs or {}
+    opt_init, opt_step = ((adam_init, adam_step) if optimizer == "adam"
+                          else (sgd_init, sgd_step))
+    frozen = jax.lax.stop_gradient(global_params)
+    packed0 = slot_gather(assign, global_params, rows)
+
+    def total_loss(packed, batch):
+        params = slot_merge(assign, frozen, packed, rows)
+        loss, metrics = loss_fn(params, batch, **loss_kwargs)
+        if prox_mu > 0.0:
+            # prox over the packed representation: trained slots only
+            diffs = apply_mask(valid, jax.tree_util.tree_map(
+                lambda a, b: (a - b).astype(jnp.float32), packed, packed0))
+            sq = sum(jnp.sum(jnp.square(d))
+                     for d in jax.tree_util.tree_leaves(diffs))
+            loss = loss + 0.5 * prox_mu * sq
+        return loss, metrics
+
+    def step(carry, batch):
+        packed, opt_state = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            total_loss, has_aux=True)(packed, batch)
+        grads = apply_mask(valid, grads)
+        packed, opt_state = opt_step(grads, opt_state, packed, lr=lr,
+                                     mask=valid)
+        return (packed, opt_state), loss
+
+    (packed, _), losses = jax.lax.scan(
+        step, (packed0, opt_init(packed0)), batches)
+    delta = pt.tree_sub(packed, packed0)
     return delta, {"loss_mean": losses.mean(), "loss_last": losses[-1]}

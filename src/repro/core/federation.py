@@ -63,6 +63,28 @@ class FLConfig:
     # edge-aggregator count for the hierarchical topology; None means
     # ~sqrt(n_clients) so neither tier degenerates
     n_edges: Optional[int] = None
+    # packed trained-unit round path (DESIGN.md §7): carry only the
+    # round's selected slot rows through local training, optimizer
+    # state and the cross-client reduce.  Dense-masked stays the
+    # default; packed is regression-tested bit-comparable against it.
+    packed: bool = False
+    # fused Pallas aggregation (kernels/masked_agg): "auto" compiles
+    # the kernel on TPU/GPU and keeps the jnp reference elsewhere;
+    # "on" forces the kernel (interpreter on CPU), "off" the reference.
+    # The packed path has its own segment-sum reduce and ignores this.
+    fused_agg: str = "auto"
+
+    def resolve_fused_agg(self) -> bool:
+        """Whether the round step should aggregate through the fused
+        Pallas kernel (resolved once at build time)."""
+        if self.fused_agg == "auto":
+            import jax
+            return jax.default_backend() in ("tpu", "gpu")
+        if self.fused_agg in ("on", "off"):
+            return self.fused_agg == "on"
+        raise ValueError(
+            f"fused_agg must be 'auto', 'on' or 'off', got "
+            f"{self.fused_agg!r}")
 
     def resolve_n_train(self, n_units: int) -> int:
         if self.train_fraction is not None:

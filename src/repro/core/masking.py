@@ -108,6 +108,80 @@ def apply_mask(mask, tree):
         tree, mask)
 
 
+# ---------------------------------------------------------------------------
+# slot packing (DESIGN.md §7 — the sparse round step)
+#
+# With a static per-round trained-unit budget ``n_slots`` the selected
+# macro rows of every *stacked* leaf can be gathered into fixed-shape
+# ``(L, ...)`` slot buffers (L = min(n_macro, n_slots)), so optimizer
+# moments, weight deltas and the cross-client reduce only ever touch the
+# trained slice of the model while shapes stay static under vmap/scan.
+# Scalar leaves (embed/head) participate as whole units and are carried
+# dense — their selection is per-client dynamic, so there is nothing to
+# pack.
+
+
+def slot_plan(assign: UnitAssignment, sel_row: jnp.ndarray, n_slots: int,
+              params) -> Tuple[Any, Any]:
+    """Per-leaf slot layout for one client's packed round.
+
+    Returns ``(rows, valid)`` — two pytrees congruent to ``params``:
+
+    * stacked leaf: ``rows (L,)`` int32 macro indices with the selected
+      rows first (stable order) and *distinct* unselected pad rows after
+      (argsort yields a permutation, so pad slots never alias a selected
+      row); ``valid (L,)`` float32 is 1 on selected slots, 0 on pads.
+    * scalar leaf: ``rows`` is an empty int32 sentinel and ``valid`` is
+      the leaf's participation scalar ``sel_row[unit]`` — the same value
+      ``mask_tree`` would produce, so ``valid`` doubles as the grad /
+      optimizer mask tree for the packed representation.
+
+    ``n_slots`` must be static (the strategy's ``n_train`` plus the
+    optional always-trained head) for the shapes to stay static.
+    """
+
+    def one(lu: LeafUnit, p):
+        if lu.kind == "scalar":
+            return (jnp.zeros((0,), jnp.int32),
+                    sel_row[lu.base].astype(jnp.float32))
+        nm = p.shape[0]
+        ids = lu.base + lu.stride * jnp.arange(nm)
+        leaf_sel = sel_row[ids].astype(jnp.float32)
+        n_keep = min(nm, n_slots)
+        order = jnp.argsort(-leaf_sel)          # stable: selected first
+        rows = order[:n_keep].astype(jnp.int32)
+        return rows, leaf_sel[rows]
+
+    out = jax.tree_util.tree_map(one, assign.leaf_units, params,
+                                 is_leaf=_is_leafunit)
+    unzip = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    return unzip(0), unzip(1)
+
+
+def slot_gather(assign: UnitAssignment, tree, rows):
+    """Stacked leaves -> their ``(L, ...)`` slot rows; scalar leaves whole."""
+    return jax.tree_util.tree_map(
+        lambda lu, x, r: x if lu.kind == "scalar" else x[r],
+        assign.leaf_units, tree, rows, is_leaf=_is_leafunit)
+
+
+def slot_merge(assign: UnitAssignment, base, packed, rows):
+    """Inverse of :func:`slot_gather`: write slot rows into ``base``.
+
+    Stacked leaves scatter their packed rows into the full-shape base
+    leaf (rows are distinct by construction, so a plain ``.set`` is
+    exact — pad slots rewrite their own unchanged value); scalar leaves
+    pass through from ``packed``.  Used with ``base =
+    stop_gradient(global_params)`` this makes frozen stacked rows
+    constants of the traced loss: no cotangent flows into them and
+    their optimizer state simply does not exist.
+    """
+    return jax.tree_util.tree_map(
+        lambda lu, b, p, r: p if lu.kind == "scalar" else b.at[r].set(p),
+        assign.leaf_units, base, packed, rows, is_leaf=_is_leafunit)
+
+
 def unit_param_counts(assign: UnitAssignment, params) -> np.ndarray:
     """(U,) int64 — parameters per freeze unit (comm accounting)."""
     counts = np.zeros(assign.n_units, np.int64)

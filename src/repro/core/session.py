@@ -24,6 +24,14 @@ plugin name in ``fl.topology`` (core/topology.py: ``hub`` |
 override either with an unregistered instance.  Cross-cutting behaviour
 (straggler dropout, checkpointing, logging, custom metrics) attaches as
 ``ServerHook``s.
+
+The sparse round step (DESIGN.md §7) is two more ``FLConfig`` knobs
+that flow straight through the facade: ``packed=True`` runs
+hub/hierarchical rounds on packed trained-unit slot buffers (zero
+optimizer state for frozen stacked rows, shrunken cross-client
+reduce — bit-exact with the default dense-masked path), and
+``fused_agg`` selects the fused Pallas aggregation kernel ("auto":
+compiled on TPU/GPU, jnp reference elsewhere).
 """
 from __future__ import annotations
 

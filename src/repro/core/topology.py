@@ -30,6 +30,13 @@ Registered plugins:
 
 Adding a topology is a subclass + ``@register_topology`` — no change to
 ``federation.py``, ``Server``, launchers or benchmarks.
+
+The star topologies additionally own the **sparse round step**
+(DESIGN.md §7): ``FLConfig.packed`` swaps the masked local update and
+aggregation for their packed slot-buffer variants (bit-exact,
+regression-tested), and ``FLConfig.fused_agg`` routes the aggregation
+stage through the fused Pallas kernel (``kernels/masked_agg``) with
+the tiling plan hoisted to build time.
 """
 from __future__ import annotations
 
@@ -41,9 +48,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import comm
-from .aggregation import fedavg, hierarchical_masked_fedavg, masked_fedavg
-from .client import local_update
-from .masking import UnitAssignment, mask_tree
+from .aggregation import (fedavg, hierarchical_edge_partials,
+                          hierarchical_masked_fedavg,
+                          hierarchical_masked_fedavg_packed, masked_fedavg,
+                          masked_fedavg_packed)
+from .client import local_update, local_update_packed
+from .masking import UnitAssignment, mask_tree, slot_plan
 from .strategies import SelectionContext, resolve_strategy
 
 PyTree = Any
@@ -85,7 +95,8 @@ def _selection_setup(assign: UnitAssignment, fl, strategy, scores):
 
 def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
                      loss_kwargs: Optional[Dict], *, strategy, scores,
-                     aggregate: Callable, aggregate_dense: Callable):
+                     aggregate: Callable, aggregate_dense: Callable,
+                     aggregate_packed: Optional[Callable] = None):
     """The star-topology skeleton: selection -> vmapped masked local
     training -> a topology-supplied aggregation stage.
 
@@ -93,8 +104,22 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
     path; ``aggregate_dense`` the dense (full-strategy) path.  The hub
     plugin passes ``masked_fedavg``/``fedavg`` so its trace is exactly
     the pre-topology round step (bit-exactness is regression-tested).
+
+    With ``fl.packed`` (DESIGN.md §7) local training and aggregation
+    run on packed slot buffers instead: ``aggregate_packed(g,
+    packed_deltas, rows, valid, sel, weights)`` reduces only the
+    ``n_slots`` trained units per client.  The slot budget ``n_slots``
+    is static (``n_train`` plus the optional always-trained head), so
+    all packed shapes are static under vmap/scan.
     """
     strat, ctx = _selection_setup(assign, fl, strategy, scores)
+    use_packed = fl.packed and not strat.dense
+    if use_packed and aggregate_packed is None:
+        raise ValueError(
+            f"topology {fl.topology!r} has no packed aggregation path; "
+            "set FLConfig.packed=False")
+    n_slots = min(ctx.n_units,
+                  ctx.n_train + (1 if fl.always_train_head else 0))
 
     def round_step(global_params, client_batches, weights, round_key):
         sel = strat.select(round_key, ctx)
@@ -117,6 +142,20 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
 
             deltas, metrics = jax.vmap(one_client_dense)(client_batches)
             new_params = aggregate_dense(global_params, deltas, sel, weights)
+        elif use_packed:
+            rows, valid = jax.vmap(
+                lambda s: slot_plan(assign, s, n_slots, global_params))(sel)
+
+            def one_client_packed(rows_c, valid_c, batches):
+                return local_update_packed(
+                    loss_fn, global_params, assign, rows_c, valid_c,
+                    batches, lr=fl.lr, optimizer=fl.optimizer,
+                    prox_mu=fl.prox_mu, loss_kwargs=loss_kwargs)
+
+            pdeltas, metrics = jax.vmap(one_client_packed)(
+                rows, valid, client_batches)
+            new_params = aggregate_packed(global_params, pdeltas, rows,
+                                          valid, sel, weights)
         else:
             def one_client(sel_row, batches):
                 mask = mask_tree(assign, sel_row, global_params)
@@ -135,6 +174,39 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
         return new_params, out_metrics
 
     return round_step
+
+
+def _fused_hub_aggregate(assign: UnitAssignment) -> Callable:
+    """Masked FedAvg through the fused Pallas kernel, with the per-leaf
+    tiling plan hoisted out of the traced function: built once at the
+    first trace (shapes only) and reused for every retrace/call."""
+    from ..kernels.masked_agg.ops import build_agg_plan, masked_fedavg_fused
+    cache: Dict[str, Any] = {}
+
+    def aggregate(g, d, sel, w):
+        if "plan" not in cache:
+            cache["plan"] = build_agg_plan(assign, g)
+        return masked_fedavg_fused(g, d, sel, w, assign,
+                                   plan=cache["plan"])
+
+    return aggregate
+
+
+def _fused_hier_aggregate(assign: UnitAssignment, mem) -> Callable:
+    """Two-stage masked FedAvg with the hub combine running through the
+    fused kernel: jnp per-edge partial means (stage 1), then the Pallas
+    combine over edges with the per-edge weight mass as ``wsel``."""
+    from ..kernels.masked_agg.ops import build_agg_plan, masked_combine_fused
+    cache: Dict[str, Any] = {}
+
+    def aggregate(g, d, sel, w):
+        if "plan" not in cache:
+            cache["plan"] = build_agg_plan(assign, g)
+        means, e_den = hierarchical_edge_partials(d, sel, w, assign, mem)
+        return masked_combine_fused(g, means, e_den, assign,
+                                    plan=cache["plan"])
+
+    return aggregate
 
 
 class Topology:
@@ -266,12 +338,18 @@ class Hub(Topology):
 
     def build_round_step(self, loss_fn, assign, fl, loss_kwargs=None, *,
                          strategy=None, scores=None):
+        if fl.resolve_fused_agg():
+            aggregate = _fused_hub_aggregate(assign)
+        else:
+            aggregate = lambda g, d, sel, w: masked_fedavg(g, d, sel, w,
+                                                           assign)
         return _star_round_step(
             loss_fn, assign, fl, loss_kwargs, strategy=strategy,
             scores=scores,
-            aggregate=lambda g, d, sel, w: masked_fedavg(g, d, sel, w,
-                                                         assign),
-            aggregate_dense=lambda g, d, sel, w: fedavg(g, d, w))
+            aggregate=aggregate,
+            aggregate_dense=lambda g, d, sel, w: fedavg(g, d, w),
+            aggregate_packed=lambda g, d, r, v, sel, w:
+                masked_fedavg_packed(g, d, r, v, sel, w, assign))
 
     def round_bytes(self, sel, ubytes, fl):
         return comm.hub_round_bytes(
@@ -298,11 +376,17 @@ class Hierarchical(Topology):
                          strategy=None, scores=None):
         mem = jnp.asarray(comm.edge_membership(fl.n_clients,
                                                fl.resolve_n_edges()))
-        agg = lambda g, d, sel, w: hierarchical_masked_fedavg(
-            g, d, sel, w, assign, mem)
+        if fl.resolve_fused_agg():
+            agg = _fused_hier_aggregate(assign, mem)
+        else:
+            agg = lambda g, d, sel, w: hierarchical_masked_fedavg(
+                g, d, sel, w, assign, mem)
         return _star_round_step(
             loss_fn, assign, fl, loss_kwargs, strategy=strategy,
-            scores=scores, aggregate=agg, aggregate_dense=agg)
+            scores=scores, aggregate=agg, aggregate_dense=agg,
+            aggregate_packed=lambda g, d, r, v, sel, w:
+                hierarchical_masked_fedavg_packed(g, d, r, v, sel, w,
+                                                  assign, mem))
 
     def round_bytes(self, sel, ubytes, fl):
         mem = comm.edge_membership(fl.n_clients, fl.resolve_n_edges())
@@ -345,6 +429,10 @@ class Gossip(Topology):
 
     def build_round_step(self, loss_fn, assign, fl, loss_kwargs=None, *,
                          strategy=None, scores=None):
+        if fl.packed:
+            raise ValueError(
+                "packed round path: gossip mixing blends full replicas, "
+                "so there is nothing to pack — use hub or hierarchical")
         strat, ctx = _selection_setup(assign, fl, strategy, scores)
         mix = jnp.asarray(ring_mixing_matrix(fl.n_clients))
 

@@ -20,6 +20,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def resolve_interpret(interpret=None) -> bool:
+    """None -> backend default: compiled Pallas on TPU/GPU, interpret
+    elsewhere (the CPU hosts have no Mosaic lowering)."""
+    if interpret is None:
+        return jax.default_backend() not in ("tpu", "gpu")
+    return bool(interpret)
+
+
 def _agg_kernel(g_ref, d_ref, w_ref, o_ref):
     g = g_ref[0].astype(jnp.float32)              # (tile,)
     d = d_ref[0].astype(jnp.float32)              # (C, tile)
@@ -31,8 +39,13 @@ def _agg_kernel(g_ref, d_ref, w_ref, o_ref):
 
 
 def masked_agg(global_tiled, deltas_tiled, weights_tiled, *,
-               interpret=False):
-    """global (T, tile); deltas (T, C, tile); weights (T, C) -> (T, tile)."""
+               interpret=None):
+    """global (T, tile); deltas (T, C, tile); weights (T, C) -> (T, tile).
+
+    ``interpret=None`` resolves from the backend (compiled on TPU/GPU,
+    interpreter on CPU) — see :func:`resolve_interpret`.
+    """
+    interpret = resolve_interpret(interpret)
     t, tile = global_tiled.shape
     c = deltas_tiled.shape[1]
     return pl.pallas_call(

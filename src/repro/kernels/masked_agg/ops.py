@@ -1,9 +1,24 @@
 """Pytree-level wrapper: pack params/deltas into unit tiles, run the
 fused kernel, unpack.  Drop-in replacement for core.aggregation.
-masked_fedavg (tested equal in tests/test_kernels_masked_agg.py)."""
+masked_fedavg (tested equal in tests/test_kernels_masked_agg.py).
+
+The per-leaf packing metadata — which unit owns each tile row, segment
+sizes, pad amounts, row offsets — is a pure function of the unit
+assignment and the leaf shapes, so it is planned ONCE
+(:func:`build_agg_plan`) and reused across traces; the traced function
+only executes the planned pads/reshapes.  ``interpret`` resolves from
+the backend by default (compiled Pallas on TPU/GPU, interpreter on
+CPU) — see ``kernel.resolve_interpret``.
+
+``masked_combine_fused`` is the general entry point: it takes the
+per-client per-unit weight matrix ``wsel (C, U)`` directly, which lets
+the hierarchical topology run its hub combine through the same kernel
+(clients -> edges, ``wsel`` -> per-edge weight mass; see
+``core.aggregation.hierarchical_edge_partials``).
+"""
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +29,24 @@ from ...core.masking import UnitAssignment, _is_leafunit
 from .kernel import masked_agg
 
 TILE = 2048
+
+
+class AggSegment(NamedTuple):
+    """One contiguous run of tile rows belonging to one (leaf, unit)."""
+    path: str
+    unit: int        # freeze unit owning these rows
+    n: int           # payload elements (before padding)
+    n_tiles: int     # tile rows
+    macro: int       # macro index within the leaf (-1 for scalar leaves)
+
+
+class AggPlan(NamedTuple):
+    """Build-time tiling plan for the fused masked aggregation."""
+    tile: int
+    leaves: Tuple[Tuple[str, Tuple[int, ...], Tuple[int, ...]], ...]
+    # (path, leaf shape, unit ids per macro row — len 1 for scalar)
+    segments: Tuple[AggSegment, ...]
+    n_rows: int      # total tile rows
 
 
 def _leaf_units_flat(assign, params):
@@ -30,29 +63,57 @@ def _leaf_units_flat(assign, params):
     return out
 
 
-def masked_fedavg_fused(global_params, deltas, sel, weights,
-                        assign: UnitAssignment, *, tile: int = TILE,
-                        interpret: bool = True) -> Any:
-    """Same contract as core.aggregation.masked_fedavg.
+def build_agg_plan(assign: UnitAssignment, params, tile: int = TILE
+                   ) -> AggPlan:
+    """Plan the unit-tile packing once, outside any trace.
 
-    deltas: client-stacked pytree (C leading); sel (C, U); weights (C,).
+    Only leaf *shapes* are read, so ``params`` may be tracers (building
+    the plan lazily at first trace is equivalent to build time — the
+    plan is cached on the round-step closure and never re-planned).
     """
-    c = sel.shape[0]
-    leaves = _leaf_units_flat(assign, global_params)
-    wsel = sel * weights[:, None].astype(sel.dtype)        # (C, U)
+    leaves = []
+    segments = []
+    n_rows = 0
+    for path, leaf, unit_ids in _leaf_units_flat(assign, params):
+        shape = tuple(leaf.shape)
+        leaves.append((path, shape, tuple(int(u) for u in unit_ids)))
+        if len(unit_ids) == 1:
+            sizes = [(int(np.prod(shape)) if shape else 1, -1)]
+        else:
+            per = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+            sizes = [(per, m) for m in range(shape[0])]
+        for (n, macro), u in zip(sizes, unit_ids):
+            nt = -(-n // tile)
+            segments.append(AggSegment(path, int(u), n, nt, macro))
+            n_rows += nt
+    return AggPlan(tile, tuple(leaves), tuple(segments), n_rows)
+
+
+def masked_combine_fused(global_params, deltas, wsel, assign: UnitAssignment,
+                         *, tile: int = TILE,
+                         interpret: Optional[bool] = None,
+                         plan: Optional[AggPlan] = None) -> Any:
+    """Fused ``new_u = g_u + Σ_c wsel_cu·Δ_cu / Σ_c wsel_cu``.
+
+    ``deltas``: client-stacked pytree (C leading); ``wsel (C, U)`` is
+    the per-client per-unit weight mass (``sel * weights`` for the flat
+    FedAvg; per-edge weight mass for the hierarchical hub combine).
+    """
+    if plan is None or plan.tile != tile:
+        plan = build_agg_plan(assign, global_params, tile)
+    c = wsel.shape[0]
+    gleaves = {p: l for p, l in pt.flatten_with_paths(global_params)}
+    dleaves = {p: l for p, l in pt.flatten_with_paths(deltas)}
 
     g_rows, d_rows, w_rows = [], [], []
-    meta = []  # (path, shape, n_elems, n_tiles per segment rows)
-    dleaves = {p: l for p, l in pt.flatten_with_paths(deltas)}
-    for path, leaf, unit_ids in leaves:
-        d = dleaves[path]
+    for path, shape, unit_ids in plan.leaves:
+        leaf, d = gleaves[path], dleaves[path]
         if len(unit_ids) == 1:
-            segs = [(leaf.reshape(-1), d.reshape(c, -1), int(unit_ids[0]))]
+            segs = [(leaf.reshape(-1), d.reshape(c, -1), unit_ids[0])]
         else:
-            lf = leaf.reshape(leaf.shape[0], -1)
-            df = d.reshape(c, leaf.shape[0], -1)
-            segs = [(lf[m], df[:, m], int(u))
-                    for m, u in enumerate(unit_ids)]
+            lf = leaf.reshape(shape[0], -1)
+            df = d.reshape(c, shape[0], -1)
+            segs = [(lf[m], df[:, m], u) for m, u in enumerate(unit_ids)]
         for gseg, dseg, u in segs:
             n = gseg.shape[0]
             nt = -(-n // tile)
@@ -61,29 +122,42 @@ def masked_fedavg_fused(global_params, deltas, sel, weights,
             d_rows.append(jnp.pad(dseg, ((0, 0), (0, pad)))
                           .reshape(c, nt, tile).swapaxes(0, 1))
             w_rows.append(jnp.broadcast_to(wsel[:, u], (nt, c)))
-            meta.append((path, n, nt))
 
     g_t = jnp.concatenate(g_rows, axis=0)
     d_t = jnp.concatenate(d_rows, axis=0)
     w_t = jnp.concatenate(w_rows, axis=0)
     out_t = masked_agg(g_t, d_t, w_t, interpret=interpret)
 
-    # unpack: walk meta in packing order
+    # unpack: walk the plan's segments in packing order
     flat_out = {}
     row = 0
     i = 0
-    for path, leaf, unit_ids in leaves:
+    for path, shape, unit_ids in plan.leaves:
+        leaf = gleaves[path]
         pieces = []
         for _ in unit_ids:
-            mpath, n, nt = meta[i]
-            assert mpath == path
-            pieces.append(out_t[row:row + nt].reshape(-1)[:n])
-            row += nt
+            seg = plan.segments[i]
+            assert seg.path == path
+            pieces.append(out_t[row:row + seg.n_tiles].reshape(-1)[:seg.n])
+            row += seg.n_tiles
             i += 1
         if len(unit_ids) == 1:
-            flat_out[path] = pieces[0].reshape(leaf.shape).astype(leaf.dtype)
+            flat_out[path] = pieces[0].reshape(shape).astype(leaf.dtype)
         else:
             flat_out[path] = jnp.stack(
-                [p.reshape(leaf.shape[1:]) for p in pieces]).astype(leaf.dtype)
+                [p.reshape(shape[1:]) for p in pieces]).astype(leaf.dtype)
 
     return pt.tree_map_with_path(lambda p, x: flat_out[p], global_params)
+
+
+def masked_fedavg_fused(global_params, deltas, sel, weights,
+                        assign: UnitAssignment, *, tile: int = TILE,
+                        interpret: Optional[bool] = None,
+                        plan: Optional[AggPlan] = None) -> Any:
+    """Same contract as core.aggregation.masked_fedavg.
+
+    deltas: client-stacked pytree (C leading); sel (C, U); weights (C,).
+    """
+    wsel = sel * weights[:, None].astype(sel.dtype)        # (C, U)
+    return masked_combine_fused(global_params, deltas, wsel, assign,
+                                tile=tile, interpret=interpret, plan=plan)

@@ -5,7 +5,7 @@ scale; on a pod the same code runs under the production mesh).
         --arch qwen3-1.7b --reduced --clients 4 --rounds 20 \
         --train-fraction 0.5 [--strategy uniform|fixed_last|weighted|full]
         [--synchronized] [--topology hub|hierarchical|gossip [--edges 2]]
-        [--ckpt results/ck/run1]
+        [--packed] [--fused-agg auto|on|off] [--ckpt results/ck/run1]
 
 Drives the paper's federated round (per-client layer subsets from the
 registered strategy, masked local Adam, participation-weighted FedAvg)
@@ -41,6 +41,11 @@ def main():
                     choices=registered_topologies())
     ap.add_argument("--edges", type=int, default=None,
                     help="edge aggregators (hierarchical; default ~sqrt)")
+    ap.add_argument("--packed", action="store_true",
+                    help="packed trained-unit round path (DESIGN.md §7)")
+    ap.add_argument("--fused-agg", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="fused Pallas aggregation (kernels/masked_agg)")
     ap.add_argument("--fedprox-mu", type=float, default=0.0)
     ap.add_argument("--dropout", type=float, default=0.0)
     ap.add_argument("--lr", type=float, default=2e-3)
@@ -74,7 +79,8 @@ def main():
                   train_fraction=args.train_fraction,
                   strategy=args.strategy, synchronized=args.synchronized,
                   lr=args.lr, prox_mu=args.fedprox_mu,
-                  topology=args.topology, n_edges=args.edges)
+                  topology=args.topology, n_edges=args.edges,
+                  packed=args.packed, fused_agg=args.fused_agg)
     hooks = [Checkpointer(args.ckpt)] if args.ckpt else []
     fed = Federation.from_config(cfg, fl, data=loader, seed=args.seed,
                                  dropout_rate=args.dropout, hooks=hooks)

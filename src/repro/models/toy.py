@@ -1,0 +1,75 @@
+"""Tiny stacked-block residual MLP for round-step tests and benches.
+
+Not a paper model: its job is to exercise BOTH leaf kinds of the unit
+assignment — scalar input/head leaves plus *stacked* block leaves
+applied under ``lax.scan`` — at a size where dense-masked, packed and
+fused round steps can be compared quickly on a CPU host.  Unit layout
+mirrors the zoo models: unit 0 = input projection, units 1..n_blocks =
+one per block, unit n_blocks+1 = head.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.masking import LeafUnit, UnitAssignment
+
+
+def init_toy_mlp(key, *, n_blocks: int = 8, d: int = 32, hidden: int = 64,
+                 out: int = 8) -> Dict:
+    ks = jax.random.split(key, 5)
+    return {
+        "inp": {"w": jax.random.normal(ks[0], (d, d)) / jnp.sqrt(d)},
+        "blocks": {
+            "w1": jax.random.normal(ks[1], (n_blocks, d, hidden))
+            / jnp.sqrt(d),
+            "b1": jnp.zeros((n_blocks, hidden)),
+            "w2": jax.random.normal(ks[2], (n_blocks, hidden, d))
+            / jnp.sqrt(hidden),
+        },
+        "head": {"w": jax.random.normal(ks[3], (d, out)) / jnp.sqrt(d),
+                 "b": jnp.zeros((out,))},
+    }
+
+
+def toy_units(params) -> UnitAssignment:
+    """One unit per block (stacked) + scalar input / head units."""
+    n_blocks = params["blocks"]["w1"].shape[0]
+    head_unit = n_blocks + 1
+    leaf_units = {
+        "inp": {"w": LeafUnit("scalar", 0, 0)},
+        "blocks": {k: LeafUnit("stacked", 1, 1) for k in params["blocks"]},
+        "head": {k: LeafUnit("scalar", head_unit, 0)
+                 for k in params["head"]},
+    }
+    names = (("inp",) + tuple(f"block{i}" for i in range(n_blocks))
+             + ("head",))
+    return UnitAssignment(n_blocks + 2, leaf_units, names)
+
+
+def toy_apply(params, x: jnp.ndarray) -> jnp.ndarray:
+    h = x @ params["inp"]["w"]
+
+    def blk(h, wb):
+        w1, b1, w2 = wb
+        return h + jnp.tanh(h @ w1 + b1) @ w2, None
+
+    h, _ = jax.lax.scan(blk, h, (params["blocks"]["w1"],
+                                 params["blocks"]["b1"],
+                                 params["blocks"]["w2"]))
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def toy_loss(params, batch) -> Tuple[jnp.ndarray, Dict]:
+    pred = toy_apply(params, batch["x"])
+    return jnp.mean(jnp.square(pred - batch["y"])), {}
+
+
+def toy_batches(key, *, n_clients: int, steps: int, batch: int, d: int,
+                out: int):
+    """(C, steps, b, ...) synthetic regression batches."""
+    kx, ky = jax.random.split(key)
+    return {"x": jax.random.normal(kx, (n_clients, steps, batch, d)),
+            "y": jax.random.normal(ky, (n_clients, steps, batch, out))}

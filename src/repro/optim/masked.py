@@ -27,8 +27,13 @@ class AdamState(NamedTuple):
 
 
 def adam_init(params) -> AdamState:
-    z = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, jnp.float32), params)
-    return AdamState(mu=z, nu=jax.tree_util.tree_map(jnp.copy, z),
+    def zeros():
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x, jnp.float32), params)
+
+    # two independent zero trees — a tree_map(jnp.copy) here would
+    # materialize a gratuitous full-model copy per client per round
+    return AdamState(mu=zeros(), nu=zeros(),
                      count=jnp.zeros((), jnp.int32))
 
 

@@ -1,0 +1,205 @@
+"""Packed / fused sparse round steps vs the dense-masked reference.
+
+The packed path (FLConfig.packed, DESIGN.md §7) must produce
+**bit-exact** global params vs the reference ``masked_fedavg`` round
+step — asserted here across strategies {uniform, fixed_last,
+synchronized}, topologies {hub, hierarchical}, scalar+stacked leaf
+kinds (the toy model has both), straggler (zero-weight) clients, the
+always-trained head, and zero-participation units.  The fused Pallas
+path is held to the kernel tolerance (interpret mode on CPU).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import masked_fedavg, masked_fedavg_packed
+from repro.core.federation import FLConfig, build_round_step
+from repro.core.masking import (apply_mask, mask_tree, slot_gather,
+                                slot_merge, slot_plan)
+from repro.models.toy import (init_toy_mlp, toy_batches, toy_loss,
+                              toy_units)
+
+N_BLOCKS, D, HIDDEN, OUT = 6, 16, 32, 4
+
+
+def _setup(seed, n_clients):
+    key = jax.random.PRNGKey(seed)
+    params = init_toy_mlp(key, n_blocks=N_BLOCKS, d=D, hidden=HIDDEN,
+                          out=OUT)
+    assign = toy_units(params)
+    batches = toy_batches(jax.random.fold_in(key, 1), n_clients=n_clients,
+                          steps=2, batch=4, d=D, out=OUT)
+    weights = jnp.asarray(np.random.default_rng(seed)
+                          .uniform(0.5, 2.0, n_clients), jnp.float32)
+    return params, assign, batches, weights
+
+
+def _assert_trees_equal(a, b, exact=True, atol=0.0):
+    for (pa, la), (_, lb) in zip(jax.tree_util.tree_leaves_with_path(a),
+                                 jax.tree_util.tree_leaves_with_path(b)):
+        if exact:
+            np.testing.assert_array_equal(
+                np.asarray(la), np.asarray(lb),
+                err_msg=jax.tree_util.keystr(pa))
+        else:
+            np.testing.assert_allclose(
+                np.asarray(la), np.asarray(lb), atol=atol, rtol=atol,
+                err_msg=jax.tree_util.keystr(pa))
+
+
+def _round(params, assign, batches, weights, fl, seed):
+    step = jax.jit(build_round_step(toy_loss, assign, fl))
+    return step(params, batches, weights, jax.random.PRNGKey(seed + 99))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 200),
+       strategy=st.sampled_from(["uniform", "fixed_last", "synchronized"]),
+       topology=st.sampled_from(["hub", "hierarchical"]))
+def test_packed_bit_exact_vs_reference(seed, strategy, topology):
+    c = 4
+    params, assign, batches, weights = _setup(seed, c)
+    fl = FLConfig(n_clients=c, train_fraction=0.4, strategy=strategy,
+                  topology=topology, n_edges=2, lr=1e-2)
+    ref_p, ref_m = _round(params, assign, batches, weights, fl, seed)
+    pk_p, pk_m = _round(params, assign, batches, weights,
+                        dataclasses.replace(fl, packed=True), seed)
+    np.testing.assert_array_equal(np.asarray(ref_m["sel"]),
+                                  np.asarray(pk_m["sel"]))
+    _assert_trees_equal(ref_p, pk_p, exact=True)
+    np.testing.assert_array_equal(float(ref_m["loss_mean"]),
+                                  float(pk_m["loss_mean"]))
+
+
+def test_packed_straggler_and_head_bit_exact():
+    c = 5
+    params, assign, batches, weights = _setup(3, c)
+    weights = weights.at[1].set(0.0)            # dropped straggler
+    fl = FLConfig(n_clients=c, train_fraction=0.25, strategy="uniform",
+                  topology="hub", always_train_head=True)
+    ref_p, _ = _round(params, assign, batches, weights, fl, 3)
+    pk_p, _ = _round(params, assign, batches, weights,
+                     dataclasses.replace(fl, packed=True), 3)
+    _assert_trees_equal(ref_p, pk_p, exact=True)
+
+
+def test_packed_zero_participation_units_keep_global():
+    """fixed_last trains only the last 2 units: every other unit has
+    zero participation and must keep the global value bit-exactly."""
+    c = 4
+    params, assign, batches, weights = _setup(5, c)
+    fl = FLConfig(n_clients=c, n_train_units=2, strategy="fixed_last",
+                  topology="hub", packed=True)
+    new_p, metrics = _round(params, assign, batches, weights, fl, 5)
+    sel = np.asarray(metrics["sel"])
+    assert sel[:, :-2].sum() == 0.0
+    # untouched units: inp (unit 0) + blocks 0..N-2 (units 1..N-1)
+    np.testing.assert_array_equal(np.asarray(new_p["inp"]["w"]),
+                                  np.asarray(params["inp"]["w"]))
+    for k in params["blocks"]:
+        np.testing.assert_array_equal(
+            np.asarray(new_p["blocks"][k][:-1]),
+            np.asarray(params["blocks"][k][:-1]))
+        # the last block (unit N) IS trained — it must have moved
+        assert not np.array_equal(np.asarray(new_p["blocks"][k][-1]),
+                                  np.asarray(params["blocks"][k][-1]))
+
+
+def test_packed_prox_matches_reference():
+    """FedProx couples the prox sum to the packed representation —
+    reduction order differs, so equality is near- rather than bit-."""
+    c = 4
+    params, assign, batches, weights = _setup(7, c)
+    fl = FLConfig(n_clients=c, train_fraction=0.5, strategy="uniform",
+                  prox_mu=0.1)
+    ref_p, _ = _round(params, assign, batches, weights, fl, 7)
+    pk_p, _ = _round(params, assign, batches, weights,
+                     dataclasses.replace(fl, packed=True), 7)
+    _assert_trees_equal(ref_p, pk_p, exact=False, atol=1e-6)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 200),
+       topology=st.sampled_from(["hub", "hierarchical"]))
+def test_fused_matches_reference(seed, topology):
+    c = 4
+    params, assign, batches, weights = _setup(seed, c)
+    fl = FLConfig(n_clients=c, train_fraction=0.4, strategy="uniform",
+                  topology=topology, n_edges=2)
+    ref_p, _ = _round(params, assign, batches, weights, fl, seed)
+    fu_p, _ = _round(params, assign, batches, weights,
+                     dataclasses.replace(fl, fused_agg="on"), seed)
+    _assert_trees_equal(ref_p, fu_p, exact=False, atol=2e-5)
+
+
+def test_gossip_rejects_packed():
+    params, assign, _, _ = _setup(0, 4)
+    fl = FLConfig(n_clients=4, train_fraction=0.5, topology="gossip",
+                  packed=True)
+    with pytest.raises(ValueError, match="packed"):
+        build_round_step(toy_loss, assign, fl)
+
+
+def test_fused_agg_validation():
+    with pytest.raises(ValueError, match="fused_agg"):
+        FLConfig(n_clients=2, fused_agg="maybe").resolve_fused_agg()
+    assert FLConfig(n_clients=2, fused_agg="on").resolve_fused_agg()
+    assert not FLConfig(n_clients=2, fused_agg="off").resolve_fused_agg()
+
+
+def test_slot_roundtrip_gather_merge():
+    """slot_gather/slot_merge invert each other on selected rows and
+    leave frozen rows untouched."""
+    params, assign, _, _ = _setup(11, 1)
+    sel_row = jnp.zeros((assign.n_units,)).at[jnp.asarray([1, 3])].set(1.0)
+    rows, valid = slot_plan(assign, sel_row, 2, params)
+    packed = slot_gather(assign, params, rows)
+    merged = slot_merge(assign, params, packed, rows)
+    _assert_trees_equal(params, merged, exact=True)
+    # pad rows are distinct from selected rows
+    r = np.asarray(rows["blocks"]["w1"])
+    assert len(set(r.tolist())) == len(r)
+
+
+def test_packed_aggregation_matches_dense():
+    """Direct check of masked_fedavg_packed against masked_fedavg on
+    consistent (dense-masked vs gathered) deltas."""
+    c = 4
+    params, assign, _, weights = _setup(13, c)
+    key = jax.random.PRNGKey(13)
+    sel = np.zeros((c, assign.n_units), np.float32)
+    rng = np.random.default_rng(13)
+    for i in range(c):
+        sel[i, rng.choice(assign.n_units, 3, replace=False)] = 1.0
+    sel = jnp.asarray(sel)
+    deltas = jax.tree_util.tree_map(
+        lambda x: jax.random.normal(
+            jax.random.fold_in(key, abs(hash(str(x.shape))) % 999),
+            (c,) + x.shape) * 0.05, params)
+    deltas = jax.vmap(
+        lambda s, t: apply_mask(mask_tree(assign, s, params), t))(sel, deltas)
+    rows, valid = jax.vmap(
+        lambda s: slot_plan(assign, s, 3, params))(sel)
+    pdeltas = jax.vmap(
+        lambda d, r: slot_gather(assign, d, r))(deltas, rows)
+    ref = jax.jit(
+        lambda p, d, s, w: masked_fedavg(p, d, s, w, assign))(
+            params, deltas, sel, weights)
+    got = jax.jit(
+        lambda p, d, r, v, s, w: masked_fedavg_packed(p, d, r, v, s, w,
+                                                      assign))(
+            params, pdeltas, rows, valid, sel, weights)
+    _assert_trees_equal(ref, got, exact=True)
+
+
+def test_adam_init_states_independent():
+    """adam_init must not alias (or copy) mu into nu."""
+    from repro.optim.masked import adam_init
+    st_ = adam_init({"w": jnp.ones((3, 2))})
+    assert st_.mu["w"] is not st_.nu["w"]
+    np.testing.assert_array_equal(np.asarray(st_.mu["w"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(st_.nu["w"]), 0.0)
