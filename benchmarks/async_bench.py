@@ -1,0 +1,186 @@
+"""Sync vs. FedBuff-buffered rounds: wall-clock-to-accuracy (DESIGN.md §8).
+
+Runs the paper's VGG16 (reduced width) on CIFAR-shaped data at the
+paper's 25%/50% freeze settings, twice per setting:
+
+* **sync** — the synchronous packed round loop.  A synchronous server
+  waits for its slowest client, so a round's simulated wall-clock is
+  ``max_c delay(c, round)`` under the same seeded delay model the async
+  scheduler uses.
+* **buffered** — ``FLConfig.async_buffer`` FedBuff rounds under the same
+  heavy-tailed (Pareto) per-client delays: the server flushes every B
+  buffered packed updates and never waits for the tail.
+
+Per variant the bench records the (simulated time, eval accuracy) curve
+and the time to reach a shared target accuracy; "wall-clock" is the
+*simulated* scheduler clock — host compute time is meaningless for a
+latency simulation (the simulator deliberately over-computes cohorts to
+keep flushes bit-comparable with sync rounds, see core/async_agg.py).
+
+Writes BENCH_async.json next to BENCH_round_step.json (EXPERIMENTS.md
+§Perf).  ``--smoke`` is the CI-gate variant (tiny data, fewer rounds,
+same JSON shape).
+
+    PYTHONPATH=src python -m benchmarks.async_bench [--smoke]
+        [--out BENCH_async.json] [--delay-dist pareto:1.2]
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import platform
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FLConfig, Federation, ModelSpec
+from repro.core.async_agg import DelayScheduler
+from repro.data import FederatedLoader, cifar_like, iid_partition
+from repro.models import paper_models as pm
+
+# full-mode scale is bounded by the simulator's deliberate cohort
+# over-compute (one width-C cohort step per dispatch, see
+# core/async_agg.py): a buffered run costs ~buffer x the sync run's
+# host time, so the committed trajectory point stays CPU-host-sized
+FULL = dict(n_clients=8, rounds=8, buffer=4, width=0.125, n_data=256,
+            n_eval=128, batch=4, steps=2, lr=2e-3)
+SMOKE = dict(n_clients=4, rounds=5, buffer=2, width=0.125, n_data=128,
+             n_eval=64, batch=4, steps=2, lr=2e-3)
+
+
+def vgg_loss(p, batch):
+    return pm.xent_loss(pm.vgg16_apply(p, batch["x"]), batch["y"]), {}
+
+
+def _setup(cfg, seed=0):
+    spec = ModelSpec(
+        name="vgg16",
+        init_params=functools.partial(pm.init_vgg16,
+                                      width_mult=cfg["width"]),
+        loss_fn=vgg_loss, unit_order=pm.vgg16_units)
+    x, y = cifar_like(cfg["n_data"], key=0)
+    shards = iid_partition(cfg["n_data"], cfg["n_clients"], key=1)
+    loader = FederatedLoader([{"x": x[s], "y": y[s]} for s in shards],
+                             batch_size=cfg["batch"],
+                             steps_per_round=cfg["steps"])
+    ex, ey = cifar_like(cfg["n_eval"], key=7)
+    ex, ey = jnp.asarray(ex), jnp.asarray(ey)
+
+    @jax.jit
+    def accuracy(params):
+        return (pm.vgg16_apply(params, ex).argmax(-1) == ey).mean()
+
+    return spec, loader, accuracy
+
+
+def run_variant(cfg, *, fraction, delay_dist, buffer, seed=0) -> dict:
+    """One (freeze fraction, sync-or-buffered) training curve."""
+    spec, loader, accuracy = _setup(cfg, seed)
+    is_async = buffer > 0
+    fl = FLConfig(n_clients=cfg["n_clients"], train_fraction=fraction,
+                  lr=cfg["lr"], fused_agg="off",
+                  packed=not is_async,           # async is packed by design
+                  async_buffer=buffer, client_delay_dist=delay_dist)
+    fed = Federation.from_config(spec, fl, data=loader, seed=seed,
+                                 eval_fn=accuracy)
+    if is_async:
+        # B buffered updates per flush: match the sync run's total
+        # client work (rounds x C updates)
+        flushes = cfg["rounds"] * cfg["n_clients"] // buffer
+        fed.fit(flushes)
+        times = [r.sim_time for r in fed.history]
+        stale = [r.staleness_mean for r in fed.history]
+    else:
+        fed.fit(cfg["rounds"])
+        # a synchronous server waits for its slowest client each round
+        sched = DelayScheduler(delay_dist, seed=seed)
+        per_round = [max(sched.delay(c, r)
+                         for c in range(cfg["n_clients"]))
+                     for r in range(cfg["rounds"])]
+        times = list(np.cumsum(per_round))
+        stale = [0.0] * cfg["rounds"]
+    accs = [r.eval_metric for r in fed.history]
+    return {"times": [float(t) for t in times],
+            "accs": [float(a) for a in accs],
+            "final_acc": float(accs[-1]),
+            "staleness_mean": float(np.mean(stale)),
+            "comm": fed.comm_summary()}
+
+
+def time_to_target(times, accs, target):
+    for t, a in zip(times, accs):
+        if a >= target:
+            return float(t)
+    return None
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale run (tiny model/data, fewer rounds)")
+    ap.add_argument("--out", default="BENCH_async.json")
+    ap.add_argument("--fractions", type=float, nargs="+",
+                    default=[0.25, 0.50])
+    ap.add_argument("--delay-dist", default="pareto:1.2",
+                    help="heavy-tailed straggler regime by default")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    cfg = SMOKE if args.smoke else FULL
+
+    results, failures = {}, []
+    for frac in args.fractions:
+        sync = run_variant(cfg, fraction=frac,
+                           delay_dist=args.delay_dist, buffer=0,
+                           seed=args.seed)
+        buf = run_variant(cfg, fraction=frac,
+                          delay_dist=args.delay_dist,
+                          buffer=cfg["buffer"], seed=args.seed)
+        # shared target: just under the weaker variant's best accuracy,
+        # so both curves can reach it and the race is on wall-clock
+        target = 0.98 * min(max(sync["accs"]), max(buf["accs"]))
+        t_sync = time_to_target(sync["times"], sync["accs"], target)
+        t_buf = time_to_target(buf["times"], buf["accs"], target)
+        row = {"sync": sync, "buffered": buf, "target_acc": float(target),
+               "t_sync": t_sync, "t_buffered": t_buf,
+               "speedup": (t_sync / t_buf)
+               if t_sync and t_buf else None}
+        results[f"{frac:.2f}"] = row
+        print(f"frac={frac:.2f} target={target:.3f} "
+              f"t_sync={t_sync} t_buffered={t_buf} "
+              f"speedup={row['speedup']} "
+              f"avg_staleness={buf['staleness_mean']:.2f}")
+        # sanity gates (what CI relies on): both variants learned and
+        # the async run actually exercised out-of-order/stale updates
+        if not all(np.isfinite(sync["accs"])) or \
+                not all(np.isfinite(buf["accs"])):
+            failures.append(f"non-finite accuracy at frac={frac}")
+        if buf["staleness_mean"] <= 0.0:
+            failures.append(f"no staleness observed at frac={frac}")
+
+    report = {
+        "bench": "async",
+        "mode": "smoke" if args.smoke else "full",
+        "model": cfg,
+        "delay_dist": args.delay_dist,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "results": results,
+        "sanity_ok": not failures,
+    }
+    at25 = results.get("0.25")
+    if at25 is not None and at25["speedup"] is not None:
+        report["buffered_wins_time_at_25"] = at25["speedup"] > 1.0
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    if failures:
+        raise SystemExit("async bench sanity FAILED: " +
+                         "; ".join(failures))
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -66,16 +66,40 @@ def save_server_state(path: str, server, extra: Optional[Dict] = None):
         if hasattr(jax.random, "key_data") else np.asarray(server.key).tolist(),
     }
     meta.update(extra or {})
-    save_pytree(path, server.params, metadata=meta)
+    tree = server.params
+    engine = getattr(server, "async_engine", None)
+    if engine is not None and engine.started:
+        # buffered-async runs carry live state beyond the params: the
+        # buffer's packed deltas, in-flight dispatches (with simulated
+        # completion times), per-client round tags and the current
+        # version's selection — all needed for a bit-exact resume
+        async_meta, async_arrays = engine.checkpoint_state()
+        meta["async"] = async_meta
+        tree = {"params": server.params, "async_arrays": async_arrays}
+    save_pytree(path, tree, metadata=meta)
 
 
 def restore_server_state(path: str, server):
     """Restore params (= topology state), history, selection history and
     the RNG stream, so a resumed ``fit`` continues bit-exactly: the next
     round's key, loader base and log cadence all pick up where the saved
-    run stopped."""
-    server.params = load_pytree(path, server.params)
+    run stopped.  Buffered-async checkpoints additionally rebuild the
+    update buffer, per-client round tags and the delay-scheduler's
+    in-flight work (``AsyncRoundEngine.restore_state``)."""
     meta = load_metadata(path)
+    engine = getattr(server, "async_engine", None)
+    if "async" in meta:
+        if engine is None:
+            raise ValueError(
+                "checkpoint holds buffered-async state; restore it into "
+                "a Federation configured with FLConfig.async_buffer > 0")
+        template = {"params": server.params,
+                    "async_arrays": engine.arrays_template(meta["async"])}
+        tree = load_pytree(path, template)
+        server.params = tree["params"]
+        engine.restore_state(meta["async"], tree["async_arrays"])
+    else:
+        server.params = load_pytree(path, server.params)
     if "history" in meta:
         from ..core.server import RoundRecord
         server.history = [RoundRecord(**r) for r in meta["history"]]

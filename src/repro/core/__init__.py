@@ -8,11 +8,12 @@ aggregation— FedAvg / participation-weighted masked FedAvg (flat + two-stage)
 client     — ClientUpdate (Alg. 2): masked local training
 federation — the compiled federated round step
 server     — round orchestration (Alg. 1) + composable ServerHooks
+async_agg  — FedBuff-style semi-async buffered rounds + staleness registry
 session    — the Federation facade (from_config -> fit/evaluate/comm)
 comm       — exact transfer-byte accounting (Table 4), per topology
 """
 from . import (freezing, masking, aggregation, client, federation, server,  # noqa: F401
-               comm, strategies, session, topology)
+               comm, strategies, session, topology, async_agg)
 from .federation import FLConfig, build_round_step, build_fullmodel_round_step  # noqa: F401
 from .masking import (build_units, build_units_zoo, build_units_flat,  # noqa: F401
                       mask_tree, apply_mask, UnitAssignment,
@@ -28,3 +29,9 @@ from .topology import (Topology, register_topology, unregister_topology,  # noqa
                        registered_topologies, get_topology,
                        resolve_topology, UnknownTopologyError,
                        ring_mixing_matrix)
+from .async_agg import (AsyncRoundEngine, BufferedAggregator,  # noqa: F401
+                        BufferedUpdate, DelayScheduler,
+                        UnknownStalenessError, build_cohort_step,
+                        get_staleness, register_staleness,
+                        registered_staleness, staleness_weights,
+                        unregister_staleness)

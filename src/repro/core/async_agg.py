@@ -1,0 +1,614 @@
+"""FedBuff-style semi-asynchronous buffered aggregation (DESIGN.md §8).
+
+The synchronous round loop stalls on the slowest client — the exact
+straggler regime ``StragglerDropout`` simulates by discarding work.
+Buffered async aggregation (Nguyen et al. 2022, PAPERS.md) keeps that
+work instead: clients train on whatever global snapshot they last
+pulled, the server buffers their **packed trained-slot deltas** as they
+arrive, and once ``FLConfig.async_buffer`` updates have accumulated the
+buffer flushes into the global model as one "round".  Stale deltas are
+down-weighted by a registered staleness rule (``@register_staleness``;
+the default is FedBuff's polynomial ``1/(1+s)^a``).
+
+Three properties anchor the design:
+
+* **Buffering is cheap** because entries hold only the packed
+  ``(n_slots, …)`` slot buffers of the round's trained units (DESIGN.md
+  §7) — a buffered update costs ~``n_train/U`` of the model, so holding
+  stale work is as cheap as shipping it.
+* **A flush is a synchronous round in disguise**: it feeds the stacked
+  buffer through the same ``masked_fedavg_packed`` /
+  ``hierarchical_masked_fedavg_packed`` scatter-accumulate the sync
+  packed round step uses, with entries drained in canonical
+  ``(client, seq)`` order — so a flush whose entries all carry zero
+  staleness is **bitwise equal** to the synchronous packed round step
+  (regression-tested across topologies × strategies, incl. stragglers).
+* **Everything is deterministic under a seed**: per-version selection
+  keys come off the server's key stream, and the simulated-delay
+  scheduler draws each client's latency as a pure function of
+  ``(seed, client, seq)`` — clients report back out of order, but the
+  same order every run, and checkpoint restore rebuilds the buffer,
+  per-client round tags and in-flight work bit-exactly.
+
+The engine computes client updates *eagerly at dispatch* with the same
+width-C vmapped trace the sync packed round compiles (rows of a batched
+local update are bitwise independent of their cohort, so dispatch
+grouping is free to differ); simulated wall-clock comes from the
+scheduler, not host time, so the benchmarks compare sync vs. buffered
+on the axis the paper cares about — time-to-accuracy under stragglers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# staleness reweighting registry (mirrors strategies/topologies)
+
+_STALENESS: Dict[str, Callable[[np.ndarray, float], np.ndarray]] = {}
+
+
+class UnknownStalenessError(ValueError):
+    pass
+
+
+def register_staleness(fn: Optional[Callable] = None, *,
+                       name: Optional[str] = None):
+    """Register ``fn(staleness, alpha) -> weight`` (vectorized over a
+    float array of staleness values).  Usable bare or with ``name=``::
+
+        @register_staleness
+        def polynomial(s, alpha): ...
+    """
+    def _register(f):
+        _STALENESS[name or f.__name__] = f
+        return f
+    return _register(fn) if fn is not None else _register
+
+
+def unregister_staleness(name: str):
+    _STALENESS.pop(name, None)
+
+
+def registered_staleness() -> Tuple[str, ...]:
+    return tuple(sorted(_STALENESS))
+
+
+def get_staleness(name: str) -> Callable[[np.ndarray, float], np.ndarray]:
+    try:
+        return _STALENESS[name]
+    except KeyError:
+        raise UnknownStalenessError(
+            f"unknown staleness rule {name!r}; registered: "
+            f"{', '.join(registered_staleness())}") from None
+
+
+@register_staleness
+def polynomial(s: np.ndarray, alpha: float) -> np.ndarray:
+    """FedBuff's polynomial decay ``1/(1+s)^alpha`` — exactly 1.0 at
+    s=0, so a zero-staleness flush leaves client weights untouched."""
+    return 1.0 / np.power(1.0 + np.asarray(s, np.float64), alpha)
+
+
+@register_staleness
+def constant(s: np.ndarray, alpha: float) -> np.ndarray:
+    """No reweighting (FedAsync's naive baseline): stale deltas count
+    at full weight."""
+    return np.ones_like(np.asarray(s, np.float64))
+
+
+def staleness_weights(weights: np.ndarray, staleness: np.ndarray,
+                      rule: str, alpha: float) -> np.ndarray:
+    """Per-entry effective weights: ``w * rule(s, alpha)`` in float64,
+    rounded once to float32 (exact pass-through where the factor is 1)."""
+    factor = get_staleness(rule)(np.asarray(staleness, np.float64), alpha)
+    return (np.asarray(weights, np.float32) * factor).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# simulated-delay scheduler
+
+_DELAY_DEFAULTS = {"none": 0.0, "fixed": 0.0, "exponential": 1.0,
+                   "lognormal": 1.0, "pareto": 1.5}
+
+
+def parse_delay_dist(spec: str) -> Tuple[str, float]:
+    """``"name"`` or ``"name:param"`` -> (name, param).
+
+    ``none``/``fixed`` — unit delay (deterministic completion order);
+    ``exponential:scale`` — light tail; ``lognormal:sigma`` — moderate
+    tail; ``pareto:alpha`` — heavy tail (the straggler regime; smaller
+    alpha = heavier tail, delays ``1 + Pareto(alpha)``).
+    """
+    name, _, param = str(spec).partition(":")
+    if name not in _DELAY_DEFAULTS:
+        raise ValueError(
+            f"unknown client_delay_dist {spec!r}; one of "
+            f"{', '.join(sorted(_DELAY_DEFAULTS))} (optionally ':param')")
+    return name, float(param) if param else _DELAY_DEFAULTS[name]
+
+
+class DelayScheduler:
+    """Seeded per-client latency model with **stateless** draws: the
+    delay of client ``c``'s ``seq``-th dispatch is a pure function of
+    ``(seed, c, seq)`` — no mutable RNG state, so checkpoint restore
+    needs only the per-client dispatch counters to reproduce every
+    future draw (the per-client key stream of DESIGN.md §8)."""
+
+    def __init__(self, dist: str = "none", seed: int = 0):
+        self.dist, self.param = parse_delay_dist(dist)
+        self.seed = int(seed)
+
+    def delay(self, client: int, seq: int) -> float:
+        if self.dist in ("none", "fixed"):
+            return 1.0
+        rng = np.random.default_rng(
+            np.random.SeedSequence((self.seed, int(client), int(seq))))
+        if self.dist == "exponential":
+            return 0.05 + float(rng.exponential(self.param))
+        if self.dist == "lognormal":
+            return float(rng.lognormal(0.0, self.param))
+        # pareto: heavy-tailed with minimum 1 (a round never takes less
+        # than one unit of work)
+        return 1.0 + float(rng.pareto(self.param))
+
+
+# ---------------------------------------------------------------------------
+# buffered updates + the aggregator
+
+@dataclasses.dataclass
+class BufferedUpdate:
+    """One client's completed dispatch: the packed trained-slot delta
+    tagged with its origin version (the global model it trained from)."""
+    client: int
+    seq: int                 # the client's dispatch counter (batch window)
+    version: int             # global model version at dispatch time
+    t_done: float            # simulated completion time
+    weight: float            # data weight at dispatch (0 = dropped)
+    loss: float
+    sel_row: np.ndarray      # (U,) trained-unit selection
+    pdelta: PyTree           # packed (L, ...) slot deltas / dense scalars
+    rows: PyTree             # (L,) slot -> macro-row indices
+    valid: PyTree            # (L,) slot masks / scalar participation
+
+
+def _stack_entries(entries: Sequence[BufferedUpdate]):
+    """Stack per-entry pytrees into leading-B arrays (jnp, on device)."""
+    stack = lambda trees: jax.tree_util.tree_map(
+        lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs])),
+        *trees)
+    return (stack([e.pdelta for e in entries]),
+            stack([e.rows for e in entries]),
+            stack([e.valid for e in entries]),
+            jnp.asarray(np.stack([e.sel_row for e in entries])))
+
+
+class BufferedAggregator:
+    """The FedBuff combiner role: hold packed updates, flush when full.
+
+    ``flush_fn(global, pdeltas, rows, valid, sel, weights, client_ids)``
+    is the topology's buffered aggregation (``build_buffered_flush``) —
+    the same scatter-accumulate as the sync packed round.  Entries are
+    drained in canonical ``(client, seq)`` order so the flush is
+    independent of arrival order (and bit-equal to a synchronous round
+    when every entry has zero staleness).
+    """
+
+    def __init__(self, buffer_size: int, staleness: str, alpha: float,
+                 flush_fn: Callable):
+        if buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
+        get_staleness(staleness)          # fail fast on unknown rules
+        self.buffer_size = buffer_size
+        self.staleness = staleness
+        self.alpha = alpha
+        self._flush = jax.jit(flush_fn)
+        self.entries: List[BufferedUpdate] = []
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def ready(self) -> bool:
+        return len(self.entries) >= self.buffer_size
+
+    def push(self, update: BufferedUpdate):
+        self.entries.append(update)
+
+    def flush(self, global_params: PyTree, version: int
+              ) -> Tuple[PyTree, Dict[str, Any]]:
+        """Apply the buffered updates to ``global_params`` and clear."""
+        entries = sorted(self.entries, key=lambda e: (e.client, e.seq))
+        self.entries = []
+        s = np.asarray([version - e.version for e in entries], np.float64)
+        w = np.asarray([e.weight for e in entries], np.float32)
+        eff = staleness_weights(w, s, self.staleness, self.alpha)
+        pdeltas, rows, valid, sel = _stack_entries(entries)
+        clients = np.asarray([e.client for e in entries], np.int32)
+        new_params = self._flush(global_params, pdeltas, rows, valid, sel,
+                                 jnp.asarray(eff), jnp.asarray(clients))
+        stats = {
+            "entry_sel": np.asarray(sel),
+            "entry_clients": clients,
+            "staleness": s,
+            "effective_weights": eff,
+            "losses": np.asarray([e.loss for e in entries], np.float32),
+        }
+        return new_params, stats
+
+
+# ---------------------------------------------------------------------------
+# compiled pieces
+
+def build_cohort_step(loss_fn: Callable, assign, fl,
+                      loss_kwargs: Optional[Dict] = None, *,
+                      strategy=None, scores=None):
+    """The async engine's two compiled programs.
+
+    Returns ``(select_fn, cohort_fn, n_slots)``:
+
+    * ``select_fn(key) -> sel (C, U)`` — the version's per-client
+      trained-unit selection (one key per version off the server
+      stream; strategies fold per-client keys internally);
+    * ``cohort_fn(global_params, sel, client_batches) -> (pdeltas,
+      rows, valid, losses)`` — the sync packed round step's selection +
+      vmapped packed local training, **without** the aggregation stage
+      (that happens at flush time, from the buffer).
+
+    The vmapped trace is identical to ``_star_round_step``'s packed
+    branch, so a row here is bitwise the row the synchronous round
+    would have computed.
+    """
+    from .client import local_update_packed
+    from .masking import slot_plan
+    from .topology import _selection_setup
+    strat, ctx = _selection_setup(assign, fl, strategy, scores)
+    if strat.dense:
+        raise ValueError(
+            "async buffered rounds carry packed trained-slot deltas; the "
+            "dense 'full' strategy has nothing to pack — use a partial "
+            "strategy (train_fraction < 1)")
+    n_slots = fl.resolve_n_slots(ctx.n_units)
+
+    def select(key):
+        sel = strat.select(key, ctx)
+        if fl.always_train_head:
+            sel = sel.at[:, -1].set(1.0)
+        return sel
+
+    def cohort(global_params, sel, client_batches):
+        rows, valid = jax.vmap(
+            lambda s: slot_plan(assign, s, n_slots, global_params))(sel)
+
+        def one_client(rows_c, valid_c, batches):
+            return local_update_packed(
+                loss_fn, global_params, assign, rows_c, valid_c, batches,
+                lr=fl.lr, optimizer=fl.optimizer, prox_mu=fl.prox_mu,
+                loss_kwargs=loss_kwargs)
+
+        pdeltas, metrics = jax.vmap(one_client)(rows, valid, client_batches)
+        return pdeltas, rows, valid, metrics["loss_mean"]
+
+    return jax.jit(select), jax.jit(cohort), n_slots
+
+
+def slot_template(assign, params, n_slots: int) -> Dict[str, Any]:
+    """ShapeDtypeStructs of one packed update's ``pdelta``/``rows``/
+    ``valid`` pytrees — the single source of buffered-entry shapes for
+    dry-run flush compiles and checkpoint restore templates."""
+    from .masking import slot_plan, slot_gather
+
+    def one(p):
+        rows, valid = slot_plan(
+            assign, jnp.zeros((assign.n_units,), jnp.float32), n_slots, p)
+        return {"pdelta": slot_gather(assign, p, rows),
+                "rows": rows, "valid": valid}
+    return jax.eval_shape(one, params)
+
+
+def flush_arg_specs(assign, params, fl) -> Tuple[Any, ...]:
+    """ShapeDtypeStructs of one flush call's buffer arguments — what a
+    dry-run compile of the buffered flush program feeds ``jit``."""
+    tpl = slot_template(assign, params, fl.resolve_n_slots(assign.n_units))
+    b = fl.async_buffer
+    lead = lambda tree: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((b,) + x.shape, x.dtype), tree)
+    return (lead(tpl["pdelta"]), lead(tpl["rows"]), lead(tpl["valid"]),
+            jax.ShapeDtypeStruct((b, assign.n_units), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# the engine
+
+class AsyncRoundEngine:
+    """Drives FedBuff-style semi-async rounds for a :class:`Server`.
+
+    One engine "round" = one buffer flush.  Between flushes the
+    simulated-delay scheduler pops client completions in time order;
+    each completion pushes its packed update into the buffer and
+    immediately re-dispatches the client against the *current* global
+    model (so in-flight work goes stale exactly when flushes land
+    mid-flight).  Per-version selection keys come off the server key
+    stream — a zero-staleness flush consumes the same key the sync
+    round loop would have.
+    """
+
+    def __init__(self, server, assign, fl, *, select_fn, cohort_fn,
+                 flush_fn, seed: int = 0):
+        self.server = server
+        self.assign = assign
+        self.fl = fl
+        self.select_fn = select_fn
+        self.cohort_fn = cohort_fn
+        self.n_slots = fl.resolve_n_slots(assign.n_units)
+        self.buffer = BufferedAggregator(fl.async_buffer, fl.staleness,
+                                         fl.staleness_alpha, flush_fn)
+        self.scheduler = DelayScheduler(fl.client_delay_dist, seed=seed)
+        self.started = False
+        self.version = 0
+        self.clock = 0.0
+        self.seq = np.zeros(fl.n_clients, np.int64)
+        self.pending: List[Tuple[float, int, int]] = []   # (t, client, seq)
+        self.inflight: Dict[Tuple[int, int], BufferedUpdate] = {}
+        self.flush_clients: List[np.ndarray] = []
+        self._sel: Optional[np.ndarray] = None
+
+    # -- dispatch ---------------------------------------------------------
+
+    def _begin_version(self):
+        self._sel = np.asarray(self.select_fn(self.server.next_key()),
+                               np.float32)
+
+    def _dispatch(self, clients: Sequence[int], weights: np.ndarray,
+                  batch_fn: Callable[[int], Any]):
+        """Start local training for ``clients`` at the current version.
+
+        Runs ONE width-C vmapped cohort step (each client on its own
+        batch window) and keeps the dispatched clients' rows — rows of
+        a batched local update are bitwise independent of the rest of
+        the cohort, so only the kept rows matter; the full width keeps
+        the trace identical to the synchronous round's.
+        """
+        batches = _mixed_window_batches(batch_fn, list(self.seq))
+        pdeltas, rows, valid, losses = self.cohort_fn(
+            self.server.global_params(), jnp.asarray(self._sel), batches)
+        take = lambda tree, c: jax.tree_util.tree_map(
+            lambda x: np.asarray(x[c]), tree)
+        for c in clients:
+            c = int(c)
+            seq = int(self.seq[c])
+            t_done = self.clock + self.scheduler.delay(c, seq)
+            upd = BufferedUpdate(
+                client=c, seq=seq, version=self.version, t_done=t_done,
+                weight=float(weights[c]), loss=float(losses[c]),
+                sel_row=self._sel[c].copy(),
+                pdelta=take(pdeltas, c), rows=take(rows, c),
+                valid=take(valid, c))
+            heapq.heappush(self.pending, (t_done, c, seq))
+            self.inflight[(c, seq)] = upd
+            self.seq[c] += 1
+
+    # -- the flush loop ---------------------------------------------------
+
+    def run_flush(self, batch_fn: Callable[[int], Any],
+                  weights) -> "RoundRecord":
+        from .server import RoundRecord
+        server = self.server
+        t0 = time.perf_counter()
+        r = len(server.history)
+        w = jnp.asarray(weights, jnp.float32)
+        for hook in server.hooks:
+            new_w = hook.on_round_start(server, r, w)
+            if new_w is not None:
+                w = new_w
+        w_np = np.asarray(w, np.float32)
+        if not self.started:
+            self.started = True
+            self._begin_version()
+            self._dispatch(range(self.fl.n_clients), w_np, batch_fn)
+        trigger = None
+        while not self.buffer.ready:
+            t_done, c, seq = heapq.heappop(self.pending)
+            self.clock = max(self.clock, t_done)
+            self.buffer.push(self.inflight.pop((c, seq)))
+            if self.buffer.ready:
+                trigger = c           # re-dispatched at the NEW version
+            else:
+                self._dispatch([c], w_np, batch_fn)
+        new_params, stats = self.buffer.flush(server.global_params(),
+                                              self.version)
+        server.params = new_params    # star topologies: state == params
+        self.version += 1
+        self._begin_version()
+        if trigger is not None:
+            self._dispatch([trigger], w_np, batch_fn)
+
+        ev = None
+        if server.eval_fn is not None:
+            ev = float(server.eval_fn(server.global_params()))
+        s = stats["staleness"]
+        eff = stats["effective_weights"]
+        rec = RoundRecord(
+            r, float(stats["losses"].mean()), ev,
+            time.perf_counter() - t0, 0.0, 0.0,
+            # like the sync loop: dropped (weight-0) entries aggregate
+            # nothing and don't count as participants
+            n_participants=int(np.unique(
+                stats["entry_clients"][eff > 0]).size),
+            effective_weights=[float(x) for x in eff],
+            staleness_mean=float(s.mean()), staleness_max=float(s.max()),
+            sim_time=float(self.clock))
+        server.sel_history.append(stats["entry_sel"])
+        self.flush_clients.append(stats["entry_clients"])
+        metrics = {"entry_sel": stats["entry_sel"],
+                   "entry_clients": stats["entry_clients"],
+                   "staleness": s, "loss_per_entry": stats["losses"]}
+        for hook in server.hooks:
+            hook.on_round_end(server, rec, metrics)
+        rec.seconds = time.perf_counter() - t0
+        server.history.append(rec)
+        return rec
+
+    def run(self, flushes: int, batch_fn: Callable[[int], Any],
+            weights=None, log_every: int = 0):
+        from .server import RoundLogger
+        server = self.server
+        if weights is None:
+            weights = jnp.ones((self.fl.n_clients,), jnp.float32)
+        extra = [RoundLogger(log_every,
+                             total=len(server.history) + flushes,
+                             base=len(server.history))] if log_every else []
+        server.hooks.extend(extra)
+        try:
+            for _ in range(flushes):
+                self.run_flush(batch_fn, weights)
+        finally:
+            for h in extra:
+                server.hooks.remove(h)
+        for hook in server.hooks:
+            hook.on_fit_end(server, server.history)
+        return server.history
+
+    # -- run-level accounting --------------------------------------------
+
+    def comm_summary(self) -> Dict[str, float]:
+        from . import comm
+        server = self.server
+        if not server.sel_history:
+            return {"avg_uplink_bytes": 0.0, "avg_trained_params": 0.0,
+                    "total_uplink_bytes": 0.0, "reduction_vs_full": 0.0}
+        ub = server.unit_bytes()
+        counts = comm.unit_param_counts(self.assign, server.global_params())
+        ups, fulls, tps = [], [], []
+        for entry_sel, clients, rec in zip(server.sel_history,
+                                           self.flush_clients,
+                                           server.history):
+            es = np.asarray(entry_sel)
+            eff = np.asarray(rec.effective_weights, np.float32)
+            es = es * (eff > 0).astype(es.dtype)[:, None]
+            ups.append(server.topology.buffered_round_bytes(
+                es, clients, ub, self.fl)["uplink"])
+            fulls.append(server.topology.buffered_round_bytes(
+                np.ones_like(es), clients, ub, self.fl)["uplink"])
+            tps.append(float(np.einsum("bu,u->", es, counts)))
+        total_full = float(np.sum(fulls))
+        return {
+            "avg_uplink_bytes": float(np.mean(ups)),
+            "avg_trained_params": float(np.mean(tps)),
+            "total_uplink_bytes": float(np.sum(ups)),
+            "reduction_vs_full": 1.0 - float(np.sum(ups)) / total_full
+            if total_full else 0.0,
+            "avg_staleness": float(np.mean(
+                [r.staleness_mean for r in server.history])),
+            "sim_time": float(self.clock),
+        }
+
+    # -- checkpoint state (ckpt/store.py) ---------------------------------
+
+    def _entry_template(self):
+        tpl = slot_template(self.assign, self.server.global_params(),
+                            self.n_slots)
+        tpl["sel_row"] = jax.ShapeDtypeStruct((self.assign.n_units,),
+                                              jnp.float32)
+        return tpl
+
+    @staticmethod
+    def _update_meta(u: BufferedUpdate) -> Dict[str, Any]:
+        return {"client": int(u.client), "seq": int(u.seq),
+                "version": int(u.version), "t_done": float(u.t_done),
+                "weight": float(u.weight), "loss": float(u.loss)}
+
+    @staticmethod
+    def _update_arrays(u: BufferedUpdate) -> Dict[str, Any]:
+        return {"pdelta": u.pdelta, "rows": u.rows, "valid": u.valid,
+                "sel_row": u.sel_row}
+
+    def checkpoint_state(self) -> Tuple[Dict[str, Any], PyTree]:
+        """(json metadata, array pytree) capturing buffer contents,
+        per-client round tags and in-flight (delay-scheduled) work."""
+        inflight = [self.inflight[k] for k in sorted(self.inflight)]
+        meta = {
+            "version": int(self.version),
+            "clock": float(self.clock),
+            "seq": [int(x) for x in self.seq],
+            "buffer": [self._update_meta(u) for u in self.buffer.entries],
+            "inflight": [self._update_meta(u) for u in inflight],
+            "flush_clients": [np.asarray(c).tolist()
+                              for c in self.flush_clients],
+        }
+        arrays = {
+            "sel": self._sel,
+            "buffer": [self._update_arrays(u) for u in self.buffer.entries],
+            "inflight": [self._update_arrays(u) for u in inflight],
+        }
+        return meta, arrays
+
+    def arrays_template(self, meta: Dict[str, Any]) -> PyTree:
+        tpl = self._entry_template()
+        return {
+            "sel": jax.ShapeDtypeStruct(
+                (self.fl.n_clients, self.assign.n_units), jnp.float32),
+            "buffer": [tpl for _ in meta["buffer"]],
+            "inflight": [tpl for _ in meta["inflight"]],
+        }
+
+    def restore_state(self, meta: Dict[str, Any], arrays: PyTree):
+        def updates(metas, arrs):
+            out = []
+            for m, a in zip(metas, arrs):
+                out.append(BufferedUpdate(
+                    client=int(m["client"]), seq=int(m["seq"]),
+                    version=int(m["version"]), t_done=float(m["t_done"]),
+                    weight=float(m["weight"]), loss=float(m["loss"]),
+                    sel_row=np.asarray(a["sel_row"], np.float32),
+                    pdelta=jax.tree_util.tree_map(np.asarray, a["pdelta"]),
+                    rows=jax.tree_util.tree_map(np.asarray, a["rows"]),
+                    valid=jax.tree_util.tree_map(np.asarray, a["valid"])))
+            return out
+
+        if len(meta["buffer"]) >= self.buffer.buffer_size:
+            raise ValueError(
+                f"checkpoint buffer holds {len(meta['buffer'])} entries, "
+                f">= this run's async_buffer={self.buffer.buffer_size}; "
+                "restore with the original buffer size")
+        self.version = int(meta["version"])
+        self.clock = float(meta["clock"])
+        self.seq = np.asarray(meta["seq"], np.int64)
+        self._sel = np.asarray(arrays["sel"], np.float32)
+        self.buffer.entries = updates(meta["buffer"], arrays["buffer"])
+        self.inflight = {(u.client, u.seq): u
+                         for u in updates(meta["inflight"],
+                                          arrays["inflight"])}
+        self.pending = [(u.t_done, u.client, u.seq)
+                        for u in self.inflight.values()]
+        heapq.heapify(self.pending)
+        self.flush_clients = [np.asarray(c, np.int32)
+                              for c in meta["flush_clients"]]
+        self.started = True
+
+
+def _mixed_window_batches(batch_fn: Callable[[int], Any],
+                          windows: Sequence[int]) -> PyTree:
+    """Assemble a (C, steps, ...) cohort batch where client ``c`` rides
+    its OWN batch window ``windows[c]`` (clients progress through their
+    local streams at their own pace in async rounds).
+
+    ``batch_fn(w)`` returns the full-cohort batches of window ``w``
+    (the sync loop's per-round loader contract).
+    """
+    windows = [int(w) for w in windows]
+    per = {w: batch_fn(w) for w in sorted(set(windows))}
+    rows = [jax.tree_util.tree_map(lambda x, c=c, w=w: x[c], per[w])
+            for c, w in enumerate(windows)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rows)

@@ -27,6 +27,13 @@ through these):
   every entry of a replica, so partial-freezing does NOT shrink gossip
   traffic — the accounting makes that cost visible.
 
+* **buffered** (semi-async rounds, DESIGN.md §8): per *flush* rather
+  than per synchronous round.  ``buffered_hub_round_bytes`` bills one
+  packed upload per buffered update; ``buffered_hierarchical_round_
+  bytes`` bills client->edge LAN per update but edge->hub WAN only at
+  flush time — one partial aggregate per unit in the edge's buffered
+  union, i.e. only flushed deltas cross the WAN.
+
 * **collective** (pod FL, DESIGN.md §2): aggregation is an all-reduce
   over the client axis.  With *independent* per-client selection (paper
   semantics) every unit has ≥1 participant w.h.p., so the collective
@@ -49,6 +56,13 @@ def unit_bytes(assign: UnitAssignment, params, bytes_per_param: int = 4
     return unit_param_counts(assign, params) * bytes_per_param
 
 
+def _safe_frac(num: float, denom: float) -> float:
+    """Uplink fraction with the degenerate-round guard: a round where
+    nothing could have shipped (zero effective clients/edges or an
+    empty model) is a 0.0-fraction round, not a ZeroDivision/NaN."""
+    return num / denom if denom > 0 else 0.0
+
+
 def hub_round_bytes(sel: np.ndarray, ubytes: np.ndarray,
                     include_downlink: bool = False,
                     downlink: str = "full") -> Dict[str, float]:
@@ -68,13 +82,13 @@ def hub_round_bytes(sel: np.ndarray, ubytes: np.ndarray,
     if downlink == "full":
         down = total_model * sel.shape[0]
     elif downlink == "selected":
-        union = sel.max(axis=0)
+        union = sel.max(axis=0) if sel.shape[0] else np.zeros(sel.shape[1])
         down = float(union @ ubytes) * sel.shape[0]
     else:
         raise ValueError(f"downlink must be 'full' or 'selected', "
                          f"got {downlink!r}")
     out = {"uplink": uplink,
-           "uplink_frac": uplink / (total_model * sel.shape[0]),
+           "uplink_frac": _safe_frac(uplink, total_model * sel.shape[0]),
            "downlink": down}
     out["total"] = uplink + (down if include_downlink else 0.0)
     return out
@@ -113,15 +127,82 @@ def hierarchical_round_bytes(sel: np.ndarray, ubytes: np.ndarray,
     if downlink == "full":
         down = total_model * (n_edges + n_clients)
     elif downlink == "selected":
-        gu = sel.max(axis=0)
+        gu = sel.max(axis=0) if sel.shape[0] else np.zeros(sel.shape[1])
         down = float(gu @ ubytes) * (n_edges + n_clients)
     else:
         raise ValueError(f"downlink must be 'full' or 'selected', "
                          f"got {downlink!r}")
     out = {"uplink": edge_hub,
-           "uplink_frac": edge_hub / (total_model * n_edges),
+           "uplink_frac": _safe_frac(edge_hub, total_model * n_edges),
            "edge_hub_uplink": edge_hub,
            "client_edge_uplink": client_edge,
+           "downlink": down}
+    out["total"] = edge_hub + client_edge + (down if include_downlink
+                                             else 0.0)
+    return out
+
+
+def buffered_hub_round_bytes(entry_sel: np.ndarray, ubytes: np.ndarray,
+                             include_downlink: bool = False,
+                             downlink: str = "full") -> Dict[str, float]:
+    """Per-flush accounting for semi-async buffered rounds on the hub.
+
+    ``entry_sel (B, U)`` has one row per *buffered update* in the flush
+    (a client appears once per contributed update, not once per round).
+    Each update crossed the client->hub WAN when its client reported
+    back, carrying only its packed trained slots; each completing
+    client then re-pulls the current global model, so downlink is one
+    model per entry (``"selected"``: only the flush's selection union —
+    aggregation changed nothing else).
+    """
+    entry_sel = np.asarray(entry_sel)
+    # per-entry math is the hub round formula with entries as the
+    # leading axis (a client appears once per buffered update)
+    out = hub_round_bytes(entry_sel, ubytes, include_downlink, downlink)
+    out["n_entries"] = float(entry_sel.shape[0])
+    return out
+
+
+def buffered_hierarchical_round_bytes(entry_sel: np.ndarray,
+                                      client_ids: np.ndarray,
+                                      ubytes: np.ndarray,
+                                      membership: np.ndarray,
+                                      include_downlink: bool = False,
+                                      downlink: str = "full"
+                                      ) -> Dict[str, float]:
+    """Per-flush accounting for buffered rounds under edge aggregators.
+
+    Clients stream their packed updates to their edge over the LAN as
+    they complete; the edge *buffers* them and, at flush time, forwards
+    ONE partial aggregate per unit in its buffered selection union —
+    only flushed deltas ever cross the edge->hub WAN (``uplink``), so a
+    unit trained by several buffered updates of one edge crosses once.
+    """
+    entry_sel = np.asarray(entry_sel)
+    client_ids = np.asarray(client_ids, np.int64)
+    membership = np.asarray(membership)
+    n_edges = membership.shape[0]
+    n_entries = entry_sel.shape[0]
+    total_model = float(ubytes.sum())
+    client_edge = float((entry_sel @ ubytes).sum())
+    entry_mem = membership[:, client_ids] if n_entries \
+        else np.zeros((n_edges, 0), membership.dtype)        # (E, B)
+    union = (entry_mem @ entry_sel > 0).astype(np.float64)   # (E, U)
+    edge_hub = float((union @ ubytes).sum())
+    if downlink == "full":
+        down = total_model * (n_edges + n_entries)
+    elif downlink == "selected":
+        gu = entry_sel.max(axis=0) if n_entries \
+            else np.zeros(entry_sel.shape[1])
+        down = float(gu @ ubytes) * (n_edges + n_entries)
+    else:
+        raise ValueError(f"downlink must be 'full' or 'selected', "
+                         f"got {downlink!r}")
+    out = {"uplink": edge_hub,
+           "uplink_frac": _safe_frac(edge_hub, total_model * n_edges),
+           "edge_hub_uplink": edge_hub,
+           "client_edge_uplink": client_edge,
+           "n_entries": float(n_entries),
            "downlink": down}
     out["total"] = edge_hub + client_edge + (down if include_downlink
                                              else 0.0)

@@ -73,6 +73,21 @@ class FLConfig:
     # "on" forces the kernel (interpreter on CPU), "off" the reference.
     # The packed path has its own segment-sum reduce and ignores this.
     fused_agg: str = "auto"
+    # semi-async buffered aggregation (core/async_agg.py, DESIGN.md §8):
+    # >0 switches the round loop to FedBuff-style flush rounds — the
+    # server buffers this many packed per-client updates (tagged with
+    # their origin round) and applies them as one global step.  0 keeps
+    # the synchronous loop.
+    async_buffer: int = 0
+    # stale-delta reweighting rule (register_staleness registry):
+    # "polynomial" = FedBuff's 1/(1+s)^alpha, "constant" = no decay
+    staleness: str = "polynomial"
+    staleness_alpha: float = 0.5
+    # simulated client-latency distribution for the async scheduler:
+    # "none" | "exponential[:scale]" | "lognormal[:sigma]" |
+    # "pareto[:alpha]" (heavy-tailed straggler regime); draws are pure
+    # functions of (seed, client, dispatch), so runs replay bit-exactly
+    client_delay_dist: str = "none"
 
     def resolve_fused_agg(self) -> bool:
         """Whether the round step should aggregate through the fused
@@ -91,6 +106,13 @@ class FLConfig:
             from .freezing import n_train_from_fraction
             return n_train_from_fraction(n_units, self.train_fraction)
         return self.n_train_units
+
+    def resolve_n_slots(self, n_units: int) -> int:
+        """Static slot budget of the packed round path (DESIGN.md §7):
+        the trained-unit count plus the optional always-trained head —
+        the one formula every packed/buffered shape derives from."""
+        return min(n_units, self.resolve_n_train(n_units)
+                   + (1 if self.always_train_head else 0))
 
     def resolve_n_edges(self) -> int:
         if self.n_edges is not None:

@@ -43,6 +43,14 @@ class RoundRecord:
     trained_params: float
     n_participants: int = 0
     skipped: bool = False
+    # the round's post-hook client weights (dropped clients are 0) —
+    # sync rounds carry one entry per client, async flushes one per
+    # buffered update; hooks and accounting read participation off this
+    effective_weights: Optional[List[float]] = None
+    # buffered-async flush annotations (zero on synchronous rounds)
+    staleness_mean: float = 0.0
+    staleness_max: float = 0.0
+    sim_time: float = 0.0
 
 
 class ServerHook:
@@ -71,6 +79,11 @@ class StragglerDropout(ServerHook):
         self.rate = rate
 
     def on_round_start(self, server, round_idx, weights):
+        if self.rate <= 0.0:
+            # a rate-0 hook must be a true no-op: drawing from the key
+            # stream anyway would desync a rate=0 run from a no-hook
+            # run and break bit-exact comparisons
+            return None
         keep = jax.random.bernoulli(server.next_key(), 1.0 - self.rate,
                                     (server.fl.n_clients,))
         return weights * keep.astype(jnp.float32)
@@ -88,21 +101,45 @@ class CommAccounting(ServerHook):
     def on_round_end(self, server, record, metrics):
         if record.skipped or metrics is None:
             return
-        sel = np.asarray(metrics["sel"])
         ub = server.unit_bytes()
+        counts = comm.unit_param_counts(server.assign,
+                                        server.global_params())
+        if "entry_sel" in metrics:
+            # buffered-async flush: one entry per buffered update, the
+            # topology's buffered byte math (only flushed deltas cross
+            # the WAN under hierarchical edges)
+            entry_sel = np.asarray(metrics["entry_sel"])
+            entry_sel = self._mask_dropped(entry_sel, record)
+            record.uplink_bytes = server.topology.buffered_round_bytes(
+                entry_sel, np.asarray(metrics["entry_clients"]), ub,
+                server.fl)["uplink"]
+            record.trained_params = float(np.einsum("cu,u->", entry_sel,
+                                                    counts))
+            return
+        sel = np.asarray(metrics["sel"])
         if sel.shape[1] != server.assign.n_units:
             # legacy no-assign shim emits a (C, 1) pseudo-unit: the
-            # whole model ships for every client
-            record.uplink_bytes = float(ub.sum()) * sel.shape[0]
-            record.trained_params = float(np.einsum(
-                "u->", comm.unit_param_counts(
-                    server.assign, server.global_params()))) * sel.shape[0]
+            # whole model ships for every participating client
+            n_up = self._mask_dropped(np.ones((sel.shape[0], 1),
+                                              sel.dtype), record).sum()
+            record.uplink_bytes = float(ub.sum()) * float(n_up)
+            record.trained_params = float(np.einsum("u->", counts)) \
+                * float(n_up)
             return
+        # bill only clients that actually uploaded: rows zeroed by
+        # straggler dropout (effective weight 0) ship nothing
+        sel = self._mask_dropped(sel, record)
         record.uplink_bytes = server.topology.round_bytes(
             sel, ub, server.fl)["uplink"]
-        record.trained_params = float(np.einsum(
-            "cu,u->", sel,
-            comm.unit_param_counts(server.assign, server.global_params())))
+        record.trained_params = float(np.einsum("cu,u->", sel, counts))
+
+    @staticmethod
+    def _mask_dropped(sel: np.ndarray, record) -> np.ndarray:
+        eff = record.effective_weights
+        if eff is None or len(eff) != sel.shape[0]:
+            return sel
+        keep = (np.asarray(eff, np.float32) > 0).astype(sel.dtype)
+        return sel * keep[:, None]
 
 
 class RoundLogger(ServerHook):
@@ -131,6 +168,9 @@ class RoundLogger(ServerHook):
             if record.eval_metric is not None:
                 line += f" eval={record.eval_metric:.4f}"
             line += f" uplink={record.uplink_bytes/1e6:.1f}MB"
+            if record.sim_time > 0.0:      # buffered-async flush
+                line += (f" t_sim={record.sim_time:.1f}"
+                         f" stale={record.staleness_mean:.2f}")
         print(line)
 
 
@@ -182,6 +222,9 @@ class Server:
         self.history: List[RoundRecord] = []
         self.sel_history: List[np.ndarray] = []
         self._ubytes = None
+        # buffered-async engine (core/async_agg.py); attached by the
+        # Federation facade when FLConfig.async_buffer > 0
+        self.async_engine = None
 
     def next_key(self):
         self.key, k = jax.random.split(self.key)
@@ -202,6 +245,11 @@ class Server:
 
     def run_round(self, client_batches, weights=None) -> RoundRecord:
         """client_batches: pytree with (C, steps, ...) leaves."""
+        if self.async_engine is not None:
+            raise RuntimeError(
+                "server is in buffered-async mode (FLConfig.async_buffer "
+                "> 0); a synchronous round would desync the engine's "
+                "version/key bookkeeping — use run()/Federation.fit")
         t0 = time.perf_counter()
         r = len(self.history)
         rk = self.next_key()
@@ -213,12 +261,14 @@ class Server:
             if new_w is not None:
                 weights = new_w
         n_part = int(np.count_nonzero(np.asarray(weights)))
+        eff_w = [float(x) for x in np.asarray(weights)]
         if n_part == 0:
             # every client dropped: a FedAvg denominator of zero — the
             # round is a recorded no-op, global params unchanged
             rec = RoundRecord(r, float("nan"), None,
                               time.perf_counter() - t0, 0.0, 0.0,
-                              n_participants=0, skipped=True)
+                              n_participants=0, skipped=True,
+                              effective_weights=eff_w)
             self.sel_history.append(
                 np.zeros((c, self.assign.n_units), np.float32))
             metrics = None
@@ -231,15 +281,29 @@ class Server:
                 ev = float(self.eval_fn(self.global_params()))
             rec = RoundRecord(r, float(metrics["loss_mean"]), ev,
                               time.perf_counter() - t0, 0.0, 0.0,
-                              n_participants=n_part)
+                              n_participants=n_part,
+                              effective_weights=eff_w)
         for hook in self.hooks:
             hook.on_round_end(self, rec, metrics)
         rec.seconds = time.perf_counter() - t0
         self.history.append(rec)
         return rec
 
+    def attach_async_engine(self, engine) -> "Server":
+        """Switch the server to buffered-async rounds: ``run`` drives
+        the engine's flush loop (one history record per flush) and
+        ``comm_summary`` uses its per-flush buffered accounting."""
+        self.async_engine = engine
+        return self
+
     def run(self, rounds: int, batch_fn: Callable[[int], Any],
             weights=None, log_every: int = 0) -> List[RoundRecord]:
+        if self.async_engine is not None:
+            # buffered-async mode: batch_fn is indexed by each client's
+            # own dispatch window, not a shared round counter
+            return self.async_engine.run(rounds, batch_fn,
+                                         weights=weights,
+                                         log_every=log_every)
         extra = [RoundLogger(log_every, total=len(self.history) + rounds,
                              base=len(self.history))] \
             if log_every else []
@@ -255,10 +319,23 @@ class Server:
         return self.history
 
     def comm_summary(self) -> Dict[str, float]:
+        if self.async_engine is not None and self.async_engine.started:
+            return self.async_engine.comm_summary()
         if not self.sel_history:
             return {"avg_uplink_bytes": 0.0, "avg_trained_params": 0.0,
                     "total_uplink_bytes": 0.0, "reduction_vs_full": 0.0}
-        hist = np.stack(self.sel_history)
+        # selection rows of clients whose effective weight was zeroed
+        # (straggler dropout) shipped nothing — mask them out so the
+        # run summary matches the per-round records
+        masked = []
+        for i, s in enumerate(self.sel_history):
+            eff = self.history[i].effective_weights \
+                if i < len(self.history) else None
+            if eff is not None and len(eff) == s.shape[0]:
+                s = s * (np.asarray(eff, np.float32) > 0
+                         ).astype(s.dtype)[:, None]
+            masked.append(s)
+        hist = np.stack(masked)
         if hist.shape[2] != self.assign.n_units:   # legacy no-assign shim
             per_round = [r.uplink_bytes for r in self.history]
             return {"avg_uplink_bytes": float(np.mean(per_round)),

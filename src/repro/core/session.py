@@ -32,6 +32,13 @@ optimizer state for frozen stacked rows, shrunken cross-client
 reduce — bit-exact with the default dense-masked path), and
 ``fused_agg`` selects the fused Pallas aggregation kernel ("auto":
 compiled on TPU/GPU, jnp reference elsewhere).
+
+Semi-async buffered rounds (DESIGN.md §8) are three further knobs:
+``async_buffer=K`` switches ``fit`` to FedBuff-style flush rounds (K
+buffered packed updates per global step), ``staleness``/
+``staleness_alpha`` pick the registered stale-delta reweighting rule,
+and ``client_delay_dist`` the simulated client-latency distribution
+(``"pareto[:a]"`` for the heavy-tailed straggler regime).
 """
 from __future__ import annotations
 
@@ -90,6 +97,19 @@ class Federation:
                              eval_fn=eval_fn, seed=seed,
                              dropout_rate=dropout_rate, hooks=hooks,
                              topology=self.topology)
+        if fl.async_buffer:
+            # semi-async buffered rounds (DESIGN.md §8): the engine owns
+            # the simulated-delay scheduler, per-version selection keys
+            # and the FedBuff-style buffer; one fit "round" = one flush
+            from .async_agg import AsyncRoundEngine, build_cohort_step
+            select_fn, cohort_fn, _ = build_cohort_step(
+                loss_fn, assign, fl, loss_kwargs, strategy=strategy,
+                scores=scores)
+            self.server.attach_async_engine(AsyncRoundEngine(
+                self.server, assign, fl, select_fn=select_fn,
+                cohort_fn=cohort_fn,
+                flush_fn=self.topology.build_buffered_flush(assign, fl),
+                seed=seed))
 
     # -- construction -----------------------------------------------------
 
@@ -146,13 +166,20 @@ class Federation:
 
     def fit(self, rounds: int, *, log_every: int = 0,
             weights=None) -> List[RoundRecord]:
-        """Run ``rounds`` federated rounds off the attached loader."""
+        """Run ``rounds`` federated rounds off the attached loader.
+
+        In buffered-async mode (``fl.async_buffer > 0``) a "round" is
+        one buffer flush, and the loader is indexed by each client's own
+        dispatch window (the engine carries per-client counters across
+        ``fit`` calls and restores), not a shared round counter.
+        """
         if self.loader is None:
             raise ValueError("Federation has no data attached; pass "
                              "data= to from_config or use run_round")
-        base = len(self.server.history)
         if weights is None:
             weights = jnp.asarray(self.loader.weights())
+        base = 0 if self.server.async_engine is not None \
+            else len(self.server.history)
         return self.server.run(
             rounds, lambda r: jax.tree_util.tree_map(
                 jnp.asarray, self.loader.round_batches(base + r)),

@@ -37,6 +37,13 @@ aggregation for their packed slot-buffer variants (bit-exact,
 regression-tested), and ``FLConfig.fused_agg`` routes the aggregation
 stage through the fused Pallas kernel (``kernels/masked_agg``) with
 the tiling plan hoisted to build time.
+
+They also own the **buffered-async flush** (DESIGN.md §8, the third
+plugin axis in ``core/async_agg.py``): ``build_buffered_flush`` is the
+topology's aggregation stage over a stacked buffer of packed updates,
+and ``buffered_round_bytes`` its per-flush byte math (hierarchical:
+only flushed per-edge partials cross the WAN).  Gossip has no global
+model to buffer against and rejects ``FLConfig.async_buffer``.
 """
 from __future__ import annotations
 
@@ -118,8 +125,7 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
         raise ValueError(
             f"topology {fl.topology!r} has no packed aggregation path; "
             "set FLConfig.packed=False")
-    n_slots = min(ctx.n_units,
-                  ctx.n_train + (1 if fl.always_train_head else 0))
+    n_slots = fl.resolve_n_slots(ctx.n_units)
 
     def round_step(global_params, client_batches, weights, round_key):
         sel = strat.select(round_key, ctx)
@@ -238,11 +244,32 @@ class Topology:
                          strategy=None, scores=None):
         raise NotImplementedError
 
+    def build_buffered_flush(self, assign: UnitAssignment, fl):
+        """The topology's buffered-async aggregation stage (DESIGN.md
+        §8): ``flush(global, pdeltas, rows, valid, sel, weights,
+        client_ids) -> new_global`` over a stacked ``(B, ...)`` buffer
+        of packed updates — the same scatter-accumulate as the sync
+        packed round, so a zero-staleness flush is bit-exact with it.
+        Star topologies implement this; stateful ones (gossip) have no
+        global model to buffer against.
+        """
+        raise ValueError(
+            f"topology {self.name!r} has no buffered-async path; set "
+            "FLConfig.async_buffer=0 or use hub/hierarchical")
+
     # -- exact byte accounting -------------------------------------------
 
     def round_bytes(self, sel: np.ndarray, ubytes: np.ndarray,
                     fl) -> Dict[str, float]:
         raise NotImplementedError
+
+    def buffered_round_bytes(self, entry_sel: np.ndarray,
+                             client_ids: np.ndarray, ubytes: np.ndarray,
+                             fl) -> Dict[str, float]:
+        """Per-flush byte math for buffered async rounds (one
+        ``entry_sel`` row per buffered update)."""
+        raise ValueError(
+            f"topology {self.name!r} has no buffered-async accounting")
 
     def summary(self, assign: UnitAssignment, params: PyTree,
                 sel_history: np.ndarray, fl) -> Dict[str, float]:
@@ -351,9 +378,20 @@ class Hub(Topology):
             aggregate_packed=lambda g, d, r, v, sel, w:
                 masked_fedavg_packed(g, d, r, v, sel, w, assign))
 
+    def build_buffered_flush(self, assign, fl):
+        def flush(g, pdeltas, rows, valid, sel, weights, client_ids):
+            return masked_fedavg_packed(g, pdeltas, rows, valid, sel,
+                                        weights, assign)
+        return flush
+
     def round_bytes(self, sel, ubytes, fl):
         return comm.hub_round_bytes(
             sel, ubytes,
+            downlink="selected" if fl.synchronized else "full")
+
+    def buffered_round_bytes(self, entry_sel, client_ids, ubytes, fl):
+        return comm.buffered_hub_round_bytes(
+            entry_sel, ubytes,
             downlink="selected" if fl.synchronized else "full")
 
     def summary(self, assign, params, sel_history, fl):
@@ -388,10 +426,27 @@ class Hierarchical(Topology):
                 hierarchical_masked_fedavg_packed(g, d, r, v, sel, w,
                                                   assign, mem))
 
+    def build_buffered_flush(self, assign, fl):
+        mem = jnp.asarray(comm.edge_membership(fl.n_clients,
+                                               fl.resolve_n_edges()))
+
+        def flush(g, pdeltas, rows, valid, sel, weights, client_ids):
+            # (E, B) membership: entry j reduces at its client's edge
+            return hierarchical_masked_fedavg_packed(
+                g, pdeltas, rows, valid, sel, weights, assign,
+                mem[:, client_ids])
+        return flush
+
     def round_bytes(self, sel, ubytes, fl):
         mem = comm.edge_membership(fl.n_clients, fl.resolve_n_edges())
         return comm.hierarchical_round_bytes(
             sel, ubytes, mem,
+            downlink="selected" if fl.synchronized else "full")
+
+    def buffered_round_bytes(self, entry_sel, client_ids, ubytes, fl):
+        mem = comm.edge_membership(fl.n_clients, fl.resolve_n_edges())
+        return comm.buffered_hierarchical_round_bytes(
+            entry_sel, client_ids, ubytes, mem,
             downlink="selected" if fl.synchronized else "full")
 
     def make_mesh(self, fl, *, multi_pod: bool = False):

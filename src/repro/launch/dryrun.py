@@ -84,7 +84,8 @@ def logits_pspec(layout, mesh, shape, step_kind):
 
 def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
                  fl_fraction=0.5, fl_synchronized=False, fl_clients=None,
-                 fl_topology="hub", fl_edges=None, loss_overrides=None):
+                 fl_topology="hub", fl_edges=None, fl_async_buffer=0,
+                 loss_overrides=None):
     """Returns (jitted, args, tokens_processed, is_train, extra_record)."""
     from ..models import layers as _layers
     _layers.set_logits_partition(
@@ -143,6 +144,24 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
                        "topology": fl_topology}
         if fl_topology == "hierarchical":
             extra["fl"]["n_edges"] = fl.resolve_n_edges()
+        if fl_async_buffer:
+            # buffered-async mode: the lowering proof is the FLUSH
+            # program — the topology's scatter-accumulate over a
+            # (B, ...) stacked buffer of packed trained-slot updates
+            # (core/async_agg.py); clients' local programs are the
+            # packed cohort step already proven by the sync fl_round
+            from ..core.async_agg import flush_arg_specs
+            from ..core.topology import resolve_topology
+            fl = dataclasses.replace(fl, async_buffer=fl_async_buffer)
+            extra["fl"]["async_buffer"] = fl_async_buffer
+            flush = resolve_topology(fl_topology).build_buffered_flush(
+                assign, fl)
+            buf_args = flush_arg_specs(assign, params, fl)
+            jitted = jax.jit(flush,
+                             in_shardings=(p_sh,) + (rep,) * len(buf_args),
+                             out_shardings=p_sh)
+            return jitted, (params,) + buf_args, \
+                fl_async_buffer * shape.seq_len, False, extra
         # hierarchical meshes split the flat client dim edge-major
         client_axes = ("edge", "client") if "edge" in mesh.axis_names \
             else "client"
@@ -174,7 +193,7 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
 def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                step_kind: str = "auto", layout: Optional[str] = None,
                fl_fraction: float = 0.5, fl_synchronized: bool = False,
-               fl_topology: str = "hub",
+               fl_topology: str = "hub", fl_async_buffer: int = 0,
                lower_only: bool = False, remat: bool = True,
                skip_accounting: bool = False,
                verbose: bool = True) -> Dict[str, Any]:
@@ -225,7 +244,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
     jitted, args, tokens, train, extra = build_jitted(
         cfg, shape, step_kind, mesh, layout, unroll=False, remat=remat,
         fl_fraction=fl_fraction, fl_synchronized=fl_synchronized,
-        fl_clients=fl_clients, fl_topology=fl_topology, fl_edges=fl_edges)
+        fl_clients=fl_clients, fl_topology=fl_topology, fl_edges=fl_edges,
+        fl_async_buffer=fl_async_buffer)
     record.update(extra)
     with mesh:
         lowered = jitted.lower(*args)
@@ -251,7 +271,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             c, shape, step_kind, mesh, layout, unroll=True, remat=remat,
             fl_fraction=fl_fraction, fl_synchronized=fl_synchronized,
             fl_clients=fl_clients, fl_topology=fl_topology,
-            fl_edges=fl_edges)
+            fl_edges=fl_edges, fl_async_buffer=fl_async_buffer)
         with mesh:
             comp = j.lower(*a).compile()
         acct.append((roofline.cost_analysis_terms(comp),
@@ -312,6 +332,10 @@ def main():
     ap.add_argument("--fl-synchronized", action="store_true")
     ap.add_argument("--fl-topology", default="hub",
                     choices=["hub", "hierarchical", "gossip"])
+    ap.add_argument("--fl-async-buffer", type=int, default=0,
+                    help="compile the buffered-async FLUSH program "
+                         "(B stacked packed updates) instead of the "
+                         "sync round step")
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--skip-accounting", action="store_true")
     ap.add_argument("--lower-only", action="store_true")
@@ -323,6 +347,7 @@ def main():
                      fl_fraction=args.fl_fraction,
                      fl_synchronized=args.fl_synchronized,
                      fl_topology=args.fl_topology,
+                     fl_async_buffer=args.fl_async_buffer,
                      lower_only=args.lower_only, remat=not args.no_remat,
                      skip_accounting=args.skip_accounting)
     os.makedirs(args.out, exist_ok=True)

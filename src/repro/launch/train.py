@@ -6,6 +6,7 @@ scale; on a pod the same code runs under the production mesh).
         --train-fraction 0.5 [--strategy uniform|fixed_last|weighted|full]
         [--synchronized] [--topology hub|hierarchical|gossip [--edges 2]]
         [--packed] [--fused-agg auto|on|off] [--ckpt results/ck/run1]
+        [--async-buffer 4 --staleness polynomial --delay-dist pareto:1.5]
 
 Drives the paper's federated round (per-client layer subsets from the
 registered strategy, masked local Adam, participation-weighted FedAvg)
@@ -47,6 +48,17 @@ def main():
                     choices=("auto", "on", "off"),
                     help="fused Pallas aggregation (kernels/masked_agg)")
     ap.add_argument("--fedprox-mu", type=float, default=0.0)
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="FedBuff-style semi-async rounds: flush the "
+                         "global model every N buffered updates (0=sync)")
+    ap.add_argument("--staleness", default="polynomial",
+                    help="stale-delta reweighting rule (registered in "
+                         "core/async_agg.py)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5)
+    ap.add_argument("--delay-dist", default="pareto:1.5",
+                    help="simulated client-latency distribution for "
+                         "async rounds: none|exponential[:s]|"
+                         "lognormal[:s]|pareto[:a]")
     ap.add_argument("--dropout", type=float, default=0.0)
     ap.add_argument("--lr", type=float, default=2e-3)
     ap.add_argument("--batch-size", type=int, default=4)
@@ -80,7 +92,11 @@ def main():
                   strategy=args.strategy, synchronized=args.synchronized,
                   lr=args.lr, prox_mu=args.fedprox_mu,
                   topology=args.topology, n_edges=args.edges,
-                  packed=args.packed, fused_agg=args.fused_agg)
+                  packed=args.packed, fused_agg=args.fused_agg,
+                  async_buffer=args.async_buffer,
+                  staleness=args.staleness,
+                  staleness_alpha=args.staleness_alpha,
+                  client_delay_dist=args.delay_dist)
     hooks = [Checkpointer(args.ckpt)] if args.ckpt else []
     fed = Federation.from_config(cfg, fl, data=loader, seed=args.seed,
                                  dropout_rate=args.dropout, hooks=hooks)
@@ -89,7 +105,9 @@ def main():
           f"train={fl.resolve_n_train(fed.assign.n_units)} "
           f"clients={args.clients} topology={args.topology}" +
           (f" edges={fl.resolve_n_edges()}"
-           if args.topology == "hierarchical" else ""))
+           if args.topology == "hierarchical" else "") +
+          (f" async_buffer={fl.async_buffer} staleness={fl.staleness}"
+           f" delays={fl.client_delay_dist}" if fl.async_buffer else ""))
     t0 = time.time()
     fed.fit(args.rounds, log_every=1)
     print(f"total {time.time()-t0:.1f}s; comm summary:")

@@ -1,0 +1,366 @@
+"""Buffered semi-async aggregation (DESIGN.md §8): staleness registry,
+delay scheduler determinism, FedBuff engine — zero-staleness flushes
+bit-exact vs. the synchronous packed round step across topologies x
+strategies (incl. stragglers and out-of-order arrival), stale-delta
+reweighting, buffered byte accounting — plus the straggler-accounting
+bugfixes (dropped clients not billed, rate-0 dropout key stream,
+degenerate-round comm guards)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CommAccounting, FLConfig, Federation, Server,
+                        ServerHook, StragglerDropout,
+                        UnknownStalenessError, build_round_step, comm,
+                        get_staleness, register_staleness,
+                        registered_staleness, staleness_weights,
+                        unregister_staleness)
+from repro.core.async_agg import (DelayScheduler, _mixed_window_batches,
+                                  parse_delay_dist)
+from repro.models.toy import init_toy_mlp, toy_batches, toy_loss, toy_units
+
+C = 4
+
+
+def _setup(n_blocks=6, d=16, hidden=32, out=4, steps=2, batch=2):
+    key = jax.random.PRNGKey(0)
+    params = init_toy_mlp(key, n_blocks=n_blocks, d=d, hidden=hidden,
+                          out=out)
+    assign = toy_units(params)
+    batches = toy_batches(jax.random.fold_in(key, 1), n_clients=C,
+                          steps=steps, batch=batch, d=d, out=out)
+    return params, assign, batches
+
+
+def _assert_trees_bitexact(a, b):
+    for pa, pb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(pa), np.asarray(pb)), \
+            "params diverged bitwise"
+
+
+# -- staleness registry -----------------------------------------------------
+
+def test_builtin_staleness_registered():
+    assert {"polynomial", "constant"} <= set(registered_staleness())
+
+
+def test_polynomial_staleness_values():
+    poly = get_staleness("polynomial")
+    s = np.array([0.0, 1.0, 3.0])
+    w = poly(s, 0.5)
+    assert w[0] == 1.0                       # zero staleness: exact 1
+    assert np.all(np.diff(w) < 0)            # monotonically down-weighted
+    np.testing.assert_allclose(w[1], 1 / np.sqrt(2))
+    const = get_staleness("constant")
+    assert np.all(const(s, 0.5) == 1.0)
+
+
+def test_unknown_staleness_lists_registered():
+    with pytest.raises(UnknownStalenessError, match="polynomial"):
+        get_staleness("does_not_exist")
+
+
+def test_custom_staleness_roundtrips():
+    @register_staleness(name="_test_linear")
+    def lin(s, alpha):
+        return 1.0 / (1.0 + alpha * np.asarray(s, np.float64))
+
+    try:
+        assert "_test_linear" in registered_staleness()
+        np.testing.assert_allclose(
+            get_staleness("_test_linear")(np.array([2.0]), 1.0), [1 / 3])
+    finally:
+        unregister_staleness("_test_linear")
+    assert "_test_linear" not in registered_staleness()
+
+
+def test_zero_staleness_weights_pass_through_bitwise():
+    w = np.array([0.1, 2.0, 0.0, 3.7], np.float32)
+    eff = staleness_weights(w, np.zeros(4), "polynomial", 0.5)
+    assert np.array_equal(eff, w)
+
+
+# -- delay scheduler --------------------------------------------------------
+
+def test_parse_delay_dist():
+    assert parse_delay_dist("none") == ("none", 0.0)
+    assert parse_delay_dist("pareto:1.2") == ("pareto", 1.2)
+    assert parse_delay_dist("exponential") == ("exponential", 1.0)
+    with pytest.raises(ValueError, match="client_delay_dist"):
+        parse_delay_dist("cauchy")
+
+
+@pytest.mark.parametrize("dist", ["none", "exponential", "lognormal:0.5",
+                                  "pareto:1.5"])
+def test_delay_scheduler_deterministic_and_positive(dist):
+    a, b = DelayScheduler(dist, seed=3), DelayScheduler(dist, seed=3)
+    draws = [(c, s) for c in range(3) for s in range(4)]
+    da = [a.delay(c, s) for c, s in draws]
+    assert da == [b.delay(c, s) for c, s in draws]   # stateless replay
+    assert all(d > 0 for d in da)
+    if dist != "none":
+        assert DelayScheduler(dist, seed=4).delay(0, 0) != da[0]
+
+
+def test_pareto_delays_heavy_tailed():
+    sched = DelayScheduler("pareto:1.1", seed=0)
+    d = np.array([sched.delay(c, s) for c in range(16) for s in range(16)])
+    assert d.min() >= 1.0
+    assert d.mean() > np.median(d) * 1.2     # long right tail
+
+
+# -- zero-staleness flush == synchronous packed round (the anchor) ----------
+
+class _PermutedDelays(DelayScheduler):
+    """First dispatches complete in a shuffled order (one completion per
+    client before the flush); later dispatches take forever."""
+
+    def __init__(self, order):
+        super().__init__("none", 0)
+        self.order = order
+
+    def delay(self, client, seq):
+        return 100.0 if seq > 0 else 1.0 + 0.1 * self.order[client]
+
+
+@pytest.mark.parametrize("topology", ["hub", "hierarchical"])
+@pytest.mark.parametrize("strategy", ["uniform", "synchronized"])
+@pytest.mark.parametrize("arrival", ["inorder", "shuffled"])
+def test_flush_zero_staleness_bitexact_vs_sync_round(topology, strategy,
+                                                     arrival):
+    """B = C and a shared origin version: the first flush must equal one
+    synchronous packed round bitwise — with a straggler-zeroed client in
+    the weights, and regardless of arrival order (``shuffled`` permutes
+    completions; the buffer drains in canonical client order)."""
+    params, assign, batches = _setup()
+    weights = jnp.asarray([1.0, 2.0, 0.0, 3.0])     # client 2 dropped
+    sync_fl = FLConfig(n_clients=C, train_fraction=0.5, strategy=strategy,
+                       topology=topology, packed=True, fused_agg="off")
+    srv = Server(build_round_step(toy_loss, assign, sync_fl), assign,
+                 sync_fl, params, seed=11)
+    srv.run_round(batches, weights)
+
+    async_fl = FLConfig(n_clients=C, train_fraction=0.5, strategy=strategy,
+                        topology=topology, fused_agg="off",
+                        async_buffer=C, client_delay_dist="none")
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=async_fl, seed=11)
+    if arrival == "shuffled":
+        fed.server.async_engine.scheduler = _PermutedDelays([2, 0, 3, 1])
+    fed.server.run(1, lambda w: batches, weights=weights)
+
+    _assert_trees_bitexact(srv.params, fed.params)
+    rec = fed.history[0]
+    assert rec.staleness_mean == 0.0 and rec.staleness_max == 0.0
+    # the dropped client is no participant, same as the sync loop
+    assert rec.n_participants == C - 1 == srv.history[0].n_participants
+    # dropped client shipped nothing under either loop
+    assert rec.uplink_bytes == pytest.approx(srv.history[0].uplink_bytes)
+
+
+def test_staleness_reweighting_kicks_in_and_matters():
+    params, assign, batches = _setup()
+
+    def run(staleness):
+        fl = FLConfig(n_clients=C, train_fraction=0.5, fused_agg="off",
+                      async_buffer=2, staleness=staleness,
+                      staleness_alpha=1.0, client_delay_dist="pareto:1.5")
+        fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                         fl=fl, seed=5)
+        fed.server.run(4, lambda w: batches)
+        return fed
+
+    poly = run("polynomial")
+    stale = [r.staleness_mean for r in poly.history]
+    assert max(stale) > 0.0                  # in-flight work went stale
+    times = [r.sim_time for r in poly.history]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    const = run("constant")
+    # same schedule, same deltas — only the reweighting differs
+    assert [r.staleness_mean for r in const.history] == stale
+    leaves_p = jax.tree_util.tree_leaves(poly.params)
+    leaves_c = jax.tree_util.tree_leaves(const.params)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(leaves_p, leaves_c))
+
+
+def test_client_can_contribute_twice_per_flush():
+    """A fast client may cycle twice before the buffer fills (B > C):
+    both its updates aggregate, tagged with their own round keys."""
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, fused_agg="off",
+                  async_buffer=C + 2, client_delay_dist="pareto:1.1")
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=2)
+    fed.server.run(2, lambda w: batches)
+    for rec, clients in zip(fed.history,
+                            fed.server.async_engine.flush_clients):
+        assert len(clients) == C + 2
+        assert rec.n_participants <= C       # distinct clients only
+        assert len(clients) > len(np.unique(clients))
+
+
+def test_async_rejects_dense_and_gossip():
+    params, assign, _ = _setup()
+    with pytest.raises(ValueError, match="pack"):
+        Federation(loss_fn=toy_loss, params=params, assign=assign,
+                   fl=FLConfig(n_clients=C, strategy="full",
+                               n_train_units=assign.n_units,
+                               async_buffer=2))
+    with pytest.raises(ValueError, match="buffered-async"):
+        Federation(loss_fn=toy_loss, params=params, assign=assign,
+                   fl=FLConfig(n_clients=C, train_fraction=0.5,
+                               topology="gossip", async_buffer=2))
+
+
+def test_mixed_window_batches_routes_per_client():
+    per_window = {w: {"x": np.arange(C * 2).reshape(C, 2) + 100 * w}
+                  for w in range(3)}
+    out = _mixed_window_batches(lambda w: per_window[w], [0, 2, 1, 2])
+    np.testing.assert_array_equal(
+        np.asarray(out["x"]),
+        np.stack([per_window[0]["x"][0], per_window[2]["x"][1],
+                  per_window[1]["x"][2], per_window[2]["x"][3]]))
+
+
+# -- buffered byte accounting ----------------------------------------------
+
+def test_buffered_hub_bytes_closed_form():
+    ub = np.array([10.0, 20.0, 40.0])
+    entry_sel = np.array([[1, 0, 0], [0, 1, 1], [1, 0, 0]], np.float32)
+    d = comm.buffered_hub_round_bytes(entry_sel, ub)
+    assert d["uplink"] == 10 + 60 + 10       # one upload per entry
+    assert d["downlink"] == 70 * 3           # one re-pull per entry
+    assert d["uplink_frac"] == pytest.approx(80 / (70 * 3))
+    empty = comm.buffered_hub_round_bytes(np.zeros((0, 3)), ub,
+                                          downlink="selected")
+    assert empty["uplink"] == 0.0 and empty["uplink_frac"] == 0.0
+
+
+def test_buffered_hierarchical_bytes_only_flushed_cross_wan():
+    ub = np.array([10.0, 20.0, 40.0])
+    mem = comm.edge_membership(4, 2)         # edges {0,1} {2,3}
+    # clients 0 and 1 (same edge) both trained unit 0; entry for client
+    # 2 trained unit 2 — edge 0's two buffered updates cross the WAN as
+    # ONE partial for unit 0
+    entry_sel = np.array([[1, 0, 0], [1, 0, 0], [0, 0, 1]], np.float32)
+    clients = np.array([0, 1, 2])
+    d = comm.buffered_hierarchical_round_bytes(entry_sel, clients, ub, mem)
+    assert d["client_edge_uplink"] == 10 + 10 + 40
+    assert d["edge_hub_uplink"] == 10 + 40 == d["uplink"]
+    empty = comm.buffered_hierarchical_round_bytes(
+        np.zeros((0, 3)), np.zeros((0,), np.int64), ub, mem)
+    assert empty["uplink"] == 0.0 and empty["uplink_frac"] == 0.0
+
+
+@pytest.mark.parametrize("topology", ["hub", "hierarchical"])
+def test_async_records_match_buffered_accounting(topology):
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, topology=topology,
+                  fused_agg="off", async_buffer=3,
+                  client_delay_dist="pareto:1.5")
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=9)
+    fed.server.run(3, lambda w: batches)
+    ub = fed.server.unit_bytes()
+    topo = fed.server.topology
+    for rec, entry_sel, clients in zip(
+            fed.history, fed.server.sel_history,
+            fed.server.async_engine.flush_clients):
+        expect = topo.buffered_round_bytes(entry_sel, clients, ub, fl)
+        assert rec.uplink_bytes == pytest.approx(expect["uplink"])
+    summ = fed.comm_summary()
+    assert 0.0 < summ["reduction_vs_full"] < 1.0
+    assert summ["sim_time"] > 0.0 and "avg_staleness" in summ
+
+
+# -- satellite bugfixes -----------------------------------------------------
+
+def test_degenerate_comm_rounds_report_zero_frac():
+    ub = np.array([10.0, 20.0, 40.0])
+    for sel in (np.zeros((0, 3), np.float32),          # no clients
+                np.zeros((4, 3), np.float32)):         # empty selection
+        for downlink in ("full", "selected"):
+            d = comm.hub_round_bytes(sel, ub, downlink=downlink)
+            assert d["uplink"] == 0.0 and d["uplink_frac"] == 0.0
+            assert np.isfinite(d["downlink"])
+            h = comm.hierarchical_round_bytes(
+                sel, ub, comm.edge_membership(max(sel.shape[0], 1), 1),
+                downlink=downlink) if sel.shape[0] else None
+            if h is not None:
+                assert h["uplink"] == 0.0 and h["uplink_frac"] == 0.0
+    # zero-byte model: frac guards, not NaN
+    z = comm.hub_round_bytes(np.ones((2, 3), np.float32), np.zeros(3))
+    assert z["uplink_frac"] == 0.0
+
+
+def test_straggler_rate0_does_not_perturb_key_stream():
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, fused_agg="off")
+
+    def run(hooks):
+        srv = Server(build_round_step(toy_loss, assign, fl), assign, fl,
+                     params, seed=21, hooks=hooks)
+        srv.run_round(batches)
+        srv.run_round(batches)
+        return srv
+
+    plain = run(())
+    rate0 = run((StragglerDropout(0.0),))
+    _assert_trees_bitexact(plain.params, rate0.params)
+    assert np.array_equal(
+        np.asarray(jax.random.key_data(plain.key))
+        if hasattr(jax.random, "key_data") else np.asarray(plain.key),
+        np.asarray(jax.random.key_data(rate0.key))
+        if hasattr(jax.random, "key_data") else np.asarray(rate0.key))
+
+
+class _DropClients(ServerHook):
+    def __init__(self, dropped):
+        self.dropped = dropped
+
+    def on_round_start(self, server, round_idx, weights):
+        keep = np.ones(server.fl.n_clients, np.float32)
+        keep[list(self.dropped)] = 0.0
+        return weights * jnp.asarray(keep)
+
+
+def test_comm_accounting_ignores_dropped_clients():
+    """Clients zeroed by straggler dropout upload nothing: the record's
+    byte math masks their selection rows, and the effective weights are
+    threaded onto the RoundRecord for hooks to see."""
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, fused_agg="off")
+    srv = Server(build_round_step(toy_loss, assign, fl), assign, fl,
+                 params, seed=3, hooks=(_DropClients({1, 3}),))
+    rec = srv.run_round(batches)
+    assert rec.effective_weights is not None
+    assert rec.effective_weights[1] == 0.0 == rec.effective_weights[3]
+    sel = srv.sel_history[0].copy()
+    billed = sel * np.array([1, 0, 1, 0], np.float32)[:, None]
+    ub = srv.unit_bytes()
+    assert rec.uplink_bytes == pytest.approx(
+        comm.hub_round_bytes(billed, ub)["uplink"])
+    assert rec.uplink_bytes < comm.hub_round_bytes(sel, ub)["uplink"]
+    counts = comm.unit_param_counts(assign, srv.global_params())
+    assert rec.trained_params == pytest.approx(
+        float(np.einsum("cu,u->", billed, counts)))
+    # run summary agrees with the per-round records
+    summ = srv.comm_summary()
+    assert summ["avg_uplink_bytes"] == pytest.approx(rec.uplink_bytes)
+
+
+def test_comm_accounting_masks_legacy_pseudo_unit_rounds():
+    rec_sel = np.ones((C, 1), np.float32)    # legacy (C, 1) shim shape
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, fused_agg="off")
+    srv = Server(build_round_step(toy_loss, assign, fl), assign, fl,
+                 params, seed=3)
+    from repro.core.server import RoundRecord
+    rec = RoundRecord(0, 0.0, None, 0.0, 0.0, 0.0,
+                      effective_weights=[1.0, 0.0, 1.0, 0.0])
+    CommAccounting().on_round_end(srv, rec, {"sel": rec_sel})
+    assert rec.uplink_bytes == pytest.approx(
+        float(srv.unit_bytes().sum()) * 2)   # 2 surviving clients
