@@ -30,6 +30,24 @@ def timed(fn, *args, reps=3, warmup=1):
     return (time.perf_counter() - t0) / reps, out
 
 
+def timed_min(fn, *args, reps=5, warmup=1):
+    """Best-of-reps wall time: the min is the least load-noise-sensitive
+    estimator for a deterministic compiled step (unlike the mean, a
+    single preempted rep cannot flip a comparison).  Shared by
+    round_step_bench and selection_bench."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
 def vgg_loss_fn(params, batch):
     return pm.xent_loss(pm.vgg16_apply(params, batch["x"]), batch["y"]), {}
 

@@ -25,31 +25,14 @@ import argparse
 import dataclasses
 import json
 import platform
-import time
 
 import jax
 import jax.numpy as jnp
 
+from .common import timed_min
 from repro.core.federation import FLConfig, build_round_step
 from repro.models.toy import (init_toy_mlp, toy_batches, toy_loss,
                               toy_units)
-
-
-def timed_min(fn, *args, reps=5, warmup=1):
-    """Best-of-reps wall time: the min is the least load-noise-sensitive
-    estimator for a deterministic compiled step (unlike the mean, a
-    single preempted rep cannot flip a comparison)."""
-    out = None
-    for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best, out
 
 FULL = dict(n_blocks=16, d=64, hidden=256, out=16,
             n_clients=8, steps=4, batch=8)

@@ -1,0 +1,271 @@
+"""Uniform vs score-driven selection: time-to-accuracy + scoring cost
+(DESIGN.md §11).
+
+Runs the stacked-block toy model (``repro.models.toy`` — scalar +
+stacked leaf kinds) through the ``Federation`` facade at the paper's
+25%/50% train fractions, once per selection strategy:
+
+* ``uniform`` — the paper's random-subset baseline (scoring OFF: the
+  round step compiles the pre-scoring trace, no telemetry anywhere);
+* ``score_weighted`` — the paper's future-work variant: Gumbel top-k
+  over live per-unit gradient-norm EMAs (scoring ON: the state pytree
+  threads through the compiled round step, telemetry rides the
+  metrics);
+* ``depth_dropout`` / ``successive`` — the related-work schedules
+  (Guo et al. 2023 / Pfeiffer et al. 2023), recorded for the curve
+  trajectory (no gate).
+
+Per strategy the bench records the eval-loss curve and the round count
+to a shared target (1.02x the weaker of uniform/score_weighted's best
+— both curves can reach it, the race is on rounds), plus the per-round
+wall time of the compiled step.  Correctness gates (what CI relies
+on): the scoring-OFF metrics must carry no telemetry (the stateless
+trace is the pre-scoring trace) and losses must stay finite; the full
+mode (the committed artifact) additionally gates that score_weighted
+reaches the target in <= uniform's rounds at 25% and that the
+scoring-OFF wall time sits within 5% of the verbatim pre-scoring
+oracle.  (The shared target is always reachable by construction, so
+there is no reached-at-all gate.)
+
+Writes BENCH_selection.json next to BENCH_round_step.json /
+BENCH_async.json (EXPERIMENTS.md §Selection).  ``--smoke`` is the
+CI-gate variant (tiny model, fewer rounds, same JSON shape).
+
+    PYTHONPATH=src python -m benchmarks.selection_bench [--smoke]
+        [--out BENCH_selection.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import timed_min
+from repro.core import FLConfig, Federation, build_round_step
+from repro.models.toy import (init_toy_mlp, toy_apply, toy_batches,
+                              toy_loss, toy_units)
+
+FULL = dict(n_blocks=10, d=32, hidden=64, out=8, n_clients=8, steps=2,
+            batch=8, rounds=40, lr=2e-2, score_ema=0.7, n_eval=64, reps=20)
+SMOKE = dict(n_blocks=8, d=16, hidden=32, out=4, n_clients=4, steps=2,
+             batch=4, rounds=12, lr=2e-2, score_ema=0.7, n_eval=32, reps=2)
+
+STRATEGIES = ("uniform", "score_weighted", "depth_dropout", "successive")
+
+
+def _setup(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = init_toy_mlp(key, n_blocks=cfg["n_blocks"], d=cfg["d"],
+                          hidden=cfg["hidden"], out=cfg["out"])
+    assign = toy_units(params)
+    batches = toy_batches(jax.random.fold_in(key, 1),
+                          n_clients=cfg["n_clients"], steps=cfg["steps"],
+                          batch=cfg["batch"], d=cfg["d"], out=cfg["out"])
+    ek = jax.random.fold_in(key, 2)
+    ex = jax.random.normal(jax.random.fold_in(ek, 0),
+                           (cfg["n_eval"], cfg["d"]))
+    ey = jax.random.normal(jax.random.fold_in(ek, 1),
+                           (cfg["n_eval"], cfg["out"]))
+
+    @jax.jit
+    def eval_loss(p):
+        return jnp.mean(jnp.square(toy_apply(p, ex) - ey))
+
+    return params, assign, batches, eval_loss
+
+
+def _fl(cfg, strategy, fraction):
+    return FLConfig(n_clients=cfg["n_clients"], train_fraction=fraction,
+                    strategy=strategy, lr=cfg["lr"], fused_agg="off",
+                    score_ema=cfg["score_ema"])
+
+
+def run_curve(cfg, *, strategy, fraction, seed=0) -> dict:
+    params, assign, batches, eval_loss = _setup(cfg)
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=_fl(cfg, strategy, fraction), seed=seed,
+                     eval_fn=eval_loss)
+    fed.server.run(cfg["rounds"], lambda r: batches)
+    losses = [float(r.eval_metric) for r in fed.history]
+    row = {"losses": losses, "best_loss": float(min(losses)),
+           "scoring": fed.server.sel_state is not None}
+    if fed.server.sel_state is not None:
+        st = fed.server.sel_state
+        row["state"] = {"round": int(st.round),
+                        "counts_total": float(np.asarray(st.counts).sum()),
+                        "scores_max": float(np.asarray(st.scores).max())}
+    return row
+
+
+def rounds_to_target(losses, target):
+    best = float("inf")
+    for i, l in enumerate(losses):
+        best = min(best, l)
+        if best <= target:
+            return i + 1
+    return None
+
+
+def _oracle_stateless_step(assign, fl):
+    """Verbatim pre-scoring (PR 1-4) stateless masked round step — the
+    wall-time oracle for the scoring-OFF acceptance gate.  The scored
+    engine must compile this exact program when scoring is off (the
+    trace-identity gate asserts no telemetry leaked; the stateless
+    bit-exactness tests assert the numerics), so its wall time is the
+    regression baseline."""
+    from repro.core.aggregation import masked_fedavg
+    from repro.core.client import local_update
+    from repro.core.masking import mask_tree
+    from repro.core.strategies import SelectionContext, resolve_strategy
+    strat = resolve_strategy(fl.strategy, fl.synchronized)
+    ctx = SelectionContext(n_clients=fl.n_clients, n_units=assign.n_units,
+                           n_train=fl.resolve_n_train(assign.n_units))
+
+    def round_step(global_params, client_batches, weights, round_key):
+        sel = strat.select(round_key, ctx)
+
+        def one_client(sel_row, batches):
+            mask = mask_tree(assign, sel_row, global_params)
+            return local_update(toy_loss, global_params, mask, batches,
+                                lr=fl.lr)
+
+        deltas, metrics = jax.vmap(one_client)(sel, client_batches)
+        new_params = masked_fedavg(global_params, deltas, sel, weights,
+                                   assign)
+        return new_params, {"loss_mean": metrics["loss_mean"].mean(),
+                            "sel": sel}
+
+    return round_step
+
+
+def bench_wall(cfg, fraction) -> dict:
+    """Per-round wall time: scoring OFF (uniform through the scored
+    engine) vs the verbatim pre-scoring oracle — the acceptance gate:
+    no scoring-off regression > 5% — and vs scoring ON (score_weighted
+    + live state + telemetry; overhead recorded honestly, no gate: on
+    a CPU-host toy model the extra gumbel/sort/accumulate ops sit in
+    measurement noise).  Also asserts the OFF trace carries no
+    telemetry."""
+    params, assign, batches, _ = _setup(cfg)
+    weights = jnp.ones((cfg["n_clients"],), jnp.float32)
+    rk = jax.random.PRNGKey(42)
+    reps, warmup = cfg["reps"], 2
+
+    fl_off = _fl(cfg, "uniform", fraction)
+    off = jax.jit(build_round_step(toy_loss, assign, fl_off))
+    t_off, (_, m_off) = timed_min(off, params, batches, weights, rk,
+                                  reps=reps, warmup=warmup)
+
+    oracle = jax.jit(_oracle_stateless_step(assign, fl_off))
+    t_oracle, _ = timed_min(oracle, params, batches, weights, rk,
+                            reps=reps, warmup=warmup)
+
+    from repro.core import SelectionContext, get_strategy
+    strat = get_strategy("score_weighted")
+    state = strat.init_state(SelectionContext(
+        n_clients=cfg["n_clients"], n_units=assign.n_units, n_train=1))
+    on = jax.jit(build_round_step(
+        toy_loss, assign, _fl(cfg, "score_weighted", fraction)))
+    t_on, (_, m_on) = timed_min(on, params, batches, weights, rk, state,
+                                reps=reps, warmup=warmup)
+    return {"wall_s_scoring_off": t_off,
+            "wall_s_pre_scoring_oracle": t_oracle,
+            "wall_s_scoring_on": t_on,
+            "scoring_off_regression": t_off / t_oracle - 1.0,
+            "scoring_on_overhead": t_on / t_off - 1.0,
+            "off_trace_has_no_telemetry": "unit_sqnorm" not in m_off,
+            "on_trace_has_telemetry": "unit_sqnorm" in m_on}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale run (tiny model, fewer rounds)")
+    ap.add_argument("--out", default="BENCH_selection.json")
+    ap.add_argument("--fractions", type=float, nargs="+",
+                    default=[0.25, 0.50])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    cfg = SMOKE if args.smoke else FULL
+
+    results, failures = {}, []
+    for frac in args.fractions:
+        curves = {s: run_curve(cfg, strategy=s, fraction=frac,
+                               seed=args.seed) for s in STRATEGIES}
+        # shared target: just above the weaker head-to-head variant's
+        # best loss, so both curves can reach it — the race is on rounds
+        target = 1.02 * max(curves["uniform"]["best_loss"],
+                            curves["score_weighted"]["best_loss"])
+        r_uni = rounds_to_target(curves["uniform"]["losses"], target)
+        r_sco = rounds_to_target(curves["score_weighted"]["losses"], target)
+        wall = bench_wall(cfg, frac)
+        row = {"curves": curves, "target_loss": float(target),
+               "rounds_uniform": r_uni, "rounds_score_weighted": r_sco,
+               "wall": wall}
+        results[f"{frac:.2f}"] = row
+        print(f"frac={frac:.2f} target={target:.4f} "
+              f"rounds: uniform={r_uni} score_weighted={r_sco} | "
+              f"wall oracle={wall['wall_s_pre_scoring_oracle']*1e3:.2f}ms "
+              f"off={wall['wall_s_scoring_off']*1e3:.2f}ms "
+              f"({wall['scoring_off_regression']*100:+.1f}%) "
+              f"on={wall['wall_s_scoring_on']*1e3:.2f}ms "
+              f"({wall['scoring_on_overhead']*100:+.1f}%)")
+        # sanity gates (both modes): finite curves, scored run actually
+        # scored, and the stateless trace is the pre-scoring trace
+        for s, c in curves.items():
+            if not all(np.isfinite(c["losses"])):
+                failures.append(f"non-finite losses: {s} at frac={frac}")
+        if not wall["off_trace_has_no_telemetry"]:
+            failures.append(f"stateless trace leaked telemetry at "
+                            f"frac={frac}")
+        if not curves["score_weighted"]["scoring"]:
+            failures.append(f"score_weighted did not engage the scored "
+                            f"engine at frac={frac}")
+
+    report = {
+        "bench": "selection",
+        "mode": "smoke" if args.smoke else "full",
+        "model": cfg,
+        "strategies": list(STRATEGIES),
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "results": results,
+    }
+    at25 = results.get("0.25")
+    if at25 is not None:
+        ru, rs = at25["rounds_uniform"], at25["rounds_score_weighted"]
+        report["scored_wins_rounds_at_25"] = (
+            rs is not None and (ru is None or rs <= ru))
+        report["scoring_off_regression_at_25"] = \
+            at25["wall"]["scoring_off_regression"]
+        report["scoring_on_overhead_at_25"] = \
+            at25["wall"]["scoring_on_overhead"]
+        # acceptance gates of the committed (full-mode) artifact; the
+        # smoke run records them but only fails on the sanity gates —
+        # tiny-model round counts and CI wall clocks are too noisy
+        if not args.smoke:
+            if not report["scored_wins_rounds_at_25"]:
+                failures.append("score_weighted needed more rounds than "
+                                "uniform at frac=0.25")
+            if at25["wall"]["scoring_off_regression"] > 0.05:
+                failures.append(
+                    f"scoring-off wall-time regression at 25% is "
+                    f"{at25['wall']['scoring_off_regression']*100:.1f}% "
+                    f"> 5% vs the pre-scoring oracle")
+    report["sanity_ok"] = not failures
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    if failures:
+        raise SystemExit("selection bench gates FAILED: " +
+                         "; ".join(failures))
+    return report
+
+
+if __name__ == "__main__":
+    main()

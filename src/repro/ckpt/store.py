@@ -67,6 +67,7 @@ def save_server_state(path: str, server, extra: Optional[Dict] = None):
     }
     meta.update(extra or {})
     tree = server.params
+    wrapped = False
     engine = getattr(server, "async_engine", None)
     if engine is not None and engine.started:
         # buffered-async runs carry live state beyond the params: the
@@ -76,6 +77,17 @@ def save_server_state(path: str, server, extra: Optional[Dict] = None):
         async_meta, async_arrays = engine.checkpoint_state()
         meta["async"] = async_meta
         tree = {"params": server.params, "async_arrays": async_arrays}
+        wrapped = True
+    sel_state = getattr(server, "sel_state", None)
+    if sel_state is not None:
+        # scored selection (DESIGN.md §11): the strategy's live state
+        # pytree — score EMAs, per-unit train counts, round index —
+        # must restore bit-exactly for a resumed run's selections to
+        # match an uninterrupted one
+        if not wrapped:
+            tree = {"params": server.params}
+        tree["sel_state"] = dict(sel_state._asdict())
+        meta["sel_state"] = True
     save_pytree(path, tree, metadata=meta)
 
 
@@ -88,6 +100,17 @@ def restore_server_state(path: str, server):
     in-flight work (``AsyncRoundEngine.restore_state``)."""
     meta = load_metadata(path)
     engine = getattr(server, "async_engine", None)
+    scored = bool(meta.get("sel_state"))
+    sel_state = getattr(server, "sel_state", None)
+    if scored and sel_state is None:
+        raise ValueError(
+            "checkpoint holds scored-selection state; restore it into a "
+            "Federation configured with the original stateful strategy")
+    if sel_state is not None and not scored:
+        raise ValueError(
+            "this server's strategy is stateful but the checkpoint has "
+            "no selection state; restore with the original strategy")
+    sel_template = dict(sel_state._asdict()) if scored else None
     if "async" in meta:
         if engine is None:
             raise ValueError(
@@ -95,11 +118,19 @@ def restore_server_state(path: str, server):
                 "a Federation configured with FLConfig.async_buffer > 0")
         template = {"params": server.params,
                     "async_arrays": engine.arrays_template(meta["async"])}
+        if scored:
+            template["sel_state"] = sel_template
         tree = load_pytree(path, template)
         server.params = tree["params"]
         engine.restore_state(meta["async"], tree["async_arrays"])
+    elif scored:
+        tree = load_pytree(path, {"params": server.params,
+                                  "sel_state": sel_template})
+        server.params = tree["params"]
     else:
         server.params = load_pytree(path, server.params)
+    if scored:
+        server.sel_state = type(sel_state)(**tree["sel_state"])
     if "history" in meta:
         from ..core.server import RoundRecord
         server.history = [RoundRecord(**r) for r in meta["history"]]

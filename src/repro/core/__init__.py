@@ -22,6 +22,7 @@ from .session import Federation, ModelSpec  # noqa: F401
 from .server import (Server, ServerHook, RoundRecord, StragglerDropout,  # noqa: F401
                      CommAccounting, RoundLogger, Checkpointer)
 from .strategies import (SelectionStrategy, SelectionContext, Synchronized,  # noqa: F401
+                         SelectionState, NormTelemetry, ScoredStrategy,
                          register_strategy, unregister_strategy,
                          registered_strategies, get_strategy,
                          resolve_strategy, UnknownStrategyError)

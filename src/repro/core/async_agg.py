@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .registry import unknown_name_message
+
 PyTree = Any
 
 
@@ -87,9 +89,8 @@ def get_staleness(name: str) -> Callable[[np.ndarray, float], np.ndarray]:
     try:
         return _STALENESS[name]
     except KeyError:
-        raise UnknownStalenessError(
-            f"unknown staleness rule {name!r}; registered: "
-            f"{', '.join(registered_staleness())}") from None
+        raise UnknownStalenessError(unknown_name_message(
+            "staleness rule", name, _STALENESS)) from None
 
 
 @register_staleness
@@ -179,6 +180,9 @@ class BufferedUpdate:
     pdelta: PyTree           # packed (L, ...) slot deltas / dense scalars
     rows: PyTree             # (L,) slot -> macro-row indices
     valid: PyTree            # (L,) slot masks / scalar participation
+    # per-unit squared gradient norms of this update's local training
+    # (scored selection, DESIGN.md §11); None when scoring is off
+    unit_sqnorm: Optional[np.ndarray] = None
 
 
 def _stack_entries(entries: Sequence[BufferedUpdate]):
@@ -231,7 +235,8 @@ class BufferedAggregator:
         self.entries = []
         s = np.asarray([version - e.version for e in entries], np.float64)
         w = np.asarray([e.weight for e in entries], np.float32)
-        eff = staleness_weights(w, s, self.staleness, self.alpha)
+        factor = get_staleness(self.staleness)(s, self.alpha)
+        eff = (w * factor).astype(np.float32)
         pdeltas, rows, valid, sel = _stack_entries(entries)
         clients = np.asarray([e.client for e in entries], np.int32)
         new_params = self._flush(global_params, pdeltas, rows, valid, sel,
@@ -240,9 +245,13 @@ class BufferedAggregator:
             "entry_sel": np.asarray(sel),
             "entry_clients": clients,
             "staleness": s,
+            "staleness_factor": factor,
             "effective_weights": eff,
             "losses": np.asarray([e.loss for e in entries], np.float32),
         }
+        if all(e.unit_sqnorm is not None for e in entries):
+            stats["entry_sqnorm"] = np.stack(
+                [np.asarray(e.unit_sqnorm, np.float32) for e in entries])
         return new_params, stats
 
 
@@ -256,21 +265,26 @@ def build_cohort_step(loss_fn: Callable, assign, fl,
 
     Returns ``(select_fn, cohort_fn, n_slots)``:
 
-    * ``select_fn(key) -> sel (C, U)`` — the version's per-client
-      trained-unit selection (one key per version off the server
-      stream; strategies fold per-client keys internally);
+    * ``select_fn(key[, sel_state]) -> sel (C, U)`` — the version's
+      per-client trained-unit selection (one key per version off the
+      server stream; strategies fold per-client keys internally).  For
+      stateful (scored) strategies the engine threads the server's live
+      :class:`SelectionState` in as the second argument;
     * ``cohort_fn(global_params, sel, client_batches) -> (pdeltas,
-      rows, valid, losses)`` — the sync packed round step's selection +
+      rows, valid, metrics)`` — the sync packed round step's selection +
       vmapped packed local training, **without** the aggregation stage
-      (that happens at flush time, from the buffer).
+      (that happens at flush time, from the buffer).  ``metrics``
+      carries per-client ``loss_mean`` and, for stateful strategies,
+      the ``unit_sqnorm`` gradient-norm telemetry (DESIGN.md §11) —
+      the same hook, and bitwise the same values, as the sync round.
 
     The vmapped trace is identical to ``_star_round_step``'s packed
     branch, so a row here is bitwise the row the synchronous round
     would have computed.
     """
     from .client import local_update_packed
-    from .masking import slot_plan
-    from .topology import _selection_setup
+    from .masking import packed_norm_hook, slot_plan
+    from .topology import _live_ctx, _selection_setup
     strat, ctx = _selection_setup(assign, fl, strategy, scores)
     if strat.dense:
         raise ValueError(
@@ -278,9 +292,10 @@ def build_cohort_step(loss_fn: Callable, assign, fl,
             "dense 'full' strategy has nothing to pack — use a partial "
             "strategy (train_fraction < 1)")
     n_slots = fl.resolve_n_slots(ctx.n_units)
+    scoring = strat.stateful
 
-    def select(key):
-        sel = strat.select(key, ctx)
+    def select(key, sel_state=None):
+        sel = strat.select(key, _live_ctx(ctx, sel_state))
         if fl.always_train_head:
             sel = sel.at[:, -1].set(1.0)
         return sel
@@ -293,10 +308,15 @@ def build_cohort_step(loss_fn: Callable, assign, fl,
             return local_update_packed(
                 loss_fn, global_params, assign, rows_c, valid_c, batches,
                 lr=fl.lr, optimizer=fl.optimizer, prox_mu=fl.prox_mu,
-                loss_kwargs=loss_kwargs)
+                loss_kwargs=loss_kwargs,
+                norm_hook=packed_norm_hook(assign, rows_c)
+                if scoring else None)
 
         pdeltas, metrics = jax.vmap(one_client)(rows, valid, client_batches)
-        return pdeltas, rows, valid, metrics["loss_mean"]
+        out = {"loss_mean": metrics["loss_mean"]}
+        if scoring:
+            out["unit_sqnorm"] = metrics["unit_sqnorm"]
+        return pdeltas, rows, valid, out
 
     return jax.jit(select), jax.jit(cohort), n_slots
 
@@ -367,8 +387,12 @@ class AsyncRoundEngine:
     # -- dispatch ---------------------------------------------------------
 
     def _begin_version(self):
-        self._sel = np.asarray(self.select_fn(self.server.next_key()),
-                               np.float32)
+        key = self.server.next_key()
+        st = self.server.sel_state
+        # scored strategies select against the live state — stale
+        # in-flight work keeps the selection its dispatch version saw
+        sel = self.select_fn(key) if st is None else self.select_fn(key, st)
+        self._sel = np.asarray(sel, np.float32)
 
     def _dispatch(self, clients: Sequence[int], weights: np.ndarray,
                   batch_fn: Callable[[int], Any]):
@@ -381,8 +405,10 @@ class AsyncRoundEngine:
         the trace identical to the synchronous round's.
         """
         batches = _mixed_window_batches(batch_fn, list(self.seq))
-        pdeltas, rows, valid, losses = self.cohort_fn(
+        pdeltas, rows, valid, mets = self.cohort_fn(
             self.server.global_params(), jnp.asarray(self._sel), batches)
+        losses = mets["loss_mean"]
+        sqnorm = mets.get("unit_sqnorm")
         take = lambda tree, c: jax.tree_util.tree_map(
             lambda x: np.asarray(x[c]), tree)
         for c in clients:
@@ -394,7 +420,9 @@ class AsyncRoundEngine:
                 weight=float(weights[c]), loss=float(losses[c]),
                 sel_row=self._sel[c].copy(),
                 pdelta=take(pdeltas, c), rows=take(rows, c),
-                valid=take(valid, c))
+                valid=take(valid, c),
+                unit_sqnorm=np.asarray(sqnorm[c], np.float32)
+                if sqnorm is not None else None)
             heapq.heappush(self.pending, (t_done, c, seq))
             self.inflight[(c, seq)] = upd
             self.seq[c] += 1
@@ -430,6 +458,10 @@ class AsyncRoundEngine:
                                               self.version)
         server.params = new_params    # star topologies: state == params
         self.version += 1
+        # stale telemetry decays with the SAME staleness factor the
+        # aggregation applied to its delta; the state must advance
+        # before the next version's selection is drawn
+        server.update_sel_state(self._flush_telemetry(r, stats))
         self._begin_version()
         if trigger is not None:
             self._dispatch([trigger], w_np, batch_fn)
@@ -459,6 +491,29 @@ class AsyncRoundEngine:
         rec.seconds = time.perf_counter() - t0
         server.history.append(rec)
         return rec
+
+    def _flush_telemetry(self, flush_idx: int, stats: Dict[str, Any]):
+        """One flush's staleness-weighted NormTelemetry, or None.
+
+        Each buffered entry's per-unit squared norms and unit counts
+        are weighted by its staleness factor (dropped entries — data
+        weight 0 — excluded); the unweighted counts ride along so
+        ``ScoredStrategy.update_state`` can scale its EMA step by the
+        weighted/raw ratio — a stale update moves the score EMA by the
+        same factor the aggregation applied to its delta.
+        """
+        if self.server.sel_state is None or "entry_sqnorm" not in stats \
+                or flush_idx % self.fl.score_every != 0:
+            return None
+        from .strategies import NormTelemetry
+        active = (stats["effective_weights"] > 0)
+        f = np.where(active, stats["staleness_factor"],
+                     0.0).astype(np.float32)
+        raw = active.astype(np.float32)
+        return NormTelemetry(
+            unit_sqnorm=(stats["entry_sqnorm"] * f[:, None]).sum(0),
+            unit_count=(stats["entry_sel"] * f[:, None]).sum(0),
+            unit_raw_count=(stats["entry_sel"] * raw[:, None]).sum(0))
 
     def run(self, flushes: int, batch_fn: Callable[[int], Any],
             weights=None, log_every: int = 0):
@@ -516,11 +571,14 @@ class AsyncRoundEngine:
 
     # -- checkpoint state (ckpt/store.py) ---------------------------------
 
-    def _entry_template(self):
+    def _entry_template(self, scored: bool):
         tpl = slot_template(self.assign, self.server.global_params(),
                             self.n_slots)
         tpl["sel_row"] = jax.ShapeDtypeStruct((self.assign.n_units,),
                                               jnp.float32)
+        if scored:
+            tpl["unit_sqnorm"] = jax.ShapeDtypeStruct(
+                (self.assign.n_units,), jnp.float32)
         return tpl
 
     @staticmethod
@@ -531,8 +589,11 @@ class AsyncRoundEngine:
 
     @staticmethod
     def _update_arrays(u: BufferedUpdate) -> Dict[str, Any]:
-        return {"pdelta": u.pdelta, "rows": u.rows, "valid": u.valid,
-                "sel_row": u.sel_row}
+        out = {"pdelta": u.pdelta, "rows": u.rows, "valid": u.valid,
+               "sel_row": u.sel_row}
+        if u.unit_sqnorm is not None:
+            out["unit_sqnorm"] = u.unit_sqnorm
+        return out
 
     def checkpoint_state(self) -> Tuple[Dict[str, Any], PyTree]:
         """(json metadata, array pytree) capturing buffer contents,
@@ -542,6 +603,7 @@ class AsyncRoundEngine:
             "version": int(self.version),
             "clock": float(self.clock),
             "seq": [int(x) for x in self.seq],
+            "scored": self.server.sel_state is not None,
             "buffer": [self._update_meta(u) for u in self.buffer.entries],
             "inflight": [self._update_meta(u) for u in inflight],
             "flush_clients": [np.asarray(c).tolist()
@@ -555,7 +617,7 @@ class AsyncRoundEngine:
         return meta, arrays
 
     def arrays_template(self, meta: Dict[str, Any]) -> PyTree:
-        tpl = self._entry_template()
+        tpl = self._entry_template(bool(meta.get("scored")))
         return {
             "sel": jax.ShapeDtypeStruct(
                 (self.fl.n_clients, self.assign.n_units), jnp.float32),
@@ -574,7 +636,9 @@ class AsyncRoundEngine:
                     sel_row=np.asarray(a["sel_row"], np.float32),
                     pdelta=jax.tree_util.tree_map(np.asarray, a["pdelta"]),
                     rows=jax.tree_util.tree_map(np.asarray, a["rows"]),
-                    valid=jax.tree_util.tree_map(np.asarray, a["valid"])))
+                    valid=jax.tree_util.tree_map(np.asarray, a["valid"]),
+                    unit_sqnorm=np.asarray(a["unit_sqnorm"], np.float32)
+                    if "unit_sqnorm" in a else None))
             return out
 
         if len(meta["buffer"]) >= self.buffer.buffer_size:

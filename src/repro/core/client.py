@@ -10,6 +10,13 @@ FedProx (Sahu et al. 2018) is available through ``prox_mu > 0`` — the
 proximal term pulls only the round's *trained* (unmasked) layers toward
 the global model: the freeze mask is applied inside the prox sum, so
 frozen layers contribute neither loss nor gradient.
+
+``norm_hook`` (DESIGN.md §11) accumulates per-unit squared gradient
+norms across the local steps — the scored selection engine's live
+telemetry.  The hook reads the gradients the step has already
+materialized (no extra HBM round-trips, one extra (U,) carry slot);
+with ``norm_hook=None`` (scoring off) the scan carries and traces are
+byte-for-byte what they were before the hook existed.
 """
 from __future__ import annotations
 
@@ -20,7 +27,7 @@ import jax.numpy as jnp
 
 from ..common import pytree as pt
 from ..optim.masked import adam_init, adam_step, sgd_init, sgd_step
-from .masking import apply_mask, slot_gather, slot_merge
+from .masking import NormHook, apply_mask, slot_gather, slot_merge
 
 PyTree = Any
 
@@ -28,12 +35,15 @@ PyTree = Any
 def local_update(loss_fn: Callable, global_params: PyTree, mask: PyTree,
                  batches: PyTree, *, lr: float = 1e-2,
                  optimizer: str = "adam", prox_mu: float = 0.0,
-                 loss_kwargs: Optional[Dict] = None
+                 loss_kwargs: Optional[Dict] = None,
+                 norm_hook: Optional[NormHook] = None
                  ) -> Tuple[PyTree, Dict[str, jnp.ndarray]]:
     """One client's round.  ``batches`` leaves have leading (steps,) dim.
 
     Returns (delta, metrics) where delta = trained - global (exact zeros
-    on frozen units).
+    on frozen units).  With ``norm_hook``, metrics additionally carries
+    ``unit_sqnorm`` — (U,) per-unit squared gradient norms summed over
+    the local steps (frozen units: exact zeros).
     """
     loss_kwargs = loss_kwargs or {}
     opt_init, opt_step = ((adam_init, adam_step) if optimizer == "adam"
@@ -53,25 +63,38 @@ def local_update(loss_fn: Callable, global_params: PyTree, mask: PyTree,
         return loss, metrics
 
     def step(carry, batch):
-        params, opt_state = carry
+        if norm_hook is None:
+            params, opt_state = carry
+        else:
+            params, opt_state, nacc = carry
         (loss, metrics), grads = jax.value_and_grad(
             total_loss, has_aux=True)(params, batch)
         grads = apply_mask(mask, grads)
+        if norm_hook is not None:
+            nacc = nacc + norm_hook.fn(grads)
         params, opt_state = opt_step(grads, opt_state, params, lr=lr,
                                      mask=mask)
-        return (params, opt_state), loss
+        carry = (params, opt_state) if norm_hook is None \
+            else (params, opt_state, nacc)
+        return carry, loss
 
-    (params, _), losses = jax.lax.scan(
-        step, (global_params, opt_init(global_params)), batches)
-    delta = pt.tree_sub(params, global_params)
-    return delta, {"loss_mean": losses.mean(), "loss_last": losses[-1]}
+    init = (global_params, opt_init(global_params))
+    if norm_hook is not None:
+        init = init + (jnp.zeros((norm_hook.n_units,), jnp.float32),)
+    carry, losses = jax.lax.scan(step, init, batches)
+    delta = pt.tree_sub(carry[0], global_params)
+    metrics = {"loss_mean": losses.mean(), "loss_last": losses[-1]}
+    if norm_hook is not None:
+        metrics["unit_sqnorm"] = carry[2]
+    return delta, metrics
 
 
 def local_update_packed(loss_fn: Callable, global_params: PyTree,
                         assign, rows: PyTree, valid: PyTree,
                         batches: PyTree, *, lr: float = 1e-2,
                         optimizer: str = "adam", prox_mu: float = 0.0,
-                        loss_kwargs: Optional[Dict] = None
+                        loss_kwargs: Optional[Dict] = None,
+                        norm_hook: Optional[NormHook] = None
                         ) -> Tuple[PyTree, Dict[str, jnp.ndarray]]:
     """Packed variant of :func:`local_update` (DESIGN.md §7).
 
@@ -109,15 +132,29 @@ def local_update_packed(loss_fn: Callable, global_params: PyTree,
         return loss, metrics
 
     def step(carry, batch):
-        packed, opt_state = carry
+        if norm_hook is None:
+            packed, opt_state = carry
+        else:
+            packed, opt_state, nacc = carry
         (loss, metrics), grads = jax.value_and_grad(
             total_loss, has_aux=True)(packed, batch)
         grads = apply_mask(valid, grads)
+        if norm_hook is not None:
+            # norms reduce from the packed grads the step already
+            # materialized — the telemetry never touches frozen rows
+            nacc = nacc + norm_hook.fn(grads)
         packed, opt_state = opt_step(grads, opt_state, packed, lr=lr,
                                      mask=valid)
-        return (packed, opt_state), loss
+        carry = (packed, opt_state) if norm_hook is None \
+            else (packed, opt_state, nacc)
+        return carry, loss
 
-    (packed, _), losses = jax.lax.scan(
-        step, (packed0, opt_init(packed0)), batches)
-    delta = pt.tree_sub(packed, packed0)
-    return delta, {"loss_mean": losses.mean(), "loss_last": losses[-1]}
+    init = (packed0, opt_init(packed0))
+    if norm_hook is not None:
+        init = init + (jnp.zeros((norm_hook.n_units,), jnp.float32),)
+    carry, losses = jax.lax.scan(step, init, batches)
+    delta = pt.tree_sub(carry[0], packed0)
+    metrics = {"loss_mean": losses.mean(), "loss_last": losses[-1]}
+    if norm_hook is not None:
+        metrics["unit_sqnorm"] = carry[2]
+    return delta, metrics

@@ -88,6 +88,31 @@ class FLConfig:
     # "pareto[:alpha]" (heavy-tailed straggler regime); draws are pure
     # functions of (seed, client, dispatch), so runs replay bit-exactly
     client_delay_dist: str = "none"
+    # scored selection (DESIGN.md §11): EMA decay for the per-unit
+    # gradient-norm scores a stateful strategy (score_weighted, ...)
+    # maintains — s' = score_ema * s + (1 - score_ema) * observed_norm
+    score_ema: float = 0.9
+    # state-update cadence: fold telemetry into the selection state
+    # every this many rounds/flushes (1 = every round; the round
+    # counter advances regardless)
+    score_every: int = 1
+
+    def __post_init__(self):
+        # validate the knobs whose misuse only surfaces rounds later
+        # (a train_fraction of 25 instead of 0.25 "works" until the
+        # resolved n_train overruns the unit count) at build time
+        if self.train_fraction is not None \
+                and not 0.0 < self.train_fraction <= 1.0:
+            raise ValueError(
+                f"train_fraction must be in (0, 1] (the paper's 25%/50%/"
+                f"75% settings are 0.25/0.5/0.75), got {self.train_fraction}")
+        if not 0.0 <= self.score_ema < 1.0:
+            raise ValueError(
+                f"score_ema must be in [0, 1) (EMA decay; 0 = no "
+                f"smoothing), got {self.score_ema}")
+        if self.score_every < 1:
+            raise ValueError(
+                f"score_every must be >= 1, got {self.score_every}")
 
     def resolve_fused_agg(self) -> bool:
         """Whether the round step should aggregate through the fused

@@ -1,9 +1,11 @@
 """Layer-selection helpers (paper Alg. 2 line 3) — thin wrappers.
 
 The actual strategies live in ``core/strategies.py`` as registered
-plugins (``uniform``, ``fixed_last``, ``weighted``, ``full``,
-``synchronized``); this module keeps the original functional API for
-call sites and notebooks that think in terms of one selection draw.
+plugins (``uniform``, ``fixed_last``, ``weighted`` (deprecated),
+``full``, ``synchronized``, plus the scored family ``score_weighted`` /
+``depth_dropout`` / ``successive`` — DESIGN.md §11); this module keeps
+the original functional API for call sites and notebooks that think in
+terms of one selection draw.
 
 Every function returns a 0/1 selection over freeze units, traced-
 friendly so the whole federated round compiles as one ``jit``.

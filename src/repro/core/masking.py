@@ -182,6 +182,79 @@ def slot_merge(assign: UnitAssignment, base, packed, rows):
         assign.leaf_units, base, packed, rows, is_leaf=_is_leafunit)
 
 
+# ---------------------------------------------------------------------------
+# gradient-norm telemetry (DESIGN.md §11 — scored selection)
+#
+# The scored selection engine needs per-unit gradient norms out of the
+# round step at (near-)zero cost: norms are reduced from gradients that
+# local training has already materialized, accumulated into one tiny
+# (U,) vector per client, and ride the metrics alongside the existing
+# collective.  Both paths accumulate leaves in tree order and reduce
+# each macro row independently, so the packed path's telemetry equals
+# the dense path's BITWISE (regression-tested) — pad slots and frozen
+# rows contribute exact zeros either way.
+
+
+class NormHook(NamedTuple):
+    """Per-step gradient-norm accumulator for the local-update scan:
+    ``fn(grads) -> (n_units,)`` per-unit squared-norm contributions."""
+    n_units: int
+    fn: Any
+
+
+def unit_sqnorm(assign: UnitAssignment, grads) -> jnp.ndarray:
+    """(U,) float32 — per-unit squared norms of a (masked) dense
+    gradient tree.  Frozen units' gradients are exact zeros after
+    masking, so their bins stay exactly 0.0."""
+    acc = jnp.zeros((assign.n_units,), jnp.float32)
+    for lu, g in zip(
+            jax.tree_util.tree_leaves(assign.leaf_units, is_leaf=_is_leafunit),
+            jax.tree_util.tree_leaves(grads)):
+        gf = g.astype(jnp.float32)
+        if lu.kind == "scalar":
+            acc = acc.at[lu.base].add(jnp.sum(jnp.square(gf)))
+        else:
+            nm = g.shape[0]
+            rows_sq = jnp.sum(jnp.square(gf).reshape((nm, -1)), axis=1)
+            idx = lu.base + lu.stride * jnp.arange(nm)
+            acc = acc.at[idx].add(rows_sq)
+    return acc
+
+
+def unit_sqnorm_packed(assign: UnitAssignment, grads, rows) -> jnp.ndarray:
+    """Packed-path twin of :func:`unit_sqnorm`: per-unit squared norms
+    from the already-materialized ``(L, ...)`` packed slot gradients.
+    Each slot reduces independently and scatters to its macro row's
+    unit (``rows`` from ``slot_plan``; pad slots carry masked-zero
+    gradients, so their unselected units receive exact zeros — the same
+    value the dense path's masked rows contribute), keeping packed ==
+    dense telemetry bitwise."""
+    acc = jnp.zeros((assign.n_units,), jnp.float32)
+    for lu, g, r in zip(
+            jax.tree_util.tree_leaves(assign.leaf_units, is_leaf=_is_leafunit),
+            jax.tree_util.tree_leaves(grads),
+            jax.tree_util.tree_leaves(rows)):
+        gf = g.astype(jnp.float32)
+        if lu.kind == "scalar":
+            acc = acc.at[lu.base].add(jnp.sum(jnp.square(gf)))
+        else:
+            n_slots = g.shape[0]
+            rows_sq = jnp.sum(jnp.square(gf).reshape((n_slots, -1)), axis=1)
+            acc = acc.at[lu.base + lu.stride * r].add(rows_sq)
+    return acc
+
+
+def dense_norm_hook(assign: UnitAssignment) -> NormHook:
+    return NormHook(assign.n_units, lambda g: unit_sqnorm(assign, g))
+
+
+def packed_norm_hook(assign: UnitAssignment, rows) -> NormHook:
+    """``rows`` is one client's slot plan (built inside the per-client
+    closure, so the hook is vmap-friendly)."""
+    return NormHook(assign.n_units,
+                    lambda g: unit_sqnorm_packed(assign, g, rows))
+
+
 def unit_param_counts(assign: UnitAssignment, params) -> np.ndarray:
     """(U,) int64 — parameters per freeze unit (comm accounting)."""
     counts = np.zeros(assign.n_units, np.int64)

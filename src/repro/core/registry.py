@@ -1,0 +1,21 @@
+"""Shared plumbing for the three plugin registries.
+
+``core/strategies.py`` (selection), ``core/topology.py`` (federation
+topology) and ``core/async_agg.py`` (staleness reweighting) each keep a
+name -> plugin dict with the same lookup contract: an unknown name must
+fail with an error that *lists the registered names*, so a typo'd CLI
+flag or config string is a one-glance fix instead of a bare KeyError.
+This module holds the one message formatter all three share — the
+uniform wording is load-bearing: tests and users match on it.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+
+def unknown_name_message(kind: str, name: str,
+                         registered: Iterable[str]) -> str:
+    """The uniform unknown-plugin error message: ``unknown <kind>
+    '<name>'; registered: a, b, c``."""
+    return (f"unknown {kind} {name!r}; registered: "
+            f"{', '.join(sorted(registered))}")

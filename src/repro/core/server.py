@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,8 @@ import numpy as np
 from . import comm
 from .federation import FLConfig
 from .masking import UnitAssignment
+from .strategies import (NormTelemetry, SelectionContext, SelectionStrategy,
+                         resolve_strategy)
 from .topology import Topology, resolve_topology
 
 
@@ -206,7 +208,8 @@ class Server:
                  fl: FLConfig, params, *, eval_fn: Optional[Callable] = None,
                  seed: int = 0, dropout_rate: float = 0.0,
                  hooks: Sequence[ServerHook] = (),
-                 topology: Optional[Topology] = None):
+                 topology: Optional[Topology] = None,
+                 strategy: Union[str, SelectionStrategy, None] = None):
         self.round_step = jax.jit(round_step)
         self.assign = assign
         self.fl = fl
@@ -215,6 +218,26 @@ class Server:
         self.params = self.topology.init_state(params, fl)
         self.eval_fn = eval_fn
         self.key = jax.random.PRNGKey(seed)
+        # the scored-selection engine (DESIGN.md §11): the server owns
+        # the strategy's SelectionState pytree and threads it through
+        # the compiled round step; stateless strategies keep sel_state
+        # None and the round step is called exactly as before.  The
+        # strategy instance is read off the round step itself when the
+        # builder attached it (the instance actually baked into the
+        # trace — an explicit strategy= override may differ from
+        # fl.strategy), falling back to resolving the config name.
+        baked = getattr(round_step, "selection_strategy", None)
+        if strategy is not None:
+            self.strategy = resolve_strategy(strategy, fl.synchronized)
+        elif baked is not None:
+            self.strategy = baked
+        else:
+            self.strategy = resolve_strategy(fl.strategy, fl.synchronized)
+        self.sel_ctx = SelectionContext(
+            n_clients=fl.n_clients, n_units=assign.n_units,
+            n_train=fl.resolve_n_train(assign.n_units),
+            score_ema=fl.score_ema)
+        self.sel_state = self.strategy.init_state(self.sel_ctx)
         self.hooks: List[ServerHook] = [CommAccounting()]
         if dropout_rate > 0.0:
             self.hooks.append(StragglerDropout(dropout_rate))
@@ -273,8 +296,13 @@ class Server:
                 np.zeros((c, self.assign.n_units), np.float32))
             metrics = None
         else:
-            self.params, metrics = self.round_step(
-                self.params, client_batches, weights, rk)
+            if self.sel_state is not None:
+                self.params, metrics = self.round_step(
+                    self.params, client_batches, weights, rk,
+                    self.sel_state)
+            else:
+                self.params, metrics = self.round_step(
+                    self.params, client_batches, weights, rk)
             self.sel_history.append(np.asarray(metrics["sel"]))
             ev = None
             if self.eval_fn is not None:
@@ -283,11 +311,41 @@ class Server:
                               time.perf_counter() - t0, 0.0, 0.0,
                               n_participants=n_part,
                               effective_weights=eff_w)
+        # fold the round's norm telemetry into the selection state
+        # BEFORE the end-of-round hooks run, so a Checkpointer hook
+        # saves the post-round state (bit-exact mid-fit resume)
+        self.update_sel_state(self._round_telemetry(r, metrics, eff_w))
         for hook in self.hooks:
             hook.on_round_end(self, rec, metrics)
         rec.seconds = time.perf_counter() - t0
         self.history.append(rec)
         return rec
+
+    def _round_telemetry(self, round_idx: int, metrics: Optional[Dict],
+                         eff_w: Sequence[float]):
+        """One sync round's NormTelemetry, or None (stateless strategy,
+        skipped round, or off-cadence under FLConfig.score_every).
+        Dropped clients (effective weight 0) shipped nothing and
+        contribute no telemetry, matching the aggregation."""
+        if self.sel_state is None or metrics is None \
+                or round_idx % self.fl.score_every != 0:
+            return None
+        active = (np.asarray(eff_w, np.float32) > 0).astype(np.float32)
+        sq = np.asarray(metrics["unit_sqnorm"], np.float32)
+        sel = np.asarray(metrics["sel"], np.float32)
+        counts = (sel * active[:, None]).sum(0)
+        # synchronous participants all carry weight 1, so the weighted
+        # and raw counts coincide (staleness confidence = 1)
+        return NormTelemetry(unit_sqnorm=(sq * active[:, None]).sum(0),
+                             unit_count=counts, unit_raw_count=counts)
+
+    def update_sel_state(self, telemetry) -> None:
+        """Advance the scored-selection state one round/flush (no-op for
+        stateless strategies).  The async engine calls this per flush
+        with staleness-weighted telemetry."""
+        if self.sel_state is not None:
+            self.sel_state = self.strategy.update_state(
+                self.sel_state, self.sel_ctx, telemetry)
 
     def attach_async_engine(self, engine) -> "Server":
         """Switch the server to buffered-async rounds: ``run`` drives

@@ -39,6 +39,14 @@ buffered packed updates per global step), ``staleness``/
 ``staleness_alpha`` pick the registered stale-delta reweighting rule,
 and ``client_delay_dist`` the simulated client-latency distribution
 (``"pareto[:a]"`` for the heavy-tailed straggler regime).
+
+Scored selection (DESIGN.md §11) needs no knob at all beyond the
+strategy name: a stateful strategy (``score_weighted`` /
+``depth_dropout`` / ``successive``) makes the ``Server`` own a
+``SelectionState`` pytree, turns on the gradient-norm telemetry inside
+the round step, and checkpoints carry the state (bit-exact mid-fit
+restore).  ``score_ema`` / ``score_every`` tune the EMA decay and the
+update cadence.
 """
 from __future__ import annotations
 
@@ -96,7 +104,7 @@ class Federation:
         self.server = Server(round_step, assign, fl, params,
                              eval_fn=eval_fn, seed=seed,
                              dropout_rate=dropout_rate, hooks=hooks,
-                             topology=self.topology)
+                             topology=self.topology, strategy=strategy)
         if fl.async_buffer:
             # semi-async buffered rounds (DESIGN.md §8): the engine owns
             # the simulated-delay scheduler, per-version selection keys

@@ -4,14 +4,24 @@ plugin point).
 A **strategy** decides, per round, which freeze units each client
 trains.  The paper's four variants (random subsets, fixed-last transfer
 learning, weighted selection, full-model baseline) are registered
-plugins here; adding a new one (depth dropout, successive layer
-training, ...) is a subclass + ``@register_strategy`` — no change to
-``federation.py`` or any launcher.
+plugins here; adding a new one is a subclass + ``@register_strategy`` —
+no change to ``federation.py`` or any launcher.
 
 Contract: ``select_row(key, ctx) -> (U,)`` 0/1 float32 over freeze
 units, traced-friendly (the whole federated round compiles as one
 ``jit``).  ``n_train`` is static, so masks have static sparsity and the
 comm accounting stays exact.
+
+**Stateful scored selection** (DESIGN.md §11): strategies that adapt to
+live training signal set ``stateful = True`` and implement
+``init_state`` / ``update_state`` over a :class:`SelectionState` pytree
+(per-unit gradient-norm EMA, per-unit train counts, round index).  The
+``Server`` owns the state, threads it into the compiled round step
+(where ``ctx.scores`` / ``ctx.state`` become the live values) and feeds
+``update_state`` the round's :class:`NormTelemetry` — per-unit squared
+gradient norms accumulated inside local training at zero cost when
+scoring is off.  Stateless strategies ignore all of it and compile the
+identical trace as before (bit-exact, regression-tested).
 
 ``Synchronized`` wraps any stochastic strategy so all clients of a
 round share one subset (seeded by the round key) — the beyond-paper
@@ -20,19 +30,80 @@ variant that lets the cross-client collective shrink (core/comm.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import ClassVar, Dict, Optional, Tuple, Type, Union
+import warnings
+from typing import (ClassVar, Dict, NamedTuple, Optional, Tuple, Type,
+                    Union)
 
 import jax
 import jax.numpy as jnp
 
+from .registry import unknown_name_message
+
+
+class SelectionState(NamedTuple):
+    """Per-run adaptive selection state (a pytree; checkpointed).
+
+    ``scores`` — (U,) float32 EMA of per-unit gradient norms (the live
+    signal the paper's future-work weighted selection calls for);
+    ``counts`` — (U,) float32 cumulative (staleness-weighted) count of
+    client updates that trained each unit;
+    ``round``  — () int32 rounds (sync) / flushes (async) completed.
+    """
+    scores: jnp.ndarray
+    counts: jnp.ndarray
+    round: jnp.ndarray
+
+
+class NormTelemetry(NamedTuple):
+    """One round's (or flush's) aggregated gradient-norm signal.
+
+    ``unit_sqnorm`` — (U,) weighted sum over contributing client
+    updates of their per-unit squared gradient norms (summed over local
+    steps); ``unit_count`` — (U,) the matching weighted count of
+    updates that trained each unit; ``unit_raw_count`` — (U,) the
+    UNWEIGHTED update count.  Sync rounds weight participants by 1
+    (dropped clients 0), so count == raw count; async flushes weight
+    each entry by its staleness factor, and the weighted/raw ratio is
+    what lets ``update_state`` decay stale evidence by exactly the
+    factor the aggregation applied to the stale delta.
+    """
+    unit_sqnorm: jnp.ndarray
+    unit_count: jnp.ndarray
+    unit_raw_count: jnp.ndarray
+
 
 @dataclasses.dataclass(frozen=True)
 class SelectionContext:
-    """Static per-run facts a strategy may consult."""
+    """Static per-run facts a strategy may consult.
+
+    Inside a scored round step, ``scores``/``state`` are swapped for
+    the live :class:`SelectionState` values (traced arrays); outside
+    one they keep their build-time values (``None`` by default).
+    """
     n_clients: int
     n_units: int
     n_train: int                       # N_l in the paper
-    scores: Optional[jnp.ndarray] = None   # (U,) per-unit scores (weighted)
+    scores: Optional[jnp.ndarray] = None   # (U,) per-unit scores
+    state: Optional[SelectionState] = None  # live state (scored rounds)
+    score_ema: float = 0.9             # EMA decay for update_state
+
+
+def _uniform_row(key, ctx: SelectionContext) -> jnp.ndarray:
+    """Exactly n_train units, uniformly at random — the shared draw of
+    ``uniform`` and every score strategy's no-signal degeneration (so
+    "no scores" is *bit-exact* with uniform, regression-tested)."""
+    perm = jax.random.permutation(key, ctx.n_units)
+    return (perm < ctx.n_train).astype(jnp.float32)
+
+
+def _topk_row(key, ranking_scores: jnp.ndarray,
+              ctx: SelectionContext) -> jnp.ndarray:
+    """Gumbel top-k: exactly n_train units, w/o replacement, biased by
+    ``ranking_scores`` — keeps the static sparsity the packed round
+    path (DESIGN.md §7) and comm accounting rely on."""
+    g = jax.random.gumbel(key, (ctx.n_units,))
+    ranked = jnp.argsort(-(ranking_scores + g))
+    return jnp.zeros(ctx.n_units).at[ranked[:ctx.n_train]].set(1.0)
 
 
 class SelectionStrategy:
@@ -47,11 +118,19 @@ class SelectionStrategy:
       (the ``full`` baseline).  The round builder uses this to fall back
       to plain FedAvg + unmasked local training, which is bit-exact
       with the conventional FedAvg baseline.
+    * ``stateful`` — the strategy consumes per-round state: the server
+      threads a :class:`SelectionState` through the compiled round step
+      (live ``ctx.scores``/``ctx.state``) and calls ``update_state``
+      once per round/flush with that round's :class:`NormTelemetry`
+      (``None`` on skipped or off-cadence rounds — the round counter
+      still advances).
     """
 
     name: ClassVar[str] = ""
     stochastic: ClassVar[bool] = True
     dense: ClassVar[bool] = False
+    stateful: ClassVar[bool] = False
+    deprecated: ClassVar[Optional[str]] = None
 
     def select_row(self, key, ctx: SelectionContext) -> jnp.ndarray:
         raise NotImplementedError
@@ -69,8 +148,70 @@ class SelectionStrategy:
         keys = jax.random.split(key, ctx.n_clients)
         return jax.vmap(lambda k: self.select_row(k, ctx))(keys)
 
+    # -- stateful contract (no-ops for stateless strategies) --------------
+
+    def init_state(self, ctx: SelectionContext) -> Optional[SelectionState]:
+        """Fresh state for a run, or None for stateless strategies."""
+        return None
+
+    def update_state(self, state: SelectionState, ctx: SelectionContext,
+                     telemetry: Optional[NormTelemetry]) -> SelectionState:
+        """Fold one round's telemetry into the state (see ScoredStrategy)."""
+        return state
+
     def __repr__(self):
         return f"{type(self).__name__}(name={self.name!r})"
+
+
+class ScoredStrategy(SelectionStrategy):
+    """Shared state engine of the score-driven strategies.
+
+    ``scores`` is an EMA of observed per-unit gradient norms: a unit
+    trained this round moves toward ``sqrt(sqnorm / count)`` (its mean
+    accumulated squared norm per contributing update; within a flush,
+    fresher entries dominate the mean through their larger staleness
+    weight) with step ``(1 - ctx.score_ema) * confidence``, where
+    ``confidence = count / raw_count`` is the mean staleness factor of
+    the round's observations — 1 for a synchronous round, so stale
+    evidence moves the EMA by exactly the factor the aggregation
+    applied to the stale delta (a fully-decayed update moves it not at
+    all).  A never-before-seen unit adopts its first observation
+    outright (no zero-bias warmup); untrained units keep their score.
+    ``counts`` accumulates the (staleness-weighted) per-unit update
+    counts, ``round`` the rounds/flushes completed.
+    """
+
+    stateful = True
+
+    def init_state(self, ctx):
+        u = ctx.n_units
+        return SelectionState(scores=jnp.zeros((u,), jnp.float32),
+                              counts=jnp.zeros((u,), jnp.float32),
+                              round=jnp.zeros((), jnp.int32))
+
+    def update_state(self, state, ctx, telemetry):
+        new_round = state.round + 1
+        if telemetry is None:
+            return state._replace(round=new_round)
+        sqn = jnp.asarray(telemetry.unit_sqnorm, jnp.float32)
+        cnt = jnp.asarray(telemetry.unit_count, jnp.float32)
+        raw = jnp.asarray(telemetry.unit_raw_count, jnp.float32)
+        observed = cnt > 0
+        norm = jnp.sqrt(sqn / jnp.maximum(cnt, 1e-9))
+        conf = cnt / jnp.maximum(raw, 1e-9)      # mean staleness factor
+        step = (1 - ctx.score_ema) * conf
+        seen_before = state.counts > 0
+        ema = jnp.where(seen_before,
+                        (1 - step) * state.scores + step * norm, norm)
+        return SelectionState(
+            scores=jnp.where(observed, ema, state.scores),
+            counts=state.counts + cnt,
+            round=new_round)
+
+    @staticmethod
+    def _round_index(ctx: SelectionContext) -> jnp.ndarray:
+        return (ctx.state.round if ctx.state is not None
+                else jnp.zeros((), jnp.int32))
 
 
 class Synchronized(SelectionStrategy):
@@ -84,12 +225,22 @@ class Synchronized(SelectionStrategy):
     def dense(self):                       # type: ignore[override]
         return self.inner.dense
 
+    @property
+    def stateful(self):                    # type: ignore[override]
+        return self.inner.stateful
+
     def select_row(self, key, ctx):
         return self.inner.select_row(key, ctx)
 
     def select(self, key, ctx):
         row = self.inner.select_row(key, ctx)
         return jnp.broadcast_to(row, (ctx.n_clients, ctx.n_units))
+
+    def init_state(self, ctx):
+        return self.inner.init_state(ctx)
+
+    def update_state(self, state, ctx, telemetry):
+        return self.inner.update_state(state, ctx, telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -131,11 +282,15 @@ def registered_strategies() -> Tuple[str, ...]:
 
 def get_strategy(name: str) -> SelectionStrategy:
     try:
-        return _REGISTRY[name]
+        strat = _REGISTRY[name]
     except KeyError:
-        raise UnknownStrategyError(
-            f"unknown selection strategy {name!r}; registered: "
-            f"{', '.join(registered_strategies())}") from None
+        raise UnknownStrategyError(unknown_name_message(
+            "selection strategy", name, _REGISTRY)) from None
+    if strat.deprecated:
+        warnings.warn(f"selection strategy {name!r} is deprecated: "
+                      f"{strat.deprecated}", DeprecationWarning,
+                      stacklevel=2)
+    return strat
 
 
 def resolve_strategy(spec: Union[str, SelectionStrategy],
@@ -157,8 +312,7 @@ class Uniform(SelectionStrategy):
     name = "uniform"
 
     def select_row(self, key, ctx):
-        perm = jax.random.permutation(key, ctx.n_units)
-        return (perm < ctx.n_train).astype(jnp.float32)
+        return _uniform_row(key, ctx)
 
 
 @register_strategy
@@ -174,20 +328,24 @@ class FixedLast(SelectionStrategy):
 
 @register_strategy
 class Weighted(SelectionStrategy):
-    """Top-n_train by perturbed score (Gumbel top-k ∝ softmax(scores)).
+    """Deprecated static-score selection (use ``score_weighted``).
 
-    ``ctx.scores`` defaults to all-zeros, which degenerates to uniform
-    sampling — so the strategy is usable before any score signal (e.g.
-    gradient norms) is wired in.
+    With explicit ``ctx.scores``: top-n_train by perturbed score
+    (Gumbel top-k ∝ softmax(scores)) — unchanged, bit-exact with the
+    historical behaviour.  With no scores it used to *silently*
+    degenerate to uniform sampling; that degeneration is now explicit
+    and bit-exact with the ``uniform`` strategy (shared draw,
+    regression-tested).  ``score_weighted`` is the live-signal
+    replacement the paper's future work calls for.
     """
     name = "weighted"
+    deprecated = ("static scores degenerate to uniform without a signal; "
+                  "use 'score_weighted' (live gradient-norm EMAs)")
 
     def select_row(self, key, ctx):
-        scores = ctx.scores if ctx.scores is not None \
-            else jnp.zeros((ctx.n_units,))
-        g = jax.random.gumbel(key, (ctx.n_units,))
-        ranked = jnp.argsort(-(scores + g))
-        return jnp.zeros(ctx.n_units).at[ranked[:ctx.n_train]].set(1.0)
+        if ctx.scores is None:
+            return _uniform_row(key, ctx)
+        return _topk_row(key, ctx.scores, ctx)
 
 
 @register_strategy
@@ -199,6 +357,78 @@ class Full(SelectionStrategy):
 
     def select_row(self, key, ctx):
         return jnp.ones((ctx.n_units,), jnp.float32)
+
+
+@register_strategy
+class ScoreWeighted(ScoredStrategy):
+    """The paper's future-work variant: Gumbel top-k over live
+    gradient-norm EMAs.
+
+    Scores are standardized before ranking (selection pressure is
+    scale-free: a model whose norms are uniformly 10x larger samples
+    identically), then perturbed with Gumbel noise — exactly n_train
+    units, without replacement, units with larger recent gradient norms
+    exponentially more likely.  With no live state attached (bare
+    ``build_round_step`` with no server) it degenerates, bit-exactly,
+    to ``uniform``.
+    """
+    name = "score_weighted"
+
+    def select_row(self, key, ctx):
+        if ctx.scores is None:
+            return _uniform_row(key, ctx)
+        s = jnp.asarray(ctx.scores, jnp.float32)
+        z = (s - s.mean()) / (s.std() + 1e-6)
+        return _topk_row(key, z, ctx)
+
+
+@register_strategy
+class DepthDropout(ScoredStrategy):
+    """Depth-biased keep probabilities à la Guo et al. 2023.
+
+    Layer-wise-growth schedule: early rounds concentrate training on
+    shallow units (large negative bias on depth), and the bias anneals
+    linearly to uniform over ``horizon`` rounds — by then every depth
+    competes equally.  Realized as Gumbel top-k (weighted sampling
+    *without* replacement) rather than independent Bernoulli keeps, so
+    every round trains exactly n_train units and the packed round path
+    keeps its static slot budget.
+    """
+    name = "depth_dropout"
+    horizon: ClassVar[int] = 64        # rounds to anneal to uniform
+    strength: ClassVar[float] = 4.0    # initial shallow-vs-deep log-odds
+
+    def select_row(self, key, ctx):
+        r = self._round_index(ctx).astype(jnp.float32)
+        progress = jnp.clip(r / float(self.horizon), 0.0, 1.0)
+        depth = jnp.arange(ctx.n_units, dtype=jnp.float32) \
+            / float(max(ctx.n_units - 1, 1))
+        bias = -(1.0 - progress) * self.strength * depth
+        return _topk_row(key, bias, ctx)
+
+
+@register_strategy
+class Successive(ScoredStrategy):
+    """Deterministic layer-wise growth à la Pfeiffer et al. 2023.
+
+    Training advances through the depth in phases: phase p trains the
+    contiguous window of n_train units starting at ``p * n_train``
+    (clipped to the deep end, where it stays), advancing one phase
+    every ``phase_rounds`` rounds.  Deterministic — every client of a
+    round trains the same window — so the cross-client collective
+    shrinks exactly as under synchronized selection.
+    """
+    name = "successive"
+    stochastic = False
+    phase_rounds: ClassVar[int] = 4    # rounds per growth phase
+
+    def select_row(self, key, ctx):
+        phase = self._round_index(ctx) // self.phase_rounds
+        start = jnp.minimum(phase * ctx.n_train,
+                            max(ctx.n_units - ctx.n_train, 0))
+        idx = jnp.arange(ctx.n_units)
+        return ((idx >= start) &
+                (idx < start + ctx.n_train)).astype(jnp.float32)
 
 
 # the beyond-paper synchronized variant as a named plugin of its own

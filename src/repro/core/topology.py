@@ -54,13 +54,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
 from . import comm
 from .aggregation import (fedavg, hierarchical_edge_partials,
                           hierarchical_masked_fedavg,
                           hierarchical_masked_fedavg_packed, masked_fedavg,
                           masked_fedavg_packed)
 from .client import local_update, local_update_packed
-from .masking import UnitAssignment, mask_tree, slot_plan
+from .masking import (UnitAssignment, dense_norm_hook, mask_tree,
+                      packed_norm_hook, slot_plan)
+from .registry import unknown_name_message
 from .strategies import SelectionContext, resolve_strategy
 
 PyTree = Any
@@ -96,8 +100,18 @@ def _selection_setup(assign: UnitAssignment, fl, strategy, scores):
             f"n_train={n_train} out of range for {assign.n_units} units; "
             "set FLConfig.n_train_units or train_fraction")
     ctx = SelectionContext(n_clients=fl.n_clients, n_units=assign.n_units,
-                           n_train=n_train, scores=scores)
+                           n_train=n_train, scores=scores,
+                           score_ema=getattr(fl, "score_ema", 0.9))
     return strat, ctx
+
+
+def _live_ctx(ctx: SelectionContext, sel_state) -> SelectionContext:
+    """Swap the build-time context for the round's live selection state
+    (traced arrays) when the server threads one in."""
+    if sel_state is None:
+        return ctx
+    return dataclasses.replace(ctx, scores=sel_state.scores,
+                               state=sel_state)
 
 
 def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
@@ -118,6 +132,15 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
     ``n_slots`` trained units per client.  The slot budget ``n_slots``
     is static (``n_train`` plus the optional always-trained head), so
     all packed shapes are static under vmap/scan.
+
+    Stateful (scored) strategies get two extra wires (DESIGN.md §11),
+    both compiled out entirely for stateless strategies (their trace is
+    the pre-scoring trace, bit-exact): the optional ``sel_state``
+    argument threads the live :class:`SelectionState` into the
+    selection context, and the metrics carry ``unit_sqnorm`` — (C, U)
+    per-client per-unit squared gradient norms accumulated by the
+    local-update norm hook from gradients the step already
+    materialized.
     """
     strat, ctx = _selection_setup(assign, fl, strategy, scores)
     use_packed = fl.packed and not strat.dense
@@ -126,11 +149,15 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
             f"topology {fl.topology!r} has no packed aggregation path; "
             "set FLConfig.packed=False")
     n_slots = fl.resolve_n_slots(ctx.n_units)
+    scoring = strat.stateful
 
-    def round_step(global_params, client_batches, weights, round_key):
-        sel = strat.select(round_key, ctx)
+    def round_step(global_params, client_batches, weights, round_key,
+                   sel_state=None):
+        c = _live_ctx(ctx, sel_state)
+        sel = strat.select(round_key, c)
         if fl.always_train_head:
             sel = sel.at[:, -1].set(1.0)
+        hook = dense_norm_hook(assign) if scoring else None
 
         if strat.dense:
             # every unit trained: unmasked local step + the topology's
@@ -144,7 +171,8 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
                                     batches, lr=fl.lr,
                                     optimizer=fl.optimizer,
                                     prox_mu=fl.prox_mu,
-                                    loss_kwargs=loss_kwargs)
+                                    loss_kwargs=loss_kwargs,
+                                    norm_hook=hook)
 
             deltas, metrics = jax.vmap(one_client_dense)(client_batches)
             new_params = aggregate_dense(global_params, deltas, sel, weights)
@@ -156,7 +184,9 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
                 return local_update_packed(
                     loss_fn, global_params, assign, rows_c, valid_c,
                     batches, lr=fl.lr, optimizer=fl.optimizer,
-                    prox_mu=fl.prox_mu, loss_kwargs=loss_kwargs)
+                    prox_mu=fl.prox_mu, loss_kwargs=loss_kwargs,
+                    norm_hook=packed_norm_hook(assign, rows_c)
+                    if scoring else None)
 
             pdeltas, metrics = jax.vmap(one_client_packed)(
                 rows, valid, client_batches)
@@ -168,7 +198,8 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
                 return local_update(loss_fn, global_params, mask, batches,
                                     lr=fl.lr, optimizer=fl.optimizer,
                                     prox_mu=fl.prox_mu,
-                                    loss_kwargs=loss_kwargs)
+                                    loss_kwargs=loss_kwargs,
+                                    norm_hook=hook)
 
             deltas, metrics = jax.vmap(one_client)(sel, client_batches)
             new_params = aggregate(global_params, deltas, sel, weights)
@@ -177,8 +208,14 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
             "loss_per_client": metrics["loss_mean"],
             "sel": sel,
         }
+        if scoring:
+            out_metrics["unit_sqnorm"] = metrics["unit_sqnorm"]
         return new_params, out_metrics
 
+    # the Server derives state ownership from the strategy actually
+    # baked into this step (a strategy= override might differ from
+    # fl.strategy; re-resolving the name there would silently desync)
+    round_step.selection_strategy = strat
     return round_step
 
 
@@ -339,9 +376,8 @@ def get_topology(name: str) -> Topology:
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise UnknownTopologyError(
-            f"unknown topology {name!r}; registered: "
-            f"{', '.join(registered_topologies())}") from None
+        raise UnknownTopologyError(unknown_name_message(
+            "topology", name, _REGISTRY)) from None
 
 
 def resolve_topology(spec: Union[str, Topology, None]) -> Topology:
@@ -490,19 +526,23 @@ class Gossip(Topology):
                 "so there is nothing to pack — use hub or hierarchical")
         strat, ctx = _selection_setup(assign, fl, strategy, scores)
         mix = jnp.asarray(ring_mixing_matrix(fl.n_clients))
+        scoring = strat.stateful
 
-        def round_step(state, client_batches, weights, round_key):
-            sel = strat.select(round_key, ctx)
+        def round_step(state, client_batches, weights, round_key,
+                       sel_state=None):
+            sel = strat.select(round_key, _live_ctx(ctx, sel_state))
             if fl.always_train_head:
                 sel = sel.at[:, -1].set(1.0)
             active = (weights > 0).astype(jnp.float32)       # (C,)
+            hook = dense_norm_hook(assign) if scoring else None
 
             def one_client(params_c, sel_row, batches):
                 mask = mask_tree(assign, sel_row, params_c)
                 return local_update(loss_fn, params_c, mask, batches,
                                     lr=fl.lr, optimizer=fl.optimizer,
                                     prox_mu=fl.prox_mu,
-                                    loss_kwargs=loss_kwargs)
+                                    loss_kwargs=loss_kwargs,
+                                    norm_hook=hook)
 
             deltas, metrics = jax.vmap(one_client)(state, sel,
                                                    client_batches)
@@ -519,8 +559,11 @@ class Gossip(Topology):
                 "loss_per_client": metrics["loss_mean"],
                 "sel": sel,
             }
+            if scoring:
+                out_metrics["unit_sqnorm"] = metrics["unit_sqnorm"]
             return mixed, out_metrics
 
+        round_step.selection_strategy = strat
         return round_step
 
     def round_bytes(self, sel, ubytes, fl):

@@ -85,7 +85,7 @@ def logits_pspec(layout, mesh, shape, step_kind):
 def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
                  fl_fraction=0.5, fl_synchronized=False, fl_clients=None,
                  fl_topology="hub", fl_edges=None, fl_async_buffer=0,
-                 loss_overrides=None):
+                 fl_strategy="uniform", loss_overrides=None):
     """Returns (jitted, args, tokens_processed, is_train, extra_record)."""
     from ..models import layers as _layers
     _layers.set_logits_partition(
@@ -135,11 +135,13 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
         c = fl_clients
         fn, assign, fl = make_fl_round_step(
             cfg, n_clients=c, train_fraction=fl_fraction,
+            strategy=fl_strategy,
             synchronized=fl_synchronized, topology=fl_topology,
             n_edges=fl_edges,
             loss_kwargs=default_loss_kwargs(cfg, remat=remat, unroll=unroll))
         extra["fl"] = {"n_clients": c, "n_units": assign.n_units,
                        "n_train_units": fl.n_train_units,
+                       "strategy": fl_strategy,
                        "synchronized": fl_synchronized,
                        "topology": fl_topology}
         if fl_topology == "hierarchical":
@@ -183,10 +185,24 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
         b_sh = jax.tree_util.tree_map(
             lambda v: NamedSharding(mesh, P(client_axes, None, "data",
                                             *(None,) * (v.ndim - 3))), batch)
-        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, rep, rep),
+        args = (params, batch, weights, key)
+        in_sh = (p_sh, b_sh, rep, rep)
+        from ..core.strategies import SelectionState, resolve_strategy
+        if resolve_strategy(fl_strategy, fl_synchronized).stateful:
+            # scored strategies: the round step takes the live
+            # SelectionState as a fifth (replicated, tiny) argument and
+            # returns the per-unit norm telemetry in the metrics — the
+            # lowering proof must cover that variant of the program
+            u = assign.n_units
+            args = args + (SelectionState(
+                scores=jax.ShapeDtypeStruct((u,), jnp.float32),
+                counts=jax.ShapeDtypeStruct((u,), jnp.float32),
+                round=jax.ShapeDtypeStruct((), jnp.int32)),)
+            in_sh = in_sh + (rep,)
+            extra["fl"]["scored"] = True
+        jitted = jax.jit(fn, in_shardings=in_sh,
                          out_shardings=(p_sh, None))
-        return jitted, (params, batch, weights, key), \
-            b_per * c * shape.seq_len, True, extra
+        return jitted, args, b_per * c * shape.seq_len, True, extra
     raise ValueError(step_kind)
 
 
@@ -194,6 +210,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                step_kind: str = "auto", layout: Optional[str] = None,
                fl_fraction: float = 0.5, fl_synchronized: bool = False,
                fl_topology: str = "hub", fl_async_buffer: int = 0,
+               fl_strategy: str = "uniform",
                lower_only: bool = False, remat: bool = True,
                skip_accounting: bool = False,
                verbose: bool = True) -> Dict[str, Any]:
@@ -245,7 +262,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         cfg, shape, step_kind, mesh, layout, unroll=False, remat=remat,
         fl_fraction=fl_fraction, fl_synchronized=fl_synchronized,
         fl_clients=fl_clients, fl_topology=fl_topology, fl_edges=fl_edges,
-        fl_async_buffer=fl_async_buffer)
+        fl_async_buffer=fl_async_buffer, fl_strategy=fl_strategy)
     record.update(extra)
     with mesh:
         lowered = jitted.lower(*args)
@@ -271,7 +288,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             c, shape, step_kind, mesh, layout, unroll=True, remat=remat,
             fl_fraction=fl_fraction, fl_synchronized=fl_synchronized,
             fl_clients=fl_clients, fl_topology=fl_topology,
-            fl_edges=fl_edges, fl_async_buffer=fl_async_buffer)
+            fl_edges=fl_edges, fl_async_buffer=fl_async_buffer,
+            fl_strategy=fl_strategy)
         with mesh:
             comp = j.lower(*a).compile()
         acct.append((roofline.cost_analysis_terms(comp),
@@ -332,6 +350,10 @@ def main():
     ap.add_argument("--fl-synchronized", action="store_true")
     ap.add_argument("--fl-topology", default="hub",
                     choices=["hub", "hierarchical", "gossip"])
+    ap.add_argument("--fl-strategy", default="uniform",
+                    help="registered selection strategy; stateful "
+                         "(scored) strategies lower the round step with "
+                         "its SelectionState argument + norm telemetry")
     ap.add_argument("--fl-async-buffer", type=int, default=0,
                     help="compile the buffered-async FLUSH program "
                          "(B stacked packed updates) instead of the "
@@ -347,6 +369,7 @@ def main():
                      fl_fraction=args.fl_fraction,
                      fl_synchronized=args.fl_synchronized,
                      fl_topology=args.fl_topology,
+                     fl_strategy=args.fl_strategy,
                      fl_async_buffer=args.fl_async_buffer,
                      lower_only=args.lower_only, remat=not args.no_remat,
                      skip_accounting=args.skip_accounting)

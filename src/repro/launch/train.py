@@ -3,7 +3,9 @@ scale; on a pod the same code runs under the production mesh).
 
     PYTHONPATH=src python -m repro.launch.train \
         --arch qwen3-1.7b --reduced --clients 4 --rounds 20 \
-        --train-fraction 0.5 [--strategy uniform|fixed_last|weighted|full]
+        --train-fraction 0.5 [--strategy uniform|fixed_last|full|
+                              score_weighted|depth_dropout|successive|...]
+        [--score-ema 0.9 --score-every 1]
         [--synchronized] [--topology hub|hierarchical|gossip [--edges 2]]
         [--packed] [--fused-agg auto|on|off] [--ckpt results/ck/run1]
         [--async-buffer 4 --staleness polynomial --delay-dist pareto:1.5]
@@ -37,6 +39,13 @@ def main():
     ap.add_argument("--train-fraction", type=float, default=0.5)
     ap.add_argument("--strategy", default="uniform",
                     choices=registered_strategies())
+    ap.add_argument("--score-ema", type=float, default=0.9,
+                    help="EMA decay of the per-unit gradient-norm "
+                         "scores a stateful strategy (score_weighted, "
+                         "depth_dropout, successive) maintains")
+    ap.add_argument("--score-every", type=int, default=1,
+                    help="fold norm telemetry into the selection state "
+                         "every N rounds/flushes")
     ap.add_argument("--synchronized", action="store_true")
     ap.add_argument("--topology", default="hub",
                     choices=registered_topologies())
@@ -96,7 +105,8 @@ def main():
                   async_buffer=args.async_buffer,
                   staleness=args.staleness,
                   staleness_alpha=args.staleness_alpha,
-                  client_delay_dist=args.delay_dist)
+                  client_delay_dist=args.delay_dist,
+                  score_ema=args.score_ema, score_every=args.score_every)
     hooks = [Checkpointer(args.ckpt)] if args.ckpt else []
     fed = Federation.from_config(cfg, fl, data=loader, seed=args.seed,
                                  dropout_rate=args.dropout, hooks=hooks)
@@ -107,7 +117,9 @@ def main():
           (f" edges={fl.resolve_n_edges()}"
            if args.topology == "hierarchical" else "") +
           (f" async_buffer={fl.async_buffer} staleness={fl.staleness}"
-           f" delays={fl.client_delay_dist}" if fl.async_buffer else ""))
+           f" delays={fl.client_delay_dist}" if fl.async_buffer else "") +
+          (f" scoring=on ema={fl.score_ema} every={fl.score_every}"
+           if fed.server.sel_state is not None else ""))
     t0 = time.time()
     fed.fit(args.rounds, log_every=1)
     print(f"total {time.time()-t0:.1f}s; comm summary:")

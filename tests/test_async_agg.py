@@ -276,6 +276,99 @@ def test_async_records_match_buffered_accounting(topology):
     assert summ["sim_time"] > 0.0 and "avg_staleness" in summ
 
 
+# -- scored selection under buffered rounds (DESIGN.md §11) -----------------
+
+def test_async_scored_state_advances_and_decays_with_staleness():
+    """score_weighted under buffered rounds: the state advances one
+    step per flush, and stale entries' telemetry is weighted by the
+    SAME staleness factor as their deltas — so the polynomial and
+    constant rules accumulate different counts on the same schedule."""
+    params, assign, batches = _setup()
+
+    def run(staleness):
+        fl = FLConfig(n_clients=C, train_fraction=0.5, fused_agg="off",
+                      strategy="score_weighted", async_buffer=2,
+                      staleness=staleness, staleness_alpha=1.0,
+                      client_delay_dist="pareto:1.5")
+        fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                         fl=fl, seed=5)
+        fed.server.run(4, lambda w: batches)
+        return fed
+
+    poly = run("polynomial")
+    st = poly.server.sel_state
+    assert int(st.round) == 4
+    assert float(np.asarray(st.scores).max()) > 0.0
+    assert max(r.staleness_mean for r in poly.history) > 0.0
+    const = run("constant")
+    # same seeded schedule -> same entries; constant counts at full
+    # weight, polynomial strictly less (staleness observed above)
+    assert float(np.asarray(const.server.sel_state.counts).sum()) > \
+        float(np.asarray(st.counts).sum())
+    # entry budget: 4 flushes x buffer 2 x n_train 4, fully counted
+    # only under the constant rule
+    assert float(np.asarray(const.server.sel_state.counts).sum()) == \
+        4 * 2 * 4
+
+
+@pytest.mark.parametrize("topology", ["hub", "hierarchical"])
+def test_async_scored_flush_zero_staleness_bitexact_vs_sync(topology):
+    """The PR 4 anchor extended to the scored engine: with zero
+    staleness a flush — including its score-state update — is bitwise
+    one synchronous scored packed round."""
+    params, assign, batches = _setup()
+    weights = jnp.asarray([1.0, 2.0, 0.0, 3.0])
+    sync_fl = FLConfig(n_clients=C, train_fraction=0.5,
+                       strategy="score_weighted", topology=topology,
+                       packed=True, fused_agg="off")
+    srv = Server(build_round_step(toy_loss, assign, sync_fl), assign,
+                 sync_fl, params, seed=11)
+    srv.run_round(batches, weights)
+
+    async_fl = FLConfig(n_clients=C, train_fraction=0.5,
+                        strategy="score_weighted", topology=topology,
+                        fused_agg="off", async_buffer=C,
+                        client_delay_dist="none")
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=async_fl, seed=11)
+    fed.server.run(1, lambda w: batches, weights=weights)
+    _assert_trees_bitexact(srv.params, fed.params)
+    _assert_trees_bitexact(srv.sel_state, fed.server.sel_state)
+
+
+def test_async_scored_ckpt_restore_bitexact(tmp_path):
+    """Satellite: kill/restore mid-fit with score_weighted under
+    async_buffer rounds — buffer entries carry their telemetry, the
+    SelectionState restores bitwise, and the resumed run equals the
+    uninterrupted one."""
+    from repro.ckpt import restore_server_state, save_server_state
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, fused_agg="off",
+                  strategy="score_weighted", topology="hierarchical",
+                  n_edges=2, async_buffer=3,
+                  client_delay_dist="pareto:1.5")
+    path = str(tmp_path / "scored_async")
+
+    f1 = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                    fl=fl, seed=3)
+    f1.server.run(2, lambda w: batches)
+    save_server_state(path, f1.server)
+    f1.server.run(2, lambda w: batches)
+
+    f2 = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                    fl=fl, seed=3)
+    meta = restore_server_state(path, f2.server)
+    assert meta["async"]["scored"]
+    for u in f2.server.async_engine.buffer.entries:
+        assert u.unit_sqnorm is not None and u.unit_sqnorm.shape == \
+            (assign.n_units,)
+    f2.server.run(2, lambda w: batches)
+    _assert_trees_bitexact(f1.params, f2.params)
+    _assert_trees_bitexact(f1.server.sel_state, f2.server.sel_state)
+    assert [r.sim_time for r in f2.history] == \
+        [r.sim_time for r in f1.history]
+
+
 # -- satellite bugfixes -----------------------------------------------------
 
 def test_degenerate_comm_rounds_report_zero_frac():

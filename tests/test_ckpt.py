@@ -43,6 +43,38 @@ def test_shape_mismatch_rejected(tmp_path):
         load_pytree(path, {"a": jnp.ones((3, 2))})
 
 
+def test_scored_server_state_manifest_carries_sel_state(tmp_path):
+    """Scored runs persist the SelectionState pytree alongside the
+    params (DESIGN.md §11) — visible in the manifest as sel_state/*
+    paths — and plain runs keep the legacy flat-params layout."""
+    import jax
+    from repro.core import FLConfig, Federation
+    from repro.ckpt import save_server_state
+    from repro.models.toy import (init_toy_mlp, toy_batches, toy_loss,
+                                  toy_units)
+    p = init_toy_mlp(jax.random.PRNGKey(0), n_blocks=4, d=8, hidden=16,
+                     out=4)
+    assign = toy_units(p)
+    batches = toy_batches(jax.random.PRNGKey(1), n_clients=2, steps=1,
+                          batch=2, d=8, out=4)
+    for strategy, scored in (("score_weighted", True), ("uniform", False)):
+        fl = FLConfig(n_clients=2, train_fraction=0.5, strategy=strategy,
+                      fused_agg="off")
+        fed = Federation(loss_fn=toy_loss, params=p, assign=assign,
+                         fl=fl, seed=0)
+        fed.server.run(1, lambda r: batches)
+        path = str(tmp_path / strategy)
+        save_server_state(path, fed.server)
+        with open(path + ".json") as f:
+            man = json.load(f)
+        has_state = any(k.startswith("sel_state/") for k in man["paths"])
+        assert has_state == scored
+        assert man["metadata"].get("sel_state", False) == scored
+        if scored:
+            assert {"sel_state/scores", "sel_state/counts",
+                    "sel_state/round"} <= set(man["paths"])
+
+
 def test_server_state_roundtrip(tmp_path, rng):
     from repro.ckpt import restore_server_state, save_server_state
     from repro.core import FLConfig, build_round_step, build_units_flat

@@ -1,0 +1,446 @@
+"""Scored selection engine (DESIGN.md §11): SelectionState threading,
+gradient-norm telemetry (packed == dense BITWISE), the three new
+score-driven strategies, the `weighted` -> uniform degeneration +
+deprecation shim, uniform registry error messages, FLConfig range
+validation, and bit-exact mid-fit checkpoint restore of the state."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FLConfig, Federation, NormTelemetry, ScoredStrategy,
+                        SelectionContext, SelectionState, Server,
+                        UnknownStrategyError, UnknownTopologyError,
+                        build_round_step, get_strategy, get_topology,
+                        registered_strategies)
+from repro.core.async_agg import UnknownStalenessError, get_staleness
+from repro.core.masking import unit_sqnorm, unit_sqnorm_packed
+from repro.models.toy import init_toy_mlp, toy_batches, toy_loss, toy_units
+
+C = 4
+
+
+def _setup(n_blocks=6, d=16, hidden=32, out=4, steps=2, batch=2):
+    key = jax.random.PRNGKey(0)
+    params = init_toy_mlp(key, n_blocks=n_blocks, d=d, hidden=hidden,
+                          out=out)
+    assign = toy_units(params)
+    batches = toy_batches(jax.random.fold_in(key, 1), n_clients=C,
+                          steps=steps, batch=batch, d=d, out=out)
+    return params, assign, batches
+
+
+def _assert_trees_bitexact(a, b):
+    for pa, pb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(pa), np.asarray(pb)), \
+            "trees diverged bitwise"
+
+
+def _ctx(n_units=8, n_train=3, scores=None, state=None):
+    return SelectionContext(n_clients=C, n_units=n_units, n_train=n_train,
+                            scores=scores, state=state)
+
+
+# -- registry: new strategies + uniform unknown-name errors -----------------
+
+def test_new_strategies_registered():
+    assert {"score_weighted", "depth_dropout", "successive"} <= \
+        set(registered_strategies())
+    for name in ("score_weighted", "depth_dropout", "successive"):
+        assert get_strategy(name).stateful
+
+
+def test_unknown_name_errors_share_uniform_format():
+    """The three registries (satellite: shared helper) fail with the
+    same ``unknown <kind> '<name>'; registered: ...`` shape."""
+    with pytest.raises(UnknownStrategyError,
+                       match=r"unknown selection strategy 'nope'; "
+                             r"registered: .*uniform"):
+        get_strategy("nope")
+    with pytest.raises(UnknownTopologyError,
+                       match=r"unknown topology 'nope'; "
+                             r"registered: .*hierarchical"):
+        get_topology("nope")
+    with pytest.raises(UnknownStalenessError,
+                       match=r"unknown staleness rule 'nope'; "
+                             r"registered: .*polynomial"):
+        get_staleness("nope")
+
+
+# -- weighted: explicit uniform degeneration + deprecation ------------------
+
+def test_weighted_without_scores_bitexact_with_uniform():
+    """No-signal `weighted` (and `score_weighted`) degenerates to the
+    EXACT uniform draw — same key, same selection matrix, bitwise."""
+    ctx = _ctx()
+    key = jax.random.PRNGKey(11)
+    uni = np.asarray(get_strategy("uniform").select(key, ctx))
+    with pytest.warns(DeprecationWarning, match="score_weighted"):
+        wtd = np.asarray(get_strategy("weighted").select(key, ctx))
+    sco = np.asarray(get_strategy("score_weighted").select(key, ctx))
+    assert np.array_equal(uni, wtd)
+    assert np.array_equal(uni, sco)
+
+
+def test_weighted_with_scores_keeps_legacy_behavior():
+    """Explicit static scores: the historical Gumbel top-k, unchanged —
+    high-score units preferred."""
+    scores = jnp.asarray([0., 0., 0., 0., 0., 8., 8., 8.])
+    with pytest.warns(DeprecationWarning):
+        strat = get_strategy("weighted")
+    hits = np.zeros(8)
+    for r in range(40):
+        hits += np.asarray(strat.select_row(
+            jax.random.PRNGKey(r), _ctx(scores=scores)))
+    assert hits[5:].min() > hits[:5].max()
+
+
+# -- the three new strategies ----------------------------------------------
+
+def test_score_weighted_prefers_high_score_units_scale_free():
+    strat = get_strategy("score_weighted")
+    base = jnp.asarray([0., 0., 0., 0., 0., 5., 5., 5.])
+    hits = np.zeros(8)
+    for r in range(40):
+        hits += np.asarray(strat.select_row(
+            jax.random.PRNGKey(r), _ctx(scores=base)))
+    assert hits[5:].min() > hits[:5].max()
+    # standardized ranking: a uniformly rescaled score vector draws the
+    # identical selections (selection pressure is scale-free)
+    k = jax.random.PRNGKey(3)
+    a = np.asarray(strat.select_row(k, _ctx(scores=base)))
+    b = np.asarray(strat.select_row(k, _ctx(scores=base * 100.0)))
+    np.testing.assert_allclose(a, b)
+
+
+def test_depth_dropout_anneals_shallow_bias():
+    strat = get_strategy("depth_dropout")
+
+    def hits(round_idx, draws=60):
+        st = SelectionState(scores=jnp.zeros(8), counts=jnp.zeros(8),
+                            round=jnp.asarray(round_idx, jnp.int32))
+        h = np.zeros(8)
+        for r in range(draws):
+            h += np.asarray(strat.select_row(
+                jax.random.PRNGKey(r), _ctx(state=st)))
+        return h
+
+    early = hits(0)
+    late = hits(10 * strat.horizon)
+    # early rounds: layer-wise growth concentrates on shallow units
+    assert early[:3].sum() > early[-3:].sum() * 1.5
+    # annealed out: all depths compete (within sampling noise)
+    assert late[-3:].sum() > late[:3].sum() * 0.5
+    # every draw keeps the static n_train sparsity (packed-path contract)
+    row = np.asarray(strat.select_row(jax.random.PRNGKey(0),
+                                      _ctx(state=None)))
+    assert row.sum() == 3
+
+
+def test_successive_window_grows_deterministically():
+    strat = get_strategy("successive")
+    seen = []
+    for r in range(0, 6 * strat.phase_rounds, strat.phase_rounds):
+        st = SelectionState(scores=jnp.zeros(8), counts=jnp.zeros(8),
+                            round=jnp.asarray(r, jnp.int32))
+        row = np.asarray(strat.select_row(None, _ctx(state=st)))
+        assert row.sum() == 3                    # exactly n_train
+        start = int(np.argmax(row))
+        assert np.array_equal(np.flatnonzero(row),
+                              np.arange(start, start + 3))
+        seen.append(start)
+    # windows advance by n_train per phase, then clamp at the deep end
+    assert seen == [0, 3, 5, 5, 5, 5]
+
+
+def test_scored_state_update_ema_and_counts():
+    strat = ScoredStrategy()
+    ctx = dataclasses.replace(_ctx(n_units=4, n_train=2), score_ema=0.5)
+    st = strat.init_state(ctx)
+    assert int(st.round) == 0 and float(st.counts.sum()) == 0.0
+    # round 1: units 0,1 observed -> scores adopt their first norm
+    t1 = NormTelemetry(unit_sqnorm=np.array([4.0, 16.0, 0, 0]),
+                       unit_count=np.array([1.0, 4.0, 0, 0]),
+                       unit_raw_count=np.array([1.0, 4.0, 0, 0]))
+    st = strat.update_state(st, ctx, t1)
+    np.testing.assert_allclose(np.asarray(st.scores),
+                               [2.0, 2.0, 0.0, 0.0])
+    # telemetry None (off-cadence / skipped round): counter still moves
+    st = strat.update_state(st, ctx, None)
+    assert int(st.round) == 2
+    np.testing.assert_allclose(np.asarray(st.counts), [1, 4, 0, 0])
+    # round 3: unit 0 observed again -> EMA; unit 2 first-seen -> adopt
+    t2 = NormTelemetry(unit_sqnorm=np.array([36.0, 0, 9.0, 0]),
+                       unit_count=np.array([1.0, 0, 1.0, 0]),
+                       unit_raw_count=np.array([1.0, 0, 1.0, 0]))
+    st = strat.update_state(st, ctx, t2)
+    np.testing.assert_allclose(np.asarray(st.scores),
+                               [0.5 * 2 + 0.5 * 6, 2.0, 3.0, 0.0])
+    np.testing.assert_allclose(np.asarray(st.counts), [2, 4, 1, 0])
+
+
+def test_scored_state_update_decays_with_staleness_confidence():
+    """Staleness-weighted telemetry moves the EMA by the mean staleness
+    factor of its observations: the factor must NOT cancel out of the
+    update (weighted norm / weighted count alone would), and a
+    fully-decayed observation must not move the score at all."""
+    strat = ScoredStrategy()
+    ctx = dataclasses.replace(_ctx(n_units=3, n_train=1), score_ema=0.5)
+    st = strat.init_state(ctx)
+    # establish a prior score of 2.0 on every unit (confidence 1)
+    st = strat.update_state(st, ctx, NormTelemetry(
+        unit_sqnorm=np.array([4.0, 4.0, 4.0]),
+        unit_count=np.ones(3), unit_raw_count=np.ones(3)))
+    np.testing.assert_allclose(np.asarray(st.scores), [2.0, 2.0, 2.0])
+    # one observation of norm 6 per unit, at staleness factors 1 / 0.5
+    # / 0 -> EMA steps (1-beta)*factor = 0.5 / 0.25 / 0.0
+    t = NormTelemetry(unit_sqnorm=np.array([36.0, 18.0, 0.0]),
+                      unit_count=np.array([1.0, 0.5, 0.0]),
+                      unit_raw_count=np.ones(3))
+    st = strat.update_state(st, ctx, t)
+    np.testing.assert_allclose(
+        np.asarray(st.scores),
+        [0.5 * 2 + 0.5 * 6, 0.75 * 2 + 0.25 * 6, 2.0], rtol=1e-6)
+
+
+# -- telemetry: packed == dense bitwise, stateless trace untouched ----------
+
+@pytest.mark.parametrize("topology", ["hub", "hierarchical"])
+def test_packed_dense_norm_telemetry_bitexact(topology):
+    """With scoring ON the packed path's per-client per-unit norm
+    telemetry equals the dense path's BITWISE (norms reduce from the
+    grads each path already materialized; PR 3 made those bitwise)."""
+    params, assign, batches = _setup()
+    st = get_strategy("score_weighted").init_state(
+        _ctx(n_units=assign.n_units, n_train=4))
+    w = jnp.asarray([1.0, 2.0, 0.0, 3.0])
+    rk = jax.random.PRNGKey(5)
+    outs = {}
+    for packed in (False, True):
+        fl = FLConfig(n_clients=C, train_fraction=0.5,
+                      strategy="score_weighted", topology=topology,
+                      packed=packed, fused_agg="off")
+        step = jax.jit(build_round_step(toy_loss, assign, fl))
+        outs[packed] = step(params, batches, w, rk, st)
+    (p_d, m_d), (p_p, m_p) = outs[False], outs[True]
+    assert m_d["unit_sqnorm"].shape == (C, assign.n_units)
+    assert np.array_equal(np.asarray(m_d["unit_sqnorm"]),
+                          np.asarray(m_p["unit_sqnorm"]))
+    _assert_trees_bitexact(p_d, p_p)
+    # trained units carry signal, untouched units exact zeros
+    sq = np.asarray(m_d["unit_sqnorm"])
+    sel = np.asarray(m_d["sel"])
+    assert (sq[sel > 0] > 0).all() and (sq[sel == 0] == 0).all()
+
+
+def test_unit_sqnorm_helpers_agree_with_tree_norms():
+    params, assign, _ = _setup()
+    grads = jax.tree_util.tree_map(
+        lambda x: jnp.ones_like(x) * 0.5, params)
+    per_unit = np.asarray(unit_sqnorm(assign, grads))
+    total = sum(float(jnp.sum(jnp.square(g)))
+                for g in jax.tree_util.tree_leaves(grads))
+    np.testing.assert_allclose(per_unit.sum(), total, rtol=1e-6)
+    # packed twin over a full-width identity slot plan matches
+    rows = jax.tree_util.tree_map(
+        lambda lu, g: jnp.zeros((0,), jnp.int32) if lu.kind == "scalar"
+        else jnp.arange(g.shape[0], dtype=jnp.int32),
+        assign.leaf_units, grads,
+        is_leaf=lambda x: hasattr(x, "kind"))
+    packed = np.asarray(unit_sqnorm_packed(assign, grads, rows))
+    np.testing.assert_allclose(packed, per_unit)
+
+
+def test_stateless_round_metrics_carry_no_telemetry():
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, fused_agg="off")
+    step = jax.jit(build_round_step(toy_loss, assign, fl))
+    _, metrics = step(params, batches, jnp.ones(C), jax.random.PRNGKey(0))
+    assert "unit_sqnorm" not in metrics
+
+
+@pytest.mark.parametrize("topology", ["hub", "hierarchical"])
+def test_stateless_server_bitexact_with_raw_round_step(topology):
+    """The scored-engine plumbing must be invisible to stateless
+    strategies: a Server-driven run equals driving the bare jitted
+    round step by hand, bitwise."""
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, topology=topology,
+                  fused_agg="off")
+    srv = Server(build_round_step(toy_loss, assign, fl), assign, fl,
+                 params, seed=13)
+    assert srv.sel_state is None
+    srv.run_round(batches)
+    srv.run_round(batches)
+
+    raw = jax.jit(build_round_step(toy_loss, assign, fl))
+    key = jax.random.PRNGKey(13)
+    p = params
+    for _ in range(2):
+        key, rk = jax.random.split(key)
+        p, _ = raw(p, batches, jnp.ones(C), rk)
+    _assert_trees_bitexact(srv.params, p)
+
+
+# -- the engine end-to-end --------------------------------------------------
+
+@pytest.mark.parametrize("topology,packed", [("hub", False), ("hub", True),
+                                             ("hierarchical", True),
+                                             ("gossip", False)])
+def test_scored_federation_accumulates_state(topology, packed):
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5,
+                  strategy="score_weighted", topology=topology,
+                  packed=packed, fused_agg="off")
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=1)
+    fed.server.run(3, lambda r: batches)
+    st = fed.server.sel_state
+    assert int(st.round) == 3
+    # every round each client trains n_train=4 units
+    assert float(np.asarray(st.counts).sum()) == 3 * C * 4
+    assert float(np.asarray(st.scores).max()) > 0.0
+    assert len(fed.history) == 3
+
+
+def test_score_every_throttles_updates_but_round_advances():
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5,
+                  strategy="score_weighted", fused_agg="off",
+                  score_every=2)
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=1)
+    fed.server.run(3, lambda r: batches)          # telemetry rounds 0, 2
+    st = fed.server.sel_state
+    assert int(st.round) == 3
+    assert float(np.asarray(st.counts).sum()) == 2 * C * 4
+
+
+def test_dropped_clients_contribute_no_telemetry():
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5,
+                  strategy="score_weighted", fused_agg="off")
+
+    from repro.core import ServerHook
+
+    class DropAllButOne(ServerHook):
+        def on_round_start(self, server, r, weights):
+            return weights * jnp.asarray([1.0, 0.0, 0.0, 0.0])
+
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=1, hooks=(DropAllButOne(),))
+    fed.server.run(2, lambda r: batches)
+    st = fed.server.sel_state
+    # only client 0's updates count: 2 rounds x 1 client x 4 units
+    assert float(np.asarray(st.counts).sum()) == 2 * 4
+
+
+def test_scored_selection_follows_live_scores():
+    """After training, score_weighted's next selections are biased
+    toward the units with large norm EMAs (the future-work behaviour:
+    live signal feeds selection)."""
+    params, assign, batches = _setup(n_blocks=6)
+    fl = FLConfig(n_clients=C, train_fraction=0.25,
+                  strategy="score_weighted", fused_agg="off",
+                  score_ema=0.5)
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=0)
+    fed.server.run(12, lambda r: batches)
+    scores = np.asarray(fed.server.sel_state.scores)
+    late_sel = np.stack(fed.server.sel_history[6:]).sum((0, 1))
+    top = np.argsort(-scores)[:2]
+    bottom = np.argsort(-scores)[-2:]
+    assert late_sel[top].mean() > late_sel[bottom].mean()
+
+
+def test_server_honors_round_step_strategy_override():
+    """A strategy= override baked into build_round_step must drive the
+    Server's state ownership even when fl.strategy says otherwise (the
+    instance rides on the round step; no parallel name re-resolution)."""
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, fused_agg="off")
+    step = build_round_step(toy_loss, assign, fl,
+                            strategy="score_weighted")
+    srv = Server(step, assign, fl, params, seed=2)
+    assert srv.strategy.name == "score_weighted"
+    srv.run_round(batches)
+    assert srv.sel_state is not None and int(srv.sel_state.round) == 1
+    assert float(np.asarray(srv.sel_state.scores).max()) > 0.0
+
+
+# -- FLConfig validation (satellite) ---------------------------------------
+
+@pytest.mark.parametrize("kw", [dict(train_fraction=0.0),
+                                dict(train_fraction=25.0),
+                                dict(train_fraction=-0.5)])
+def test_flconfig_rejects_bad_train_fraction(kw):
+    with pytest.raises(ValueError, match="train_fraction"):
+        FLConfig(n_clients=4, **kw)
+
+
+@pytest.mark.parametrize("kw", [dict(score_ema=1.0), dict(score_ema=-0.1),
+                                dict(score_every=0)])
+def test_flconfig_rejects_bad_score_knobs(kw):
+    with pytest.raises(ValueError, match="score_"):
+        FLConfig(n_clients=4, **kw)
+
+
+def test_flconfig_accepts_paper_settings():
+    for f in (0.25, 0.5, 0.75, 1.0):
+        assert FLConfig(n_clients=4, train_fraction=f).train_fraction == f
+
+
+# -- checkpoint restore (satellite): sync path ------------------------------
+
+def test_sel_state_ckpt_restore_sync_bitexact(tmp_path):
+    """Kill/restore mid-fit with score_weighted: the resumed run's
+    params AND selection state match the uninterrupted run bitwise."""
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5,
+                  strategy="score_weighted", fused_agg="off")
+    path = str(tmp_path / "scored")
+    from repro.ckpt import restore_server_state, save_server_state
+
+    f1 = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                    fl=fl, seed=3)
+    f1.server.run(2, lambda r: batches)
+    save_server_state(path, f1.server)
+    f1.server.run(2, lambda r: batches)
+
+    f2 = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                    fl=fl, seed=3)
+    meta = restore_server_state(path, f2.server)
+    assert meta["round"] == 2 and meta["sel_state"]
+    f2.server.run(2, lambda r: batches)
+    _assert_trees_bitexact(f1.params, f2.params)
+    _assert_trees_bitexact(f1.server.sel_state, f2.server.sel_state)
+
+
+def test_sel_state_ckpt_mismatch_rejected(tmp_path):
+    params, assign, batches = _setup()
+    from repro.ckpt import restore_server_state, save_server_state
+    scored = FLConfig(n_clients=C, train_fraction=0.5,
+                      strategy="score_weighted", fused_agg="off")
+    plain = dataclasses.replace(scored, strategy="uniform")
+    f1 = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                    fl=scored, seed=0)
+    f1.server.run(1, lambda r: batches)
+    p1 = str(tmp_path / "scored")
+    save_server_state(p1, f1.server)
+    f2 = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                    fl=plain, seed=0)
+    with pytest.raises(ValueError, match="stateful strategy"):
+        restore_server_state(p1, f2.server)
+
+    f3 = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                    fl=plain, seed=0)
+    f3.server.run(1, lambda r: batches)
+    p2 = str(tmp_path / "plain")
+    save_server_state(p2, f3.server)
+    f4 = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                    fl=scored, seed=0)
+    with pytest.raises(ValueError, match="no selection state"):
+        restore_server_state(p2, f4.server)
