@@ -67,6 +67,99 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
         o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(pt_ref, q_ref, k_ref, v_ref, valid_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale, page_size,
+                         n_pages):
+    """Same partial-softmax combine as ``_decode_kernel``; the KV blocks
+    arrive through the page table (``pt_ref`` drives the BlockSpec index
+    maps, so only the pages a sequence owns are ever DMA'd)."""
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = valid_ref[0]
+    k_start = ki * page_size
+
+    @pl.when(k_start < valid)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (1, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (ps, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+        s = jnp.where(kpos < valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_paged(q, k_pool, v_pool, page_table, valid_len, *,
+                       interpret=False):
+    """Paged flash decode: gather K/V pages through the page table.
+
+    q (BH, 1, hd); pools (Hkv, P, ps, hd) — the shared physical page pool;
+    page_table (B, MP) int32 maps logical page j of sequence b to a
+    physical page; valid_len (BH,) int32.  Returns o (BH, 1, hd).
+
+    The page table is a scalar-prefetch operand
+    (``pltpu.PrefetchScalarGridSpec``): BlockSpec index maps read it to
+    source each grid step's KV block, so the kernel streams exactly the
+    pages a sequence owns — the paged counterpart of ``flash_decode``'s
+    contiguous blocks.  Validity masking is identical (ring callers
+    pre-clamp ``valid_len``); pages at ki ≥ ceil(valid/ps) are skipped by
+    the same ``@pl.when`` guard, so the trash page 0 behind unallocated
+    page-table entries is never read on the compute path.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    bh, _, hd = q.shape
+    hkv, _, ps, _ = k_pool.shape
+    b, mp = page_table.shape
+    h = bh // b
+    n_rep = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, mp),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bi, ki, pt: (bi, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda bi, ki, pt: ((bi % h) // n_rep,
+                                             pt[bi // h, ki], 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda bi, ki, pt: ((bi % h) // n_rep,
+                                             pt[bi // h, ki], 0, 0)),
+            pl.BlockSpec((1,), lambda bi, ki, pt: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda bi, ki, pt: (bi, 0, 0)),
+        scratch_shapes=[_vmem((1,), jnp.float32), _vmem((1,), jnp.float32),
+                        _vmem((1, hd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=scale, page_size=ps,
+                          n_pages=mp),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, 1, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q, k_pool, v_pool, valid_len)
+
+
 def flash_decode(q, k, v, valid_len, *, blk_k=512, interpret=False):
     """q (BH, 1, hd); k/v (BHkv, S, hd); valid_len (BH,) int32.
 

@@ -1,9 +1,12 @@
-"""Model-layout wrapper for the flash decode kernel."""
+"""Model-layout wrappers for the flash decode kernels (dense + paged)."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 
-from .kernel import flash_decode
+from ..masked_agg.kernel import resolve_interpret
+from .kernel import flash_decode, flash_decode_paged
 
 
 def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0,
@@ -22,4 +25,33 @@ def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0,
     vk = v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, -1, hd)
     valid = jnp.repeat(valid_len.astype(jnp.int32), h)
     o = flash_decode(qk, kk, vk, valid, blk_k=blk_k, interpret=interpret)
+    return o.reshape(b, h, 1, hd).transpose(0, 2, 1, 3)
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_table, valid_len, *,
+                           interpret: Optional[bool] = None):
+    """Single-token attention through a page table (serving engine hot op).
+
+    q (B,1,H,hd); pools (P, ps, Hkv, hd) — the engine's shared physical
+    page pool; page_table (B, MP) int32; valid_len (B,) — callers
+    pre-clamp to the ring allocation for sliding-window layers.
+
+    ``interpret`` resolves from the backend like the other kernels
+    (``masked_agg.kernel.resolve_interpret``): on CPU the pure-jnp
+    gather reference runs (bitwise-equal to the dense decode path —
+    tested); on TPU/GPU the Pallas ``flash_decode_paged`` kernel gathers
+    K/V pages through the page table without ever materializing the
+    dense view.
+    """
+    if resolve_interpret(interpret):
+        # jnp reference (lazy import: models.attention imports this module)
+        from ...models.attention import decode_attend_paged
+        return decode_attend_paged(q, k_pool, v_pool, page_table, valid_len)
+    b, _, h, hd = q.shape
+    hkv = k_pool.shape[2]
+    qk = q.transpose(0, 2, 1, 3).reshape(b * h, 1, hd)
+    kp = k_pool.transpose(2, 0, 1, 3)            # (Hkv, P, ps, hd)
+    vp = v_pool.transpose(2, 0, 1, 3)
+    valid = jnp.repeat(valid_len.astype(jnp.int32), h)
+    o = flash_decode_paged(qk, kp, vp, page_table, valid)
     return o.reshape(b, h, 1, hd).transpose(0, 2, 1, 3)

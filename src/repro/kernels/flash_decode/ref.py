@@ -15,3 +15,19 @@ def flash_decode_ref(q, k, v, valid_len):
     o = decode_attend(q[:, :, None], kq[:, :, None], vq[:, :, None],
                       valid_len)
     return o[:, :, 0]
+
+
+def flash_decode_paged_ref(q, k_pool, v_pool, page_table, valid_len):
+    """Paged kernel layout: q (BH,1,hd); pools (Hkv,P,ps,hd);
+    page_table (B,MP); valid_len (BH,) -> (BH,1,hd).
+
+    Gathers each sequence's pages into the dense layout and defers to
+    the dense oracle."""
+    bh, _, hd = q.shape
+    hkv, _, ps, _ = k_pool.shape
+    b, mp = page_table.shape
+    kd = jnp.moveaxis(k_pool[:, page_table], 0, 1)    # (B,Hkv,MP,ps,hd)
+    vd = jnp.moveaxis(v_pool[:, page_table], 0, 1)
+    kd = kd.reshape(b * hkv, mp * ps, hd)
+    vd = vd.reshape(b * hkv, mp * ps, hd)
+    return flash_decode_ref(q, kd, vd, valid_len)

@@ -1,10 +1,17 @@
-"""Serving launcher: batched prefill + autoregressive decode.
+"""Serving launcher: static-batch loop or the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen3-1.7b --reduced --batch 4 --prompt-len 32 --gen 16
 
-Runs for real on this host with a reduced config; the same step functions
-lower for the production mesh in the dry-run (decode_32k / long_500k).
+    PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+        --arch qwen3-1.7b --reduced --batch 4 --requests 12 \
+        --prompt-len 32 --gen 16 --gen-spread 8
+
+``--engine static`` runs the fixed-batch prefill+decode reference loop
+(``serve.engine.static_generate``); ``--engine continuous`` routes the
+same requests through the paged continuous-batching engine (DESIGN.md
+§12) with ``--batch`` decode slots.  Both sample every token — including
+the first — reproducibly from ``--seed`` when ``--temperature`` > 0.
 """
 from __future__ import annotations
 
@@ -17,17 +24,29 @@ import numpy as np
 
 from ..configs.base import get_config, list_configs
 from ..models import get_model
+from ..serve.engine import DecodeEngine, ServeConfig, static_generate
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b", choices=list_configs())
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="static",
+                    choices=("static", "continuous"))
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static: batch size; continuous: decode slots")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    # continuous-engine knobs
+    ap.add_argument("--requests", type=int, default=0,
+                    help="continuous: total requests (default: --batch)")
+    ap.add_argument("--gen-spread", type=int, default=0,
+                    help="continuous: request i generates gen + i %% spread")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="page pool size (0 = auto, no oversubscription)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,8 +57,9 @@ def main():
     params = model.init_params(key)
 
     b, s = args.batch, args.prompt_len
-    prompts = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0,
-                                 cfg.vocab)
+    n_req = args.requests or b
+    prompts = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 1), (max(b, n_req), s), 0, cfg.vocab))
     extra = {}
     if cfg.family == "vlm":
         from ..models.transformer import vit_width
@@ -49,37 +69,41 @@ def main():
         extra["frames"] = jax.random.normal(
             jax.random.fold_in(key, 3), (b, cfg.enc_seq, cfg.d_model))
 
-    max_len = s + args.gen + 8 + (cfg.n_patches if cfg.family == "vlm"
-                                  else 0)
-    kw = {"attn_impl": "reference"} if cfg.family != "ssm" else {}
-    t0 = time.time()
-    logits, cache = jax.jit(
-        lambda p, t: model.prefill(p, t, max_len=max_len, last_only=True,
-                                   **extra, **kw))(params, prompts)
-    print(f"prefill {b}x{s}: {time.time()-t0:.2f}s "
-          f"(cache step={int(cache['step'])})")
+    gens = [args.gen + (i % args.gen_spread if args.gen_spread else 0)
+            for i in range(n_req)]
+    max_len = s + max(gens) + 8 + (cfg.n_patches if cfg.family == "vlm"
+                                   else 0)
 
-    decode = jax.jit(model.decode_step)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    outs = [tok]
+    if args.engine == "continuous":
+        sv = ServeConfig(n_slots=b, max_len=max_len,
+                         page_size=args.page_size, n_pages=args.pool_pages,
+                         temperature=args.temperature, seed=args.seed)
+        eng = DecodeEngine(cfg, params, sv)
+        for i in range(n_req):
+            eng.submit(prompts[i], gens[i])
+        t0 = time.time()
+        results = eng.run()
+        dt = time.time() - t0
+        st = eng.stats()
+        print(f"continuous: {n_req} requests x {b} slots, "
+              f"{st['total_tokens']} tokens in {dt:.2f}s "
+              f"({st['tokens_per_sec']:.1f} tok/s incl. compile), "
+              f"{st['n_decode_steps']} decode steps, "
+              f"{st['n_preemptions']} preemptions, "
+              f"peak pages {st['peak_pages']}/{st['n_pages'] - 1}")
+        for i in range(min(n_req, 2)):
+            print(f"  req{i}: {results[i].tolist()}")
+        return
+
     t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, cache, tok)
-        if args.temperature > 0:
-            key, sk = jax.random.split(key)
-            tok = jax.random.categorical(
-                sk, logits[:, -1] / args.temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        tok = tok.astype(jnp.int32)
-        outs.append(tok)
-    jax.block_until_ready(tok)
+    out = static_generate(cfg, params, jnp.asarray(prompts[:b]), args.gen,
+                          max_len=max_len, temperature=args.temperature,
+                          seed=args.seed, extra=extra)
     dt = time.time() - t0
-    gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
-    print(f"decoded {args.gen} tokens x {b} seqs in {dt:.2f}s "
-          f"({args.gen * b / max(dt, 1e-9):.1f} tok/s on CPU)")
+    print(f"static: prefill {b}x{s} + {args.gen} tokens/seq in {dt:.2f}s "
+          f"({args.gen * b / max(dt, 1e-9):.1f} tok/s incl. compile)")
     for i in range(min(b, 2)):
-        print(f"  seq{i}: {gen[i].tolist()}")
+        print(f"  seq{i}: {out[i].tolist()}")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,11 @@ class ModelApi(NamedTuple):
     init_cache: Callable
     prefill: Callable
     decode_step: Callable
+    # paged serving contract (DESIGN.md §12) — None for families that do
+    # not implement it (whisper enc-dec); the serving engine checks.
+    init_paged_cache: Optional[Callable] = None
+    commit_prefill: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
 
 
 _FAMILY = {
@@ -32,6 +37,20 @@ _FAMILY = {
 def get_model(cfg) -> ModelApi:
     mod = _FAMILY[cfg.family]
     prefill = getattr(mod, "prefill")
+    paged = {}
+    if hasattr(mod, "decode_step_paged"):
+        paged = dict(
+            init_paged_cache=lambda n_slots, n_pages, page_size, dtype=None:
+                mod.init_paged_cache(cfg, n_slots, n_pages, page_size, dtype),
+            commit_prefill=lambda paged_c, cache, slots, page_tables,
+                page_size: mod.commit_prefill(
+                    cfg, paged_c, cache, slots, page_tables,
+                    page_size=page_size),
+            decode_step_paged=lambda params, paged_c, token, steps,
+                page_tables, page_size: mod.decode_step_paged(
+                    cfg, params, paged_c, token, steps, page_tables,
+                    page_size=page_size),
+        )
     return ModelApi(
         init_params=lambda key, dtype=None: mod.init_params(cfg, key, dtype),
         forward=lambda params, tokens, **kw: mod.forward(
@@ -43,4 +62,5 @@ def get_model(cfg) -> ModelApi:
         prefill=lambda params, tokens, **kw: prefill(cfg, params, tokens, **kw),
         decode_step=lambda params, cache, token: mod.decode_step(
             cfg, params, cache, token),
+        **paged,
     )

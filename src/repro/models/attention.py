@@ -11,8 +11,10 @@ Three implementations share one signature; models pick per-layer:
                      width (window + q_chunk) per Q block: sub-quadratic
                      and lowering-safe for gemma3/hymba local layers.
 
-Decode-time single-token attention lives in ``decode_attend`` (full cache)
-and ``decode_attend_ring`` (ring-buffer sliding-window cache).
+Decode-time single-token attention lives in ``decode_attend`` (full cache),
+``decode_attend_ring`` (ring-buffer sliding-window cache), and
+``decode_attend_paged`` (page-table indirection over a shared block pool —
+the serving engine's cache, DESIGN.md §12).
 
 The Pallas TPU kernels in ``repro.kernels.flash_attention`` /
 ``flash_decode`` implement the same contracts; ``kernels/*/ref.py``
@@ -228,6 +230,44 @@ def decode_attend(q, k_cache, v_cache, valid_len, *, window: int = 0):
     scores = jnp.where(msk[:, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def paged_gather(pool, page_table):
+    """Materialize a sequence's cache view from a shared page pool.
+
+    pool (P, ps, Hkv, hd) — physical pages; page_table (B, MP) int32 maps
+    each sequence's logical page j to a physical page id.  Returns
+    (B, MP·ps, Hkv, hd) — the same dense layout ``decode_attend`` reads,
+    so a paged decode is bitwise-equal to the dense one (unallocated
+    entries point at the reserved trash page 0 and are masked by
+    ``valid_len`` before the softmax).
+    """
+    b, mp = page_table.shape
+    _, ps, hkv, hd = pool.shape
+    return pool[page_table].reshape(b, mp * ps, hkv, hd)
+
+
+def paged_token_update(pool, new, pages, offs):
+    """Write one token per sequence into its current page.
+
+    pool (P, ps, Hkv, hd); new (B, 1, Hkv, hd); pages/offs (B,) int32 —
+    physical page id and in-page offset per sequence.  Distinct active
+    sequences own distinct pages so the scatter never collides; inactive
+    slots target the trash page 0 (never read unmasked).
+    """
+    return pool.at[pages, offs].set(new[:, 0].astype(pool.dtype))
+
+
+def decode_attend_paged(q, k_pool, v_pool, page_table, valid_len):
+    """Single-token attention through a page table (pure-jnp reference).
+
+    q (B,1,H,hd); pools (P, ps, Hkv, hd); page_table (B, MP);
+    valid_len (B,).  Ring (sliding-window) callers pre-clamp valid_len to
+    the ring allocation — slot order does not matter to softmax(QK)V.
+    """
+    k = paged_gather(k_pool, page_table)
+    v = paged_gather(v_pool, page_table)
+    return decode_attend(q, k, v, valid_len)
 
 
 def decode_attend_ring(q, k_ring, v_ring, step, *, window: int):

@@ -22,8 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from . import layers as L
+from ..kernels.flash_decode.ops import paged_decode_attention
 from .attention import (attend, cache_token_update, decode_attend,
-                        decode_attend_ring)
+                        decode_attend_ring, paged_token_update)
 from .linear_scan import chunked_linear_scan, linear_scan_decode
 from .transformer import SubSpec, block_layout, n_macro, cache_alloc, \
     _cache_from_prefill
@@ -239,6 +240,105 @@ def init_cache(cfg, batch_size: int, max_len: int, dtype=None):
             "ssm": jnp.zeros((nm, batch_size, h, n, p), jnp.float32),
         }
     return {"step": jnp.zeros((), jnp.int32), "subs": subs}
+
+
+def init_paged_cache(cfg, n_slots: int, n_pages: int, page_size: int,
+                     dtype=None):
+    """Hybrid paging: attention KV lives in the shared page pool (ring
+    pages for sliding-window layers, growing pages for the global ones);
+    the O(1) conv and SSM states are slot rows — one implicit constant-
+    size page per slot, like rwkv6."""
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    layout = block_layout(cfg)
+    nm = n_macro(cfg)
+    h, p, n, w = ssm_dims(cfg)
+    shape = (nm, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    state = {}
+    for si in range(len(layout)):
+        state[f"sub{si}"] = {
+            "conv": jnp.zeros((nm, n_slots, w - 1, h, p), dtype),
+            "ssm": jnp.zeros((nm, n_slots, h, n, p), jnp.float32),
+        }
+    return {"pool": {"k": jnp.zeros(shape, dtype),
+                     "v": jnp.zeros(shape, dtype)},
+            "state": state}
+
+
+def commit_prefill(cfg, paged, cache, slots, page_tables, *,
+                   page_size: int):
+    """KV slabs scatter into the admitted pages; conv/SSM states into the
+    admitted slot rows."""
+    layout = block_layout(cfg)
+    k_pool, v_pool = paged["pool"]["k"], paged["pool"]["v"]
+    ps = page_size
+    state = {}
+    for si in range(len(layout)):
+        c = cache["subs"][f"sub{si}"]
+        pt = page_tables[f"sub{si}"]
+        nm, g, a, hkv, hd = c["k"].shape
+        slab_k = c["k"].reshape(nm, g, a // ps, ps, hkv, hd)
+        slab_v = c["v"].reshape(nm, g, a // ps, ps, hkv, hd)
+        k_pool = k_pool.at[:, pt].set(slab_k.astype(k_pool.dtype))
+        v_pool = v_pool.at[:, pt].set(slab_v.astype(v_pool.dtype))
+        st = paged["state"][f"sub{si}"]
+        state[f"sub{si}"] = {
+            k: st[k].at[:, slots].set(c[k].astype(st[k].dtype))
+            for k in st}
+    return {"pool": {"k": k_pool, "v": v_pool}, "state": state}
+
+
+def decode_step_paged(cfg, params, paged, token, steps, page_tables, *,
+                      page_size: int, unroll: bool = False):
+    """Continuous-batching decode step; mirrors ``decode_step`` op-for-op
+    with paged KV addressing and per-slot step counters (traced — the
+    engine admits/evicts without recompiling)."""
+    layout = block_layout(cfg)
+    rope = L.rope_freqs(cfg.head_dim, cfg.rope_pct, cfg.rope_theta)
+    x = L.embed_tokens(params["embed"], token)            # (B,1,d)
+    b = x.shape[0]
+    positions = steps[:, None]
+    ps = page_size
+
+    def body(carry, xs):
+        x = carry
+        blk, (pool_m, st_m) = xs
+        kp, vp = pool_m["k"], pool_m["v"]
+        new_st = {}
+        for si, spec in enumerate(layout):
+            p = blk[f"sub{si}"]
+            c = st_m[f"sub{si}"]
+            pt = page_tables[f"sub{si}"]
+            a = pt.shape[1] * ps
+            h = L.apply_norm(p["ln1"], x)
+            q, k, v = L.qkv_project(p["attn"], h, cfg, positions, rope)
+            if spec.window > 0:
+                pos = steps % a
+                valid = jnp.minimum(steps + 1, a)
+            else:
+                pos = steps
+                valid = steps + 1
+            page = jnp.take_along_axis(pt, (pos // ps)[:, None], 1)[:, 0]
+            kp = paged_token_update(kp, k, page, pos % ps)
+            vp = paged_token_update(vp, v, page, pos % ps)
+            o = paged_decode_attention(q, kp, vp, pt, valid)
+            a_out = L.out_project(p["attn"], o)
+            s_seq, new_conv, new_ssm = _ssm_branch_seq(
+                cfg, p["ssm"], h, conv_state=c["conv"], ssm_state=c["ssm"],
+                chunk=1)
+            fused = 0.5 * (L.apply_norm(p["attn_norm"], a_out) +
+                           L.apply_norm(p["ssm_norm"], s_seq))
+            x = x + fused
+            h2 = L.apply_norm(p["ln2"], x)
+            x = x + L.apply_mlp(p["mlp"], h2, cfg.act)
+            new_st[f"sub{si}"] = {"conv": new_conv, "ssm": new_ssm}
+        return x, ({"k": kp, "v": vp}, new_st)
+
+    x, (pool, state) = jax.lax.scan(
+        body, x, (params["blocks"], (paged["pool"], paged["state"])),
+        unroll=n_macro(cfg) if unroll else 1)
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x, cfg.tie_embeddings)
+    return logits, {"pool": pool, "state": state}
 
 
 def decode_step(cfg, params, cache, token, *, unroll: bool = False):

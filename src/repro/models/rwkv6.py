@@ -191,7 +191,38 @@ def prefill(cfg, params, tokens, *, max_len: int = 0, chunk: int = 16,
     return logits, cache
 
 
-def decode_step(cfg, params, cache, token, *, unroll: bool = False):
+def init_paged_cache(cfg, n_slots: int, n_pages: int = 0,
+                     page_size: int = 0, dtype=None):
+    """Serving-engine state pool: the RWKV decode state is constant-size
+    per sequence, so its 'pages' are slot rows — one implicit page per
+    slot, page table the identity.  Admit/evict are row writes."""
+    cache = init_cache(cfg, n_slots, dtype=dtype)
+    return {"state": cache["subs"]}
+
+
+def commit_prefill(cfg, paged, cache, slots, page_tables=None, *,
+                   page_size: int = 0):
+    """Write a prefill group's states into the admitted slot rows.
+    ``slots`` (g,) int32."""
+    sub = cache["subs"]["sub0"]
+    st = paged["state"]["sub0"]
+    new = {k: st[k].at[:, slots].set(sub[k].astype(st[k].dtype))
+           for k in st}
+    return {"state": {"sub0": new}}
+
+
+def decode_step_paged(cfg, params, paged, token, steps=None,
+                      page_tables=None, *, page_size: int = 0,
+                      unroll: bool = False):
+    """Continuous-batching decode step: identical math to ``decode_step``
+    (the recurrence never reads the step counter), state slot-major."""
+    x, subs = _decode_core(cfg, params, paged["state"], token,
+                           unroll=unroll)
+    logits = L.logits_head(params, x[:, None], cfg.tie_embeddings)
+    return logits, {"state": subs}
+
+
+def _decode_core(cfg, params, subs, token, *, unroll: bool = False):
     x = L.embed_tokens(params["embed"], token)[:, 0]     # (B,d)
 
     def body(x, xs):
@@ -224,8 +255,12 @@ def decode_step(cfg, params, cache, token, *, unroll: bool = False):
         x = x + jax.nn.sigmoid(xr @ cm["wr"]) * (kk @ cm["wv"])
         return x, {"sub0": {"x_tmix": h, "x_cmix": h2, "wkv": wkv}}
 
-    x, subs = jax.lax.scan(body, x, (params["blocks"], cache["subs"]),
+    x, subs = jax.lax.scan(body, x, (params["blocks"], subs),
                            unroll=cfg.n_layers if unroll else 1)
-    x = L.apply_norm(params["final_norm"], x)
+    return L.apply_norm(params["final_norm"], x), subs
+
+
+def decode_step(cfg, params, cache, token, *, unroll: bool = False):
+    x, subs = _decode_core(cfg, params, cache["subs"], token, unroll=unroll)
     logits = L.logits_head(params, x[:, None], cfg.tie_embeddings)
     return logits, {"step": cache["step"] + 1, "subs": subs}

@@ -23,8 +23,9 @@ import jax.numpy as jnp
 
 from . import layers as L
 from . import moe as M
+from ..kernels.flash_decode.ops import paged_decode_attention
 from .attention import (attend, cache_token_update, decode_attend,
-                        decode_attend_ring)
+                        decode_attend_ring, paged_token_update)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -252,6 +253,103 @@ def prefill(cfg, params, tokens, *, patches=None, max_len: int,
                                  build_cache=True, cache_len=max_len,
                                  last_only=last_only, unroll=unroll)
     return logits, cache
+
+
+def init_paged_cache(cfg, n_slots: int, n_pages: int, page_size: int,
+                     dtype=None):
+    """Shared physical KV page pool for the serving engine (DESIGN.md §12).
+
+    One pool serves every sub-layer stack (all subs share n_kv_heads and
+    head_dim; a page covers ``page_size`` tokens across all ``n_macro``
+    layers of one sub) — the free list spans the whole pool so ring and
+    full allocations draw from the same memory.  Page 0 is the reserved
+    trash page: unallocated page-table entries point at it and inactive
+    slots write there.
+    """
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    nm = n_macro(cfg)
+    shape = (nm, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"pool": {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}}
+
+
+def commit_prefill(cfg, paged, cache, slots, page_tables, *, page_size: int):
+    """Scatter a dense prefill cache into the admitted sequences' pages.
+
+    ``cache`` is ``prefill``'s output for a group of g sequences (ring
+    layout on sliding-window subs, left-aligned on full subs) — the page
+    pool ends up holding exactly the dense slabs, page by page, so
+    subsequent paged decode is bitwise-equal to the dense loop.
+    ``page_tables[sub] (g, MP_sub)`` rows are the admitted slots' tables;
+    unallocated entries (0) land in the trash page.
+    """
+    layout = block_layout(cfg)
+    k_pool, v_pool = paged["pool"]["k"], paged["pool"]["v"]
+    ps = page_size
+    for si in range(len(layout)):
+        c = cache["subs"][f"sub{si}"]
+        pt = page_tables[f"sub{si}"]
+        nm, g, a, hkv, hd = c["k"].shape
+        slab_k = c["k"].reshape(nm, g, a // ps, ps, hkv, hd)
+        slab_v = c["v"].reshape(nm, g, a // ps, ps, hkv, hd)
+        k_pool = k_pool.at[:, pt].set(slab_k.astype(k_pool.dtype))
+        v_pool = v_pool.at[:, pt].set(slab_v.astype(v_pool.dtype))
+    return {"pool": {"k": k_pool, "v": v_pool}}
+
+
+def decode_step_paged(cfg, params, paged, token, steps, page_tables, *,
+                      page_size: int, unroll: bool = False):
+    """One continuous-batching decode step over the paged pool.
+
+    token (B,1) int32 — B is the engine's static slot count; steps (B,)
+    int32 — per-slot token counts (traced, so admit/evict never
+    recompiles); page_tables {sub: (B, MP_sub) int32}.  Returns
+    (logits, new_paged).  Mirrors ``decode_step`` op-for-op — only the
+    cache addressing differs — so greedy decode through the pool is
+    bitwise-equal to the dense loop (tests/test_serve_engine.py).
+    """
+    layout = block_layout(cfg)
+    rope = L.rope_freqs(cfg.head_dim, cfg.rope_pct, cfg.rope_theta)
+    x = L.embed_tokens(params["embed"], token)          # (B,1,d)
+    b = x.shape[0]
+    positions = steps[:, None]
+    ps = page_size
+
+    def body(carry, xs):
+        x = carry
+        blk, pool_m = xs
+        kp, vp = pool_m["k"], pool_m["v"]
+        for si, spec in enumerate(layout):
+            p = blk[f"sub{si}"]
+            pt = page_tables[f"sub{si}"]
+            a = pt.shape[1] * ps
+            h = L.apply_norm(p["ln1"], x)
+            q, k, v = L.qkv_project(p["attn"], h, cfg, positions, rope)
+            if spec.window > 0:
+                pos = steps % a                      # ring slot per seq
+                valid = jnp.minimum(steps + 1, a)
+            else:
+                pos = steps
+                valid = steps + 1
+            page = jnp.take_along_axis(pt, (pos // ps)[:, None], 1)[:, 0]
+            kp = paged_token_update(kp, k, page, pos % ps)
+            vp = paged_token_update(vp, v, page, pos % ps)
+            o = paged_decode_attention(q, kp, vp, pt, valid)
+            x = x + L.out_project(p["attn"], o)
+            h = L.apply_norm(p["ln2"], x)
+            if spec.moe:
+                y, _ = M.apply_moe(p["moe"], h, cfg.moe, act=cfg.act)
+                if "shared" in p:
+                    y = y + L.apply_mlp(p["shared"], h, cfg.act)
+            else:
+                y = L.apply_mlp(p["mlp"], h, cfg.act)
+            x = x + y
+        return x, {"k": kp, "v": vp}
+
+    x, pool = jax.lax.scan(body, x, (params["blocks"], paged["pool"]),
+                           unroll=n_macro(cfg) if unroll else 1)
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_head(params, x, cfg.tie_embeddings)
+    return logits, {"pool": pool}
 
 
 def decode_step(cfg, params, cache, token, *, unroll: bool = False):

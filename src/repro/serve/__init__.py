@@ -1,0 +1,12 @@
+"""Serving engine: paged KV cache + continuous-batching scheduler +
+recompile-free decode engine (DESIGN.md §12).
+
+``paged_cache``  — page pool layout, free-list allocator, page tables
+``scheduler``    — request lifecycle: admit / grow / evict / preempt
+``engine``       — the jitted decode loop + the static-batch baseline
+"""
+from . import paged_cache, scheduler  # noqa: F401
+
+# engine imports repro.models (which imports nothing from repro.serve);
+# keep it a plain import too — ordering here is only documentation.
+from . import engine  # noqa: F401

@@ -1,0 +1,325 @@
+"""Continuous-batching decode engine over the paged cache (DESIGN.md §12).
+
+The engine jits three device functions once each:
+
+* **prefill** — the model's dense prefill (``last_only=True``) plus the
+  first-token sample, per distinct prompt length (jax's shape cache);
+* **commit**  — scatter of the dense prefill cache into the admitted
+  sequences' pages (one entry per group size);
+* **decode**  — one ``decode_step_paged`` + sample over the engine's
+  static slot count.  Every dynamic quantity (token, per-slot steps,
+  page tables, request ids, generation indices) is a fixed-shape traced
+  argument, so admitting and evicting sequences mid-flight NEVER
+  retraces the decode step (tests assert ``decode_cache_size == 1``).
+
+Sampling keys are ``fold_in(fold_in(PRNGKey(seed), request_id),
+token_index)`` — a function of the request and position only, never of
+batch composition — so continuous batching reproduces the static loop's
+token streams exactly, and a preempted-and-resumed request continues the
+same stream.  ``static_generate`` is the fixed-batch reference loop with
+the same sampling scheme (it also fixes the old launcher bug where the
+first token was argmax'd even at temperature > 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import get_model
+from .paged_cache import PageAllocator, PagedTables, build_layout
+from .scheduler import Request, Scheduler
+
+
+def sample_tokens(logits, rids, gidx, *, temperature: float, seed: int):
+    """logits (B, V) -> (B,) int32.  Greedy at temperature <= 0; otherwise
+    categorical with a per-(request, token-index) key — independent of
+    which other sequences share the batch."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    base = jax.random.PRNGKey(seed)
+
+    def one(key_r, key_g, row):
+        k = jax.random.fold_in(jax.random.fold_in(base, key_r), key_g)
+        return jax.random.categorical(k, row / temperature)
+
+    return jax.vmap(one)(rids, gidx, logits).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    n_slots: int
+    max_len: int                 # rounded up to a page multiple internally
+    page_size: int = 16
+    n_pages: int = 0             # 0 = auto: no oversubscription + trash page
+    temperature: float = 0.0
+    seed: int = 0
+    eos_id: int = -1             # -1 = disabled
+    attn_impl: str = "reference"
+    record_logits: bool = False  # keep per-request logits rows (tests)
+
+
+class DecodeEngine:
+    """Continuous-batching serving loop for one model."""
+
+    def __init__(self, cfg, params, serve: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self.model = get_model(cfg)
+        if self.model.decode_step_paged is None:
+            raise ValueError(f"{cfg.name}: family {cfg.family} has no paged "
+                             f"decode contract")
+        self.layout = build_layout(cfg, serve.page_size, serve.max_len)
+        n_pages = serve.n_pages or (
+            serve.n_slots * self.layout.pages_per_seq + 1)
+        self.allocator = PageAllocator(max(n_pages, 2))
+        self.tables = PagedTables(self.layout, serve.n_slots, self.allocator)
+        self.scheduler = Scheduler(self.layout, self.tables, serve.n_slots)
+        self.paged = self.model.init_paged_cache(
+            serve.n_slots, self.allocator.n_pages, serve.page_size)
+
+        model, lay, sv = self.model, self.layout, serve
+        kw = {"attn_impl": sv.attn_impl} if cfg.family != "ssm" else {}
+
+        def prefill_fn(params, tokens, rids, gidx):
+            logits, cache = model.prefill(params, tokens,
+                                          max_len=lay.max_len,
+                                          last_only=True, **kw)
+            row = logits[:, -1]
+            tok = sample_tokens(row, rids, gidx,
+                                temperature=sv.temperature, seed=sv.seed)
+            return tok, row, cache
+
+        def commit_fn(paged, cache, slots, rows):
+            return model.commit_prefill(paged, cache, slots, rows,
+                                        sv.page_size)
+
+        def decode_fn(params, paged, token, steps, tables, rids, gidx):
+            logits, paged = model.decode_step_paged(
+                params, paged, token, steps, tables, sv.page_size)
+            row = logits[:, -1]
+            tok = sample_tokens(row, rids, gidx,
+                                temperature=sv.temperature, seed=sv.seed)
+            return tok, row, paged
+
+        self._prefill = jax.jit(prefill_fn)
+        self._commit = jax.jit(commit_fn)
+        self._decode = jax.jit(decode_fn)
+
+        self._next_rid = 0
+        self.logits_rows: Dict[int, List[np.ndarray]] = {}
+        self.n_decode_steps = 0
+        self._tables_cache = None
+        self._tables_version = -1
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, prompt, max_gen: int, eos_id: Optional[int] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_gen=max_gen,
+                      eos_id=self.serve.eos_id if eos_id is None else eos_id,
+                      t_submit=time.perf_counter())
+        self.scheduler.submit(req)
+        if self.serve.record_logits:
+            self.logits_rows[rid] = []
+        return rid
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain the queue; returns {rid: generated tokens (int32 array)}."""
+        sched = self.scheduler
+        while sched.has_work():
+            admitted = self._admit_all()
+            if not sched.running_slots():
+                if sched.queue and not admitted:
+                    raise RuntimeError("queue stalled: nothing running and "
+                                       "nothing admissible")
+                continue
+            self._decode_one_step()
+        return {rid: np.asarray(r.generated, np.int32)
+                for rid, r in sched.requests.items()}
+
+    def stats(self) -> Dict[str, Any]:
+        reqs = [r for r in self.scheduler.requests.values()
+                if r.t_finish >= 0]
+        lat = np.asarray([r.t_finish - r.t_submit for r in reqs]) \
+            if reqs else np.zeros((0,))
+        total = sum(len(r.generated) for r in reqs)
+        span = (max(r.t_finish for r in reqs) -
+                min(r.t_submit for r in reqs)) if reqs else 0.0
+        return {
+            "n_requests": len(reqs),
+            "total_tokens": int(total),
+            "wall_s": float(span),
+            "tokens_per_sec": float(total / span) if span > 0 else 0.0,
+            "latency_p50_s": float(np.percentile(lat, 50)) if reqs else 0.0,
+            "latency_p99_s": float(np.percentile(lat, 99)) if reqs else 0.0,
+            "n_preemptions": self.scheduler.n_preemptions,
+            "n_decode_steps": self.n_decode_steps,
+            "peak_pages": self.allocator.peak_in_use,
+            "n_pages": self.allocator.n_pages,
+        }
+
+    @property
+    def decode_cache_size(self) -> int:
+        """jit cache entries for the decode step (must stay 1 across
+        admit/evict/preempt — the recompile-free contract)."""
+        return self._decode._cache_size()
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit_all(self) -> bool:
+        sched, admitted = self.scheduler, False
+        while True:
+            group = sched.admit_group()
+            if not group:
+                return admitted
+            admitted = True
+            slots = [s for s, _ in group]
+            reqs = [r for _, r in group]
+            toks = jnp.asarray(np.stack([r.prefill_tokens for r in reqs]))
+            rids = jnp.asarray([r.rid for r in reqs], jnp.int32)
+            gidx = jnp.asarray([len(r.generated) for r in reqs], jnp.int32)
+            tok, row, cache = self._prefill(self.params, toks, rids, gidx)
+            self.paged = self._commit(self.paged, cache,
+                                      jnp.asarray(slots, jnp.int32),
+                                      self.tables.rows(slots))
+            tok_np = np.asarray(tok)
+            row_np = np.asarray(row) if self.serve.record_logits else None
+            now = time.perf_counter()
+            for i, (slot, req) in enumerate(group):
+                if req.resume_pending is not None:
+                    continue   # token already sampled pre-preemption
+                if req.t_first_token < 0:
+                    req.t_first_token = now
+                req.generated.append(int(tok_np[i]))
+                if row_np is not None:
+                    self.logits_rows[req.rid].append(row_np[i])
+                if req.done:
+                    sched.finish(slot, now)
+
+    def _device_tables(self):
+        if self._tables_version != self.tables.version:
+            self._tables_cache = self.tables.device_tables()
+            self._tables_version = self.tables.version
+        return self._tables_cache
+
+    def _micro_run_len(self) -> int:
+        """How many decode steps can run back-to-back on the device before
+        the host must intervene: until the earliest finish (a slot frees
+        for admission) or page-boundary crossing (a slot needs a fresh
+        page).  EOS must inspect every token, so it pins the run to 1."""
+        sched, lay = self.scheduler, self.layout
+        k = 1 << 30
+        for slot in sched.running_slots():
+            info = sched.slots[slot]
+            req = sched.requests[info.rid]
+            if req.eos_id >= 0:
+                return 1
+            k = min(k, req.max_gen - len(req.generated))
+            for s in lay.subs:
+                pos = info.step % s.alloc if s.ring else info.step
+                k = min(k, lay.page_size - pos % lay.page_size)
+        return max(1, k)
+
+    def _decode_one_step(self) -> None:
+        """One scheduling point: grow pages, then run a multi-step decode
+        micro-run — K jitted steps chained device-to-device (the sampled
+        token feeds the next step without leaving the device), one host
+        sync at the end for the bookkeeping."""
+        sched = self.scheduler
+        sched.ensure_growth()
+        running = sched.running_slots()
+        tokens, steps, rids, gidx = sched.step_arrays()
+        k = self._micro_run_len()
+        tables = self._device_tables()
+        rids_d = jnp.asarray(rids)
+        tok_d = jnp.asarray(tokens[:, None])
+        toks, rows = [], []
+        for j in range(k):
+            tok, row, self.paged = self._decode(
+                self.params, self.paged, tok_d, jnp.asarray(steps + j),
+                tables, rids_d, jnp.asarray(gidx + j))
+            toks.append(tok)
+            rows.append(row)
+            tok_d = tok[:, None]
+            self.n_decode_steps += 1
+        tok_np = np.asarray(jnp.stack(toks))                 # (k, n_slots)
+        row_np = (np.asarray(jnp.stack(rows))
+                  if self.serve.record_logits else None)
+        now = time.perf_counter()
+        for j in range(k):
+            for slot in running:
+                if sched.slots[slot] is None:                # finished early
+                    continue
+                req = sched.requests[sched.slots[slot].rid]
+                sched.advance(slot, tok_np[j, slot])
+                if row_np is not None:
+                    self.logits_rows[req.rid].append(row_np[j, slot])
+                if req.done:
+                    sched.finish(slot, now)
+
+
+# ---------------------------------------------------------------------------
+# static-batch reference loop
+# ---------------------------------------------------------------------------
+
+def static_generate(cfg, params, prompts, gen: int, *, max_len: int,
+                    temperature: float = 0.0, seed: int = 0,
+                    attn_impl: str = "reference", collect_logits: bool = False,
+                    rids=None, extra=None):
+    """Fixed-batch prefill + decode: the engine's oracle and the launcher's
+    ``--engine static`` path.
+
+    Every token — including the first — is sampled with the per-(request,
+    token-index) key scheme, so runs are reproducible from ``seed`` and
+    comparable stream-for-stream with the continuous engine when ``rids``
+    matches the engine's request ids (default: 0..B-1 in batch order).
+
+    Returns generated tokens (B, gen) int32, plus the per-step logits rows
+    [(B, V)] * gen when ``collect_logits``.
+    """
+    model = get_model(cfg)
+    b = prompts.shape[0]
+    rids = (jnp.arange(b, dtype=jnp.int32) if rids is None
+            else jnp.asarray(rids, jnp.int32))
+    kw = {"attn_impl": attn_impl} if cfg.family != "ssm" else {}
+    extra = extra or {}
+
+    def prefill_fn(params, tokens, rids):
+        logits, cache = model.prefill(params, tokens, max_len=max_len,
+                                      last_only=True, **extra, **kw)
+        row = logits[:, -1]
+        tok = sample_tokens(row, rids, jnp.zeros((b,), jnp.int32),
+                            temperature=temperature, seed=seed)
+        return tok, row, cache
+
+    def decode_fn(params, cache, token, rids, gidx):
+        logits, cache = model.decode_step(params, cache, token)
+        row = logits[:, -1]
+        tok = sample_tokens(row, rids, gidx, temperature=temperature,
+                            seed=seed)
+        return tok, row, cache
+
+    prefill_j = jax.jit(prefill_fn)
+    decode_j = jax.jit(decode_fn)
+
+    tok, row, cache = prefill_j(params, prompts, rids)
+    toks, rows = [tok], [row]
+    for t in range(1, gen):
+        tok, row, cache = decode_j(params, cache,
+                                   tok[:, None].astype(jnp.int32), rids,
+                                   jnp.full((b,), t, jnp.int32))
+        toks.append(tok)
+        rows.append(row)
+    jax.block_until_ready(tok)
+    out = np.stack([np.asarray(t) for t in toks], axis=1).astype(np.int32)
+    if collect_logits:
+        return out, [np.asarray(r) for r in rows]
+    return out

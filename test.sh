@@ -27,4 +27,6 @@ if [[ "$FAST" == "0" ]]; then
   python -m benchmarks.run_dryrun_all --mesh single \
     --archs qwen3-1.7b --shapes train_4k --timeout 900 \
     --out results/dryrun-smoke
+  # serving engine smoke: continuous == static streams, one decode compile
+  python -m benchmarks.serve_bench --smoke --out results/BENCH_serve_smoke.json
 fi

@@ -1,11 +1,14 @@
 """Pallas flash decode vs the decode oracle: valid-len masking, GQA,
-ring-buffer mode, dtype and block-size sweeps."""
+ring-buffer mode, dtype and block-size sweeps — plus the paged variant
+(page-table indirection via scalar prefetch, DESIGN.md §12)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.flash_decode.kernel import flash_decode, flash_decode_paged
 from repro.kernels.flash_decode.ops import decode_attention
+from repro.kernels.flash_decode.ref import flash_decode_paged_ref
 from repro.models.attention import decode_attend, decode_attend_ring
 
 
@@ -46,6 +49,67 @@ def test_ring_mode(rng):
     step = jnp.asarray([400, 90], jnp.int32)          # one wrapped, one not
     o = decode_attention(q, k, v, step, window=s, blk_k=64)
     ref = decode_attend_ring(q, k, v, step, window=s)
+    assert float(jnp.abs(o - ref).max()) < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# paged variant
+# ---------------------------------------------------------------------------
+
+def _paged_setup(rng, b=3, h=4, hkv=2, hd=64, n_pages=16, ps=16):
+    ks = jax.random.split(rng, 4)
+    q = jax.random.normal(ks[0], (b * h, 1, hd))
+    k_pool = jax.random.normal(ks[1], (hkv, n_pages, ps, hd))
+    v_pool = jax.random.normal(ks[2], (hkv, n_pages, ps, hd))
+    return q, k_pool, v_pool
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_paged_matches_ref(h, hkv, rng):
+    """Interpret-mode paged kernel vs the gather-then-dense oracle, with
+    scattered pages, GQA, and valid_len cutting mid-page."""
+    b, hd, ps = 3, 64, 16
+    q, k_pool, v_pool = _paged_setup(rng, b=b, h=h, hkv=hkv, hd=hd, ps=ps)
+    pt = jnp.asarray([[5, 2, 9, 0], [11, 7, 0, 0], [3, 14, 8, 1]], jnp.int32)
+    valid = jnp.repeat(jnp.asarray([40, 17, 64], jnp.int32), h)
+    o = flash_decode_paged(q, k_pool, v_pool, pt, valid, interpret=True)
+    ref = flash_decode_paged_ref(q, k_pool, v_pool, pt, valid)
+    assert float(jnp.abs(o - ref).max()) < 2e-5
+
+
+def test_paged_identity_table_bitwise_dense(rng):
+    """With contiguous per-sequence pages the paged kernel streams the
+    same blocks as the dense kernel — outputs are bitwise equal."""
+    b, h, hkv, hd, ps, mp = 2, 4, 2, 64, 16, 4
+    q, k_pool, v_pool = _paged_setup(rng, b=b, h=h, hkv=hkv, hd=hd,
+                                     n_pages=1 + b * mp, ps=ps)
+    pt = (1 + jnp.arange(b * mp, dtype=jnp.int32)).reshape(b, mp)
+    valid = jnp.repeat(jnp.asarray([mp * ps, 37], jnp.int32), h)
+    kd = k_pool[:, pt]                      # (Hkv,B,MP,ps,hd)
+    kd = jnp.moveaxis(kd, 0, 1).reshape(b * hkv, mp * ps, hd)
+    vd = jnp.moveaxis(v_pool[:, pt], 0, 1).reshape(b * hkv, mp * ps, hd)
+    o_paged = flash_decode_paged(q, k_pool, v_pool, pt, valid,
+                                 interpret=True)
+    o_dense = flash_decode(q, kd, vd, valid, blk_k=ps, interpret=True)
+    assert jnp.array_equal(o_paged, o_dense)
+
+
+def test_paged_trash_page_never_leaks(rng):
+    """NaNs in the trash page (0) and in unowned pages must not reach the
+    output: unallocated entries sit past valid_len and their grid steps
+    are skipped."""
+    b, h, hkv, hd, ps = 2, 2, 2, 32, 16
+    q, k_pool, v_pool = _paged_setup(rng, b=b, h=h, hkv=hkv, hd=hd,
+                                     n_pages=8, ps=ps)
+    k_pool = k_pool.at[:, 0].set(jnp.nan).at[:, 5].set(jnp.nan)
+    v_pool = v_pool.at[:, 0].set(jnp.nan).at[:, 5].set(jnp.nan)
+    pt = jnp.asarray([[2, 3, 0], [4, 0, 0]], jnp.int32)   # page 5 unowned
+    valid = jnp.repeat(jnp.asarray([2 * ps, ps - 3], jnp.int32), h)
+    o = flash_decode_paged(q, k_pool, v_pool, pt, valid, interpret=True)
+    assert bool(jnp.isfinite(o).all())
+    ref = flash_decode_paged_ref(q, k_pool, v_pool,
+                                 jnp.asarray([[2, 3, 1], [4, 1, 1]]),
+                                 valid)     # same owned pages, clean filler
     assert float(jnp.abs(o - ref).max()) < 2e-5
 
 
