@@ -1,0 +1,230 @@
+"""Fleet-scale cohort engine: rounds/sec + host peak RSS vs registered
+fleet size (DESIGN.md §13).
+
+The vmapped baseline is the plain synchronous loop with the WHOLE fleet
+as the cohort (``n_clients = R``): one width-R vmapped local-training
+trace and an (R, steps, ...) batch pytree per round — the coupling of
+fleet size to round cost that the cohort engine removes.  The cohort
+rows run the chunk-streamed engine (``n_registered = R``, a fixed
+16-client cohort streamed in 4-client chunks): per-registered-client
+host state is three fleet-EMA scalars, and everything else is O(chunk).
+
+Each (mode, R) row runs in its OWN subprocess (``--worker``):
+``ru_maxrss`` is a process-lifetime high-water mark, so rows sharing a
+process would all report the largest row's footprint.  Vmapped rows
+beyond ``vmapped_max`` are recorded as skipped with the reason (a
+width-10^5 vmap trace is neither compilable nor holdable on a host);
+that boundary is itself the result.
+
+Gates (what CI relies on): chunked == vmapped BITWISE at R == C
+(in-process, both modes fed the identical batch tensor); cohort-mode
+host RSS sub-linear in R (rss at the largest fleet <= 2x rss at the
+smallest, vs the 100x fleet growth); cohort rounds/sec >= the vmapped
+baseline's at the largest vmapped-runnable fleet.  Smoke mode records
+the perf gates but only fails on the bitwise one (CI wall clocks and
+RSS baselines are noisy); the full run (the committed artifact)
+enforces all three.
+
+Writes BENCH_cohort.json next to the other bench artifacts
+(EXPERIMENTS.md §Scale).
+
+    PYTHONPATH=src python -m benchmarks.cohort_bench [--smoke]
+        [--out BENCH_cohort.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+import resource
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+FULL = dict(n_blocks=4, d=16, hidden=16, out=4, steps=1, batch=2,
+            cohort=16, chunk=4, rounds=4, train_fraction=0.5, lr=2e-2,
+            registered=[1_000, 10_000, 100_000], vmapped_max=1_000)
+SMOKE = dict(n_blocks=4, d=16, hidden=16, out=4, steps=1, batch=2,
+             cohort=8, chunk=2, rounds=2, train_fraction=0.5, lr=2e-2,
+             registered=[64, 256], vmapped_max=64)
+
+
+def _np_batches(seed, rnd, ids, cfg):
+    """Pure (seed, round, ids) -> batch rows; the host only ever holds
+    len(ids) rows — the loader contract the engine's memory bound
+    rests on."""
+    ids = np.asarray(ids)
+    rng = np.random.default_rng((seed, rnd, int(ids[0]), len(ids)))
+    shape = (len(ids), cfg["steps"], cfg["batch"])
+    return {"x": rng.normal(0, 1, shape + (cfg["d"],)).astype(np.float32),
+            "y": rng.normal(0, 1, shape + (cfg["out"],)).astype(np.float32)}
+
+
+def _federation(cfg, mode, registered, seed):
+    import jax
+    from repro.core import FLConfig, Federation
+    from repro.models.toy import init_toy_mlp, toy_loss, toy_units
+    params = init_toy_mlp(jax.random.PRNGKey(seed),
+                          n_blocks=cfg["n_blocks"], d=cfg["d"],
+                          hidden=cfg["hidden"], out=cfg["out"])
+    assign = toy_units(params)
+    kw = dict(train_fraction=cfg["train_fraction"], lr=cfg["lr"],
+              packed=True, fused_agg="off")
+    if mode == "vmapped":
+        fl = FLConfig(n_clients=registered, **kw)
+    else:
+        fl = FLConfig(n_clients=cfg["cohort"], n_registered=registered,
+                      cohort_chunk=cfg["chunk"], **kw)
+    return Federation(loss_fn=toy_loss, params=params, assign=assign,
+                      fl=fl, seed=seed)
+
+
+def run_row(cfg, mode, registered, seed=0) -> dict:
+    """One (mode, R) measurement — the --worker payload."""
+    fed = _federation(cfg, mode, registered, seed)
+    if mode == "vmapped":
+        ids = np.arange(registered)
+        bf = lambda r: _np_batches(seed, r, ids, cfg)  # noqa: E731
+    else:
+        bf = lambda r, ids: _np_batches(seed, r, ids, cfg)  # noqa: E731
+    fed.server.run(1, bf)                   # compile + first-touch
+    t0 = time.perf_counter()
+    fed.server.run(cfg["rounds"], bf)
+    dt = time.perf_counter() - t0
+    return {"mode": mode, "registered": registered,
+            "rounds_per_s": cfg["rounds"] / dt,
+            "round_s": dt / cfg["rounds"],
+            "peak_rss_mb": resource.getrusage(
+                resource.RUSAGE_SELF).ru_maxrss / 1024.0,
+            "loss": float(fed.history[-1].loss)}
+
+
+def _spawn_row(cfg, mode, registered, seed=0) -> dict:
+    spec = json.dumps({"cfg": cfg, "mode": mode,
+                       "registered": registered, "seed": seed})
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.cohort_bench", "--worker",
+         spec], capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"worker {mode}/R={registered} failed:\n"
+                           f"{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def bitwise_gate(cfg, seed=0) -> bool:
+    """R == C: the engine must reproduce the plain vmapped loop
+    bit-for-bit on identical batches (the tentpole property, asserted
+    here on the bench model/config as well as in tests/test_cohort.py)."""
+    import jax
+    c = cfg["cohort"]
+    batches = _np_batches(seed, 0, np.arange(c), cfg)
+    ref = _federation(cfg, "vmapped", c, seed)
+    ref.server.run(2, lambda r: batches)
+    eng = _federation(cfg, "cohort", c, seed)
+    eng.server.run(2, lambda r, ids: jax.tree_util.tree_map(
+        lambda x: x[np.asarray(ids)], batches))
+    pa = jax.tree_util.tree_leaves(ref.server.params)
+    pb = jax.tree_util.tree_leaves(eng.server.params)
+    return all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(pa, pb)) and \
+        all(ra.loss == rb.loss for ra, rb in zip(ref.history, eng.history))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale run (small fleets, fewer rounds)")
+    ap.add_argument("--out", default="BENCH_cohort.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--worker", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    if args.worker is not None:
+        spec = json.loads(args.worker)
+        print(json.dumps(run_row(spec["cfg"], spec["mode"],
+                                 spec["registered"], spec["seed"])))
+        return None
+
+    cfg = SMOKE if args.smoke else FULL
+    failures = []
+    rows = []
+    for r in cfg["registered"]:
+        if r <= cfg["vmapped_max"]:
+            rows.append(_spawn_row(cfg, "vmapped", r, args.seed))
+        else:
+            rows.append({"mode": "vmapped", "registered": r,
+                         "skipped": f"width-{r} vmap is past the "
+                                    "single-host envelope (the trace and "
+                                    "the (R, steps, ...) batch pytree "
+                                    "both scale with R)"})
+        rows.append(_spawn_row(cfg, "cohort", r, args.seed))
+        last = [x for x in rows if x["registered"] == r]
+        print(" | ".join(
+            f"{x['mode']} R={x['registered']}: " +
+            (x["skipped"] if "skipped" in x else
+             f"{x['rounds_per_s']:.2f} rounds/s "
+             f"rss={x['peak_rss_mb']:.0f}MB") for x in last))
+
+    bit_ok = bitwise_gate(cfg, args.seed)
+    if not bit_ok:
+        failures.append("chunked engine diverged bitwise from the "
+                        "vmapped loop at R == C")
+
+    def _row(mode, r):
+        return next(x for x in rows
+                    if x["mode"] == mode and x["registered"] == r)
+
+    co_small = _row("cohort", cfg["registered"][0])
+    co_big = _row("cohort", cfg["registered"][-1])
+    vm_max = _row("vmapped", cfg["vmapped_max"])
+    co_at_vm = _row("cohort", cfg["vmapped_max"])
+    fleet_growth = cfg["registered"][-1] / cfg["registered"][0]
+    rss_ratio = co_big["peak_rss_mb"] / co_small["peak_rss_mb"]
+    rss_sublinear = rss_ratio <= 2.0
+    throughput_ok = co_at_vm["rounds_per_s"] >= vm_max["rounds_per_s"]
+    if not args.smoke:
+        if not rss_sublinear:
+            failures.append(
+                f"cohort host RSS grew {rss_ratio:.2f}x over a "
+                f"{fleet_growth:.0f}x fleet (gate: <= 2x)")
+        if not throughput_ok:
+            failures.append(
+                f"cohort rounds/s ({co_at_vm['rounds_per_s']:.2f}) fell "
+                f"below the vmapped baseline "
+                f"({vm_max['rounds_per_s']:.2f}) at "
+                f"R={cfg['vmapped_max']}")
+
+    import jax
+    report = {
+        "bench": "cohort",
+        "mode": "smoke" if args.smoke else "full",
+        "model": cfg,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "results": rows,
+        "bitwise_chunked_eq_vmapped": bit_ok,
+        "rss_ratio_largest_vs_smallest_fleet": rss_ratio,
+        "fleet_growth": fleet_growth,
+        "rss_sublinear": rss_sublinear,
+        "cohort_rounds_per_s_at_vmapped_max": co_at_vm["rounds_per_s"],
+        "vmapped_rounds_per_s_at_max": vm_max["rounds_per_s"],
+        "throughput_ok": throughput_ok,
+    }
+    report["sanity_ok"] = not failures
+    import os
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    if failures:
+        raise SystemExit("cohort bench gates FAILED: " +
+                         "; ".join(failures))
+    return report
+
+
+if __name__ == "__main__":
+    main()

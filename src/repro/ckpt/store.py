@@ -66,6 +66,12 @@ def save_server_state(path: str, server, extra: Optional[Dict] = None):
         if hasattr(jax.random, "key_data") else np.asarray(server.key).tolist(),
     }
     meta.update(extra or {})
+    if getattr(server, "_sel_base", 0):
+        # history_cap trimming active: the folded accounting totals are
+        # part of the restartable state (comm_summary reads them)
+        meta["sel_base"] = int(server._sel_base)
+        meta["comm_totals"] = {k: (int(v) if k == "rounds" else float(v))
+                               for k, v in server._comm_totals.items()}
     tree = server.params
     wrapped = False
     engine = getattr(server, "async_engine", None)
@@ -78,6 +84,17 @@ def save_server_state(path: str, server, extra: Optional[Dict] = None):
         meta["async"] = async_meta
         tree = {"params": server.params, "async_arrays": async_arrays}
         wrapped = True
+    cohort = getattr(server, "cohort_engine", None)
+    if cohort is not None and cohort.started:
+        # cohort-engine runs carry the fleet's per-client EMAs and, at
+        # a mid-round chunk boundary, the in-flight partial aggregate —
+        # both needed for a bit-exact resume (DESIGN.md §13)
+        cohort_meta, cohort_arrays = cohort.checkpoint_state()
+        meta["cohort"] = cohort_meta
+        if not wrapped:
+            tree = {"params": server.params}
+            wrapped = True
+        tree["cohort_arrays"] = cohort_arrays
     sel_state = getattr(server, "sel_state", None)
     if sel_state is not None:
         # scored selection (DESIGN.md §11): the strategy's live state
@@ -111,26 +128,41 @@ def restore_server_state(path: str, server):
             "this server's strategy is stateful but the checkpoint has "
             "no selection state; restore with the original strategy")
     sel_template = dict(sel_state._asdict()) if scored else None
-    if "async" in meta:
-        if engine is None:
-            raise ValueError(
-                "checkpoint holds buffered-async state; restore it into "
-                "a Federation configured with FLConfig.async_buffer > 0")
-        template = {"params": server.params,
-                    "async_arrays": engine.arrays_template(meta["async"])}
+    cohort = getattr(server, "cohort_engine", None)
+    if "async" in meta and engine is None:
+        raise ValueError(
+            "checkpoint holds buffered-async state; restore it into "
+            "a Federation configured with FLConfig.async_buffer > 0")
+    if "cohort" in meta and cohort is None:
+        raise ValueError(
+            "checkpoint holds cohort-engine state; restore it into a "
+            "Federation configured with the original "
+            "FLConfig.n_registered/cohort_chunk")
+    if "async" in meta or "cohort" in meta or scored:
+        template = {"params": server.params}
+        if "async" in meta:
+            template["async_arrays"] = engine.arrays_template(
+                meta["async"])
+        if "cohort" in meta:
+            template["cohort_arrays"] = cohort.arrays_template(
+                meta["cohort"])
         if scored:
             template["sel_state"] = sel_template
         tree = load_pytree(path, template)
         server.params = tree["params"]
-        engine.restore_state(meta["async"], tree["async_arrays"])
-    elif scored:
-        tree = load_pytree(path, {"params": server.params,
-                                  "sel_state": sel_template})
-        server.params = tree["params"]
+        if "async" in meta:
+            engine.restore_state(meta["async"], tree["async_arrays"])
+        if "cohort" in meta:
+            cohort.restore_state(meta["cohort"], tree["cohort_arrays"])
     else:
         server.params = load_pytree(path, server.params)
     if scored:
         server.sel_state = type(sel_state)(**tree["sel_state"])
+    if "sel_base" in meta:
+        server._sel_base = int(meta["sel_base"])
+        server._comm_totals = {
+            k: (int(v) if k == "rounds" else float(v))
+            for k, v in meta["comm_totals"].items()}
     if "history" in meta:
         from ..core.server import RoundRecord
         server.history = [RoundRecord(**r) for r in meta["history"]]

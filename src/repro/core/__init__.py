@@ -9,11 +9,12 @@ client     — ClientUpdate (Alg. 2): masked local training
 federation — the compiled federated round step
 server     — round orchestration (Alg. 1) + composable ServerHooks
 async_agg  — FedBuff-style semi-async buffered rounds + staleness registry
+cohort     — fleet-scale chunk-streamed cohort engine + sampler registry
 session    — the Federation facade (from_config -> fit/evaluate/comm)
 comm       — exact transfer-byte accounting (Table 4), per topology
 """
 from . import (freezing, masking, aggregation, client, federation, server,  # noqa: F401
-               comm, strategies, session, topology, async_agg)
+               comm, strategies, session, topology, async_agg, cohort)
 from .federation import FLConfig, build_round_step, build_fullmodel_round_step  # noqa: F401
 from .masking import (build_units, build_units_zoo, build_units_flat,  # noqa: F401
                       mask_tree, apply_mask, UnitAssignment,
@@ -36,3 +37,9 @@ from .async_agg import (AsyncRoundEngine, BufferedAggregator,  # noqa: F401
                         get_staleness, register_staleness,
                         registered_staleness, staleness_weights,
                         unregister_staleness)
+from .cohort import (ClientSampler, CohortContext, CohortEngine,  # noqa: F401
+                     FleetState, UnknownClientSamplerError,
+                     build_cohort_programs, fleet_init,
+                     get_client_sampler, register_client_sampler,
+                     registered_client_samplers, resolve_client_sampler,
+                     unregister_client_sampler)

@@ -20,6 +20,14 @@
   ~``n_slots/U`` of the model instead of a full-size masked tree, and
   the accumulate shares XLA's fused multiply-add with the dense
   einsum, so packed == dense holds bitwise.
+* ``packed_acc_init`` / ``packed_accumulate`` / ``packed_finalize`` —
+  the packed combiners factored into carry primitives: a float32
+  numerator carry, strict client-order scatter-accumulate, and a
+  denominator-side combine.  The cohort engine (core/cohort.py)
+  streams chunked cohorts through these, and the single-shot packed
+  functions above are literal init -> accumulate -> finalize
+  compositions, so chunked == single-shot holds bitwise by
+  construction.
 * ``hierarchical_edge_partials`` — stage 1 of the two-stage average on
   its own (per-edge partial means + weight mass), so the hub combine
   can run through the fused Pallas kernel (``kernels/masked_agg``).
@@ -42,18 +50,130 @@ from .masking import UnitAssignment, mask_tree, apply_mask
 PyTree = Any
 
 
-def _scalar_update(m, wf, g, d):
-    """Shared scalar-leaf branch: participation-weighted unit average.
+def packed_acc_init(assign: UnitAssignment, global_params,
+                    n_edges: Optional[int] = None) -> PyTree:
+    """Zero partial-aggregate carry for the packed scatter-accumulate.
 
-    ``m (C,)`` is the unit's selection column — the same einsum the
-    dense ``masked_fedavg`` runs, so packed and dense paths are
-    bit-identical on scalar leaves.
+    One float32 numerator buffer per leaf: ``g.shape`` for hub
+    aggregation, ``(n_edges,) + g.shape`` when the per-edge stage-1
+    partials are kept separate (hierarchical).  This is the state the
+    cohort engine carries across chunks (DESIGN.md §13); denominators
+    are functions of ``sel``/``weights`` alone and live in
+    ``packed_finalize``.
     """
-    wm = m * wf                                              # (C,)
-    denom = wm.sum()
-    num = jnp.tensordot(wm, d.astype(jnp.float32), axes=(0, 0))
-    upd = jnp.where(denom > 0, num / jnp.maximum(denom, 1e-9), 0.0)
-    return (g.astype(jnp.float32) + upd).astype(g.dtype)
+    lead = () if n_edges is None else (int(n_edges),)
+
+    def one(lu, g):
+        return jnp.zeros(lead + tuple(g.shape), jnp.float32)
+
+    from .masking import _is_leafunit
+    return jax.tree_util.tree_map(one, assign.leaf_units, global_params,
+                                  is_leaf=_is_leafunit)
+
+
+def packed_accumulate(assign: UnitAssignment, acc, packed_deltas, rows,
+                      valid, weights, edge_idx: Optional[jnp.ndarray] = None
+                      ) -> PyTree:
+    """Scatter-accumulate a block of packed client uploads into ``acc``.
+
+    Clients land strictly in their stacked order (the FEDn server
+    accumulating uploads one by one), so accumulating a cohort in one
+    call or streamed through any chunking of the same order produces
+    the identical float sequence — chunked == single-shot holds
+    bitwise by construction.  Stacked-leaf entries are ``(K, L, ...)``
+    slot deltas with ``rows``/``valid (K, L)``; scalar leaves carry
+    dense ``(K, ...)`` deltas with ``valid (K,)`` participation.  With
+    ``edge_idx (K,)`` each client lands in its edge's stage-1 partial
+    instead of the flat hub numerator.
+    """
+    wf = weights.astype(jnp.float32)
+
+    def one(lu, a, d, r, v):
+        df = d.astype(jnp.float32)
+        if lu.kind == "scalar":
+            wm = v * wf                                       # (K,)
+            if edge_idx is None:
+                def accumulate(num, xs):
+                    wm_c, d_c = xs
+                    return num + wm_c * d_c, None
+
+                num, _ = jax.lax.scan(accumulate, a, (wm, df))
+            else:
+                def accumulate(num, xs):
+                    e_c, wm_c, d_c = xs
+                    return num.at[e_c].add(wm_c * d_c), None
+
+                num, _ = jax.lax.scan(accumulate, a, (edge_idx, wm, df))
+            return num
+        wv = v * wf[:, None]                                  # (K, L)
+        if edge_idx is None:
+            nm = a.shape[0]
+            shape1 = (nm,) + (1,) * (df.ndim - 2)
+
+            def accumulate(num, xs):
+                # scatter the client's RAW slot rows + weights to full
+                # width, then one fused multiply-add: XLA contracts the
+                # dense einsum with fma, so pre-rounding the w*delta
+                # product would diverge in the last bit
+                r_c, wv_c, d_c = xs
+                d_full = jnp.zeros_like(num).at[r_c].set(d_c)
+                w_full = jnp.zeros((nm,), jnp.float32).at[r_c].set(wv_c)
+                return num + w_full.reshape(shape1) * d_full, None
+
+            num, _ = jax.lax.scan(accumulate, a, (r, wv, df))
+        else:
+            wd = df * wv.reshape(wv.shape + (1,) * (df.ndim - 2))
+
+            def accumulate(e_num, xs):
+                e_c, r_c, wd_c = xs
+                return e_num.at[e_c, r_c].add(wd_c), None
+
+            num, _ = jax.lax.scan(accumulate, a, (edge_idx, r, wd))
+        return num
+
+    from .masking import _is_leafunit
+    return jax.tree_util.tree_map(one, assign.leaf_units, acc,
+                                  packed_deltas, rows, valid,
+                                  is_leaf=_is_leafunit)
+
+
+def packed_finalize(assign: UnitAssignment, global_params, acc, sel,
+                    weights, membership: Optional[jnp.ndarray] = None
+                    ) -> PyTree:
+    """Combine accumulated packed numerators into new global params.
+
+    ``sel (C, U)`` / ``weights (C,)`` cover the FULL cohort (every
+    client whose upload was accumulated), so the per-unit denominators
+    are the dense path's own expressions regardless of how the
+    numerator was chunked.  With ``membership (E, C)`` the ``E``
+    stage-1 partials are summed at the hub first (hierarchical stage
+    2).  Units with zero participation keep the global value exactly.
+    """
+    wf = weights.astype(jnp.float32)
+
+    def one(lu, g, num):
+        if membership is not None:
+            num = num.sum(axis=0)
+        if lu.kind == "scalar":
+            wm = sel[:, lu.base] * wf
+            denom = (membership @ wm).sum(axis=0) if membership is not None \
+                else wm.sum()
+            upd = jnp.where(denom > 0, num / jnp.maximum(denom, 1e-9), 0.0)
+            return (g.astype(jnp.float32) + upd).astype(g.dtype)
+        nm = g.shape[0]
+        idx = lu.base + lu.stride * jnp.arange(nm)
+        if membership is not None:
+            wm = sel[:, idx] * wf[:, None]
+            denom = jnp.einsum("ec,cm->em", membership, wm).sum(axis=0)
+        else:
+            denom = (sel[:, idx] * wf[:, None]).sum(0)        # (nm,)
+        den_b = denom.reshape((nm,) + (1,) * (num.ndim - 1))
+        upd = jnp.where(den_b > 0, num / jnp.maximum(den_b, 1e-9), 0.0)
+        return (g.astype(jnp.float32) + upd).astype(g.dtype)
+
+    from .masking import _is_leafunit
+    return jax.tree_util.tree_map(one, assign.leaf_units, global_params,
+                                  acc, is_leaf=_is_leafunit)
 
 
 def fedavg(global_params, deltas, weights) -> PyTree:
@@ -117,39 +237,15 @@ def masked_fedavg_packed(global_params, packed_deltas, rows, valid, sel,
     of ``sel``/``weights`` alone and reuse the dense path's own
     expression.  Units with zero participation keep the global value
     exactly (zero denominator).
+
+    Composed from ``packed_acc_init`` / ``packed_accumulate`` /
+    ``packed_finalize`` — the same primitives the cohort engine streams
+    chunks through, so the chunked path is this function by
+    construction.
     """
-    wf = weights.astype(jnp.float32)
-
-    def one(lu, g, d, r, v):
-        if lu.kind == "scalar":
-            return _scalar_update(sel[:, lu.base], wf, g, d)
-        nm = g.shape[0]
-        idx = lu.base + lu.stride * jnp.arange(nm)
-        denom = (sel[:, idx] * wf[:, None]).sum(0)            # (nm,)
-        wv = v * wf[:, None]                                  # (C, L)
-        df = d.astype(jnp.float32)
-        shape1 = (nm,) + (1,) * (df.ndim - 2)
-
-        def accumulate(num, xs):
-            # scatter the client's RAW slot rows + weights to full
-            # width, then one fused multiply-add: XLA contracts the
-            # dense einsum with fma, so pre-rounding the w*delta
-            # product would diverge in the last bit
-            r_c, wv_c, d_c = xs
-            d_full = jnp.zeros_like(num).at[r_c].set(d_c)
-            w_full = jnp.zeros((nm,), jnp.float32).at[r_c].set(wv_c)
-            return num + w_full.reshape(shape1) * d_full, None
-
-        num, _ = jax.lax.scan(accumulate,
-                              jnp.zeros((nm,) + df.shape[2:]), (r, wv, df))
-        den_b = denom.reshape(shape1)
-        upd = jnp.where(den_b > 0, num / jnp.maximum(den_b, 1e-9), 0.0)
-        return (g.astype(jnp.float32) + upd).astype(g.dtype)
-
-    from .masking import _is_leafunit
-    return jax.tree_util.tree_map(one, assign.leaf_units, global_params,
-                                  packed_deltas, rows, valid,
-                                  is_leaf=_is_leafunit)
+    acc = packed_acc_init(assign, global_params)
+    acc = packed_accumulate(assign, acc, packed_deltas, rows, valid, weights)
+    return packed_finalize(assign, global_params, acc, sel, weights)
 
 
 def hierarchical_masked_fedavg_packed(global_params, packed_deltas, rows,
@@ -165,47 +261,13 @@ def hierarchical_masked_fedavg_packed(global_params, packed_deltas, rows,
     trained slots.  Per-edge denominators reuse the dense path's own
     ``sel``-based expression.
     """
-    wf = weights.astype(jnp.float32)
     mem = membership.astype(jnp.float32)
-    n_edges = mem.shape[0]
     edge_of = jnp.argmax(mem, axis=0)                         # (C,)
-
-    def one(lu, g, d, r, v):
-        if lu.kind == "scalar":
-            m = sel[:, lu.base]
-            wm = m * wf
-            df = d.astype(jnp.float32)
-            e_num = jnp.einsum("ec,c,c...->e...", mem, wm, df)
-            e_den = mem @ wm
-            num = e_num.sum(axis=0)
-            denom = e_den.sum(axis=0)
-            upd = jnp.where(denom > 0, num / jnp.maximum(denom, 1e-9), 0.0)
-            return (g.astype(jnp.float32) + upd).astype(g.dtype)
-        nm = g.shape[0]
-        idx = lu.base + lu.stride * jnp.arange(nm)
-        wm = sel[:, idx] * wf[:, None]                        # (C, nm)
-        e_den = jnp.einsum("ec,cm->em", mem, wm)              # (E, nm)
-        wv = v * wf[:, None]                                  # (C, L)
-        df = d.astype(jnp.float32)
-        wd = df * wv.reshape(wv.shape + (1,) * (df.ndim - 2))
-
-        def accumulate(e_num, xs):
-            e_c, r_c, wd_c = xs
-            return e_num.at[e_c, r_c].add(wd_c), None
-
-        e_num, _ = jax.lax.scan(
-            accumulate, jnp.zeros((n_edges, nm) + df.shape[2:]),
-            (edge_of, r, wd))
-        num = e_num.sum(axis=0)
-        den = e_den.sum(axis=0)
-        den_b = den.reshape((nm,) + (1,) * (num.ndim - 1))
-        upd = jnp.where(den_b > 0, num / jnp.maximum(den_b, 1e-9), 0.0)
-        return (g.astype(jnp.float32) + upd).astype(g.dtype)
-
-    from .masking import _is_leafunit
-    return jax.tree_util.tree_map(one, assign.leaf_units, global_params,
-                                  packed_deltas, rows, valid,
-                                  is_leaf=_is_leafunit)
+    acc = packed_acc_init(assign, global_params, n_edges=mem.shape[0])
+    acc = packed_accumulate(assign, acc, packed_deltas, rows, valid,
+                            weights, edge_idx=edge_of)
+    return packed_finalize(assign, global_params, acc, sel, weights,
+                           membership=mem)
 
 
 def hierarchical_edge_partials(deltas, sel, weights,
@@ -260,6 +322,7 @@ def hierarchical_masked_fedavg(global_params, deltas, sel, weights,
     """
     wf = weights.astype(jnp.float32)
     mem = membership.astype(jnp.float32)
+    edge_of = jnp.argmax(mem, axis=0)                            # (C,)
 
     def one(lu, g, d):
         if lu.kind == "scalar":
@@ -271,8 +334,17 @@ def hierarchical_masked_fedavg(global_params, deltas, sel, weights,
         wm = m * wf.reshape((-1,) + (1,) * (m.ndim - 1))         # (C[,nm])
         df = d.astype(jnp.float32)
         if m.ndim == 1:
-            # stage 1: per-edge partials
-            e_num = jnp.einsum("ec,c,c...->e...", mem, wm, df)   # (E, ...)
+            # stage 1: per-edge partials, clients landing in upload
+            # order — the same float sequence as the packed/chunked
+            # scatter-accumulate (an (E,C)@(C,…) matmul reduces in a
+            # different order and diverges in the last bit)
+            def accumulate(e_num, xs):
+                e_c, wm_c, d_c = xs
+                return e_num.at[e_c].add(wm_c * d_c), None
+
+            e_num, _ = jax.lax.scan(
+                accumulate, jnp.zeros((mem.shape[0],) + df.shape[1:]),
+                (edge_of, wm, df))
             e_den = mem @ wm                                     # (E,)
         else:
             e_num = jnp.einsum("ec,cm,cm...->em...", mem, wm, df)

@@ -278,13 +278,15 @@ def build_cohort_step(loss_fn: Callable, assign, fl,
       the ``unit_sqnorm`` gradient-norm telemetry (DESIGN.md §11) —
       the same hook, and bitwise the same values, as the sync round.
 
-    The vmapped trace is identical to ``_star_round_step``'s packed
-    branch, so a row here is bitwise the row the synchronous round
-    would have computed.
+    The vmapped trace is ``client.packed_cohort_fn`` — the identical
+    trace ``_star_round_step``'s packed branch and the chunked cohort
+    engine run (optionally shard_map'd over the ``(client,)`` mesh via
+    ``fl.client_shards``) — so a row here is bitwise the row the
+    synchronous round would have computed.
     """
-    from .client import local_update_packed
-    from .masking import packed_norm_hook, slot_plan
-    from .topology import _live_ctx, _selection_setup
+    from .client import packed_cohort_fn
+    from .masking import slot_plan
+    from .topology import _cohort_runner, _live_ctx, _selection_setup
     strat, ctx = _selection_setup(assign, fl, strategy, scores)
     if strat.dense:
         raise ValueError(
@@ -293,6 +295,9 @@ def build_cohort_step(loss_fn: Callable, assign, fl,
             "strategy (train_fraction < 1)")
     n_slots = fl.resolve_n_slots(ctx.n_units)
     scoring = strat.stateful
+    run_cohort = _cohort_runner(fl, fl.n_clients)
+    cohort_stage = packed_cohort_fn(loss_fn, assign, fl, loss_kwargs,
+                                    scoring=scoring)
 
     def select(key, sel_state=None):
         sel = strat.select(key, _live_ctx(ctx, sel_state))
@@ -303,16 +308,8 @@ def build_cohort_step(loss_fn: Callable, assign, fl,
     def cohort(global_params, sel, client_batches):
         rows, valid = jax.vmap(
             lambda s: slot_plan(assign, s, n_slots, global_params))(sel)
-
-        def one_client(rows_c, valid_c, batches):
-            return local_update_packed(
-                loss_fn, global_params, assign, rows_c, valid_c, batches,
-                lr=fl.lr, optimizer=fl.optimizer, prox_mu=fl.prox_mu,
-                loss_kwargs=loss_kwargs,
-                norm_hook=packed_norm_hook(assign, rows_c)
-                if scoring else None)
-
-        pdeltas, metrics = jax.vmap(one_client)(rows, valid, client_batches)
+        pdeltas, metrics = run_cohort(cohort_stage, global_params, rows,
+                                      valid, client_batches)
         out = {"loss_mean": metrics["loss_mean"]}
         if scoring:
             out["unit_sqnorm"] = metrics["unit_sqnorm"]

@@ -89,6 +89,35 @@ def local_update(loss_fn: Callable, global_params: PyTree, mask: PyTree,
     return delta, metrics
 
 
+def packed_cohort_fn(loss_fn: Callable, assign, fl,
+                     loss_kwargs: Optional[Dict] = None, *,
+                     scoring: bool = False) -> Callable:
+    """The vmapped packed local-training stage, shared verbatim by the
+    sync round step, the async dispatch, and the chunked cohort engine
+    (DESIGN.md §13).
+
+    Returns ``cohort(global_params, rows, valid, batches) -> (pdeltas,
+    metrics)`` with a leading client axis on everything but
+    ``global_params`` — exactly the shape contract
+    ``launch.mesh.shard_over_clients`` splits over the ``(client,)``
+    mesh, which is how all three call sites shard the same trace.
+    """
+    from .masking import packed_norm_hook
+
+    def cohort(global_params, rows, valid, batches):
+        def one(rows_c, valid_c, b):
+            return local_update_packed(
+                loss_fn, global_params, assign, rows_c, valid_c, b,
+                lr=fl.lr, optimizer=fl.optimizer, prox_mu=fl.prox_mu,
+                loss_kwargs=loss_kwargs,
+                norm_hook=packed_norm_hook(assign, rows_c)
+                if scoring else None)
+
+        return jax.vmap(one)(rows, valid, batches)
+
+    return cohort
+
+
 def local_update_packed(loss_fn: Callable, global_params: PyTree,
                         assign, rows: PyTree, valid: PyTree,
                         batches: PyTree, *, lr: float = 1e-2,

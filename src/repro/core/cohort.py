@@ -1,0 +1,649 @@
+"""Fleet-scale cohort engine: chunk-streamed rounds over a registered
+client fleet (DESIGN.md §13).
+
+The synchronous loop materializes the whole cohort at once: one
+``(C, steps, ...)`` batch pytree, one width-C vmapped local-training
+trace, one dense aggregate.  That couples *how many clients exist* to
+*how much memory one round takes* — a fleet of 10^5 registered edge
+nodes cannot even be enumerated, let alone vmapped.  This module breaks
+the coupling along three axes:
+
+* **Registered fleet vs. in-flight cohort** (``FLConfig.n_registered``):
+  the server knows R clients but trains an ``n_clients``-sized cohort
+  per round.  Host state per registered client is O(1) scalars — the
+  :class:`FleetState` loss/grad-norm EMAs — never a batch or a delta.
+* **Chunk streaming** (``FLConfig.cohort_chunk``): the cohort flows
+  through the round in fixed-size chunks, each chunk one compiled step
+  (static shapes — one compile for every chunk of every round), with a
+  scatter-accumulate partial aggregate carried across chunks
+  (``aggregation.packed_accumulate``).  Because the packed aggregation
+  is a strictly sequential per-client scan, *any* chunking in cohort
+  order is **bitwise-equal** to the single-shot vmapped round
+  (property-tested across topologies × strategies × chunk sizes,
+  including straggler dropout and mid-round checkpoint restore).
+* **Client-sampling plugin axis** (``@register_client_sampler``,
+  mirroring the selection-strategy registry): which R-fleet members
+  form the round's cohort.  ``uniform`` draws without replacement;
+  ``loss_proportional`` and ``telemetry_driven`` Gumbel-top-k against
+  the fleet's loss / gradient-norm EMAs — the same per-unit norm-hook
+  telemetry the scored selection engine reads (DESIGN.md §11), reduced
+  per client and EMA'd per fleet member.
+
+Sampler keys come off their own stateless stream
+(``fold_in(sampler_base, round)``), NOT the server key stream — so with
+R == C and any sampler the cohort is the identity and the engine's
+rounds are bitwise the plain loop's (the regression anchor), and a
+checkpoint needs no sampler RNG state.
+
+The engine mirrors ``Server.run_round``'s observable contract exactly —
+same key-stream order (round key drawn before hooks), same hook
+call points, same ``RoundRecord``/``sel_history``/telemetry layout — so
+every ``ServerHook`` (straggler dropout, accounting, checkpointing,
+logging) composes unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, ClassVar, Dict, List, Optional, Tuple, \
+    Type, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .registry import unknown_name_message
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# fleet state: O(1) host scalars per registered client
+
+@dataclasses.dataclass
+class FleetState:
+    """Per-registered-client signals the samplers read.
+
+    All ``(R,)`` numpy arrays — the ONLY per-registered-client host
+    state the engine keeps (batches and deltas exist per cohort chunk
+    only), which is what bounds host memory at fleet scale.
+    """
+    loss_ema: np.ndarray      # (R,) EMA of the client's round mean loss
+    norm_ema: np.ndarray      # (R,) EMA of the client's total grad norm
+    counts: np.ndarray        # (R,) participation counts (0 = unseen)
+    round: int = 0            # rounds the fleet has advanced through
+
+
+def fleet_init(n_registered: int) -> FleetState:
+    return FleetState(loss_ema=np.zeros((n_registered,), np.float32),
+                      norm_ema=np.zeros((n_registered,), np.float32),
+                      counts=np.zeros((n_registered,), np.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortContext:
+    """What a sampler sees when drawing a round's cohort."""
+    n_registered: int
+    cohort: int
+    fleet: FleetState
+
+
+# ---------------------------------------------------------------------------
+# client-sampler registry (mirrors strategies/topologies)
+
+class ClientSampler:
+    """Base class for cohort-sampling plugins.
+
+    ``sample(key, ctx)`` returns the round's cohort as a **sorted**
+    ``(cohort,)`` array of unique registered-client ids.  Sorted order
+    is load-bearing: with R == C every sampler then returns
+    ``arange(C)`` and the engine's rounds are bitwise the plain loop's.
+    ``needs_norms`` turns the per-unit gradient-norm hook on inside
+    local training so :class:`FleetState.norm_ema` gets fed.
+    """
+
+    name: ClassVar[str] = ""
+    needs_norms: ClassVar[bool] = False
+
+    def sample(self, key, ctx: CohortContext) -> np.ndarray:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+_SAMPLERS: Dict[str, ClientSampler] = {}
+
+
+class UnknownClientSamplerError(ValueError):
+    pass
+
+
+def register_client_sampler(obj: Union[Type[ClientSampler], ClientSampler],
+                            *, name: Optional[str] = None):
+    """Register a sampler class (instantiated with no args) or instance.
+
+    Usable as a decorator::
+
+        @register_client_sampler
+        class Mine(ClientSampler):
+            name = "mine"
+            ...
+    """
+    sampler = obj() if isinstance(obj, type) else obj
+    key = name or sampler.name
+    if not key:
+        raise ValueError(f"client sampler {obj!r} has no name")
+    _SAMPLERS[key] = sampler
+    return obj
+
+
+def unregister_client_sampler(name: str):
+    _SAMPLERS.pop(name, None)
+
+
+def registered_client_samplers() -> Tuple[str, ...]:
+    return tuple(sorted(_SAMPLERS))
+
+
+def get_client_sampler(name: str) -> ClientSampler:
+    try:
+        return _SAMPLERS[name]
+    except KeyError:
+        raise UnknownClientSamplerError(unknown_name_message(
+            "client sampler", name, _SAMPLERS)) from None
+
+
+def resolve_client_sampler(spec: Union[str, ClientSampler, None]
+                           ) -> ClientSampler:
+    """Name or instance -> instance (None -> the uniform default)."""
+    if spec is None:
+        return get_client_sampler("uniform")
+    return get_client_sampler(spec) if isinstance(spec, str) else spec
+
+
+def _uniform_draw(key, n_registered: int, cohort: int) -> np.ndarray:
+    perm = np.asarray(jax.random.permutation(key, n_registered))
+    return np.sort(perm[:cohort]).astype(np.int32)
+
+
+def _scored_draw(key, signal: np.ndarray, seen: np.ndarray,
+                 cohort: int) -> np.ndarray:
+    """Gumbel-top-k draw ∝ softmax of the z-scored signal.
+
+    Unseen clients take the *maximum* seen signal (optimistic
+    initialization: every fleet member gets sampled eventually), and
+    with no signal at all the draw degrades to uniform on the same key.
+    """
+    if not seen.any():
+        return _uniform_draw(key, signal.shape[0], cohort)
+    s = np.where(seen, signal, signal[seen].max()).astype(np.float64)
+    z = (s - s.mean()) / (s.std() + 1e-6)
+    g = np.asarray(jax.random.gumbel(key, s.shape), np.float64)
+    top = np.argsort(-(z + g), kind="stable")[:cohort]
+    return np.sort(top).astype(np.int32)
+
+
+@register_client_sampler
+class UniformSampler(ClientSampler):
+    """Uniform without replacement — the FedAvg default."""
+    name = "uniform"
+
+    def sample(self, key, ctx):
+        return _uniform_draw(key, ctx.n_registered, ctx.cohort)
+
+
+@register_client_sampler
+class LossProportionalSampler(ClientSampler):
+    """Prefer clients whose recent loss EMA is high (they have the most
+    to learn from another round)."""
+    name = "loss_proportional"
+
+    def sample(self, key, ctx):
+        return _scored_draw(key, ctx.fleet.loss_ema,
+                            ctx.fleet.counts > 0, ctx.cohort)
+
+
+@register_client_sampler
+class TelemetryDrivenSampler(ClientSampler):
+    """Prefer clients whose gradient-norm EMA is high — the fleet-level
+    analogue of score-weighted unit selection (DESIGN.md §11), fed by
+    the same norm-hook telemetry."""
+    name = "telemetry_driven"
+    needs_norms = True
+
+    def sample(self, key, ctx):
+        return _scored_draw(key, ctx.fleet.norm_ema,
+                            ctx.fleet.counts > 0, ctx.cohort)
+
+
+# ---------------------------------------------------------------------------
+# compiled programs
+
+@dataclasses.dataclass
+class CohortPrograms:
+    """The engine's four compiled pieces plus resolved plugins.
+
+    * ``select(key[, sel_state]) -> sel (C, U)`` — the round's
+      per-client trained-unit selection (bitwise the sync round's);
+    * ``acc_init(global) -> acc`` — the zero partial aggregate;
+    * ``chunk(global, acc, sel_chunk, w_chunk, positions, batches) ->
+      (acc, {"loss"[, "unit_sqnorm"]})`` — one chunk's packed local
+      training folded into the carry (static shapes: one compile
+      serves every chunk of every round);
+    * ``finalize(global, acc, sel, weights, losses) -> (new_global,
+      loss_mean)`` — full-cohort denominators + the round loss.
+    """
+    select: Callable
+    acc_init: Callable
+    chunk: Callable
+    finalize: Callable
+    sampler: ClientSampler
+    strategy: Any
+    scoring: bool
+    n_slots: int
+
+
+def build_cohort_programs(loss_fn: Callable, assign, fl,
+                          loss_kwargs: Optional[Dict] = None, *,
+                          strategy=None, scores=None,
+                          topology=None) -> CohortPrograms:
+    """Build the chunk-streamed round's compiled programs.
+
+    The chunk program is the sync packed round step's selection +
+    vmapped packed local training (``client.packed_cohort_fn`` — the
+    same trace, optionally shard_map'd over the ``(client,)`` mesh via
+    ``fl.client_shards``) followed by ``Topology.build_chunk_agg``'s
+    scatter-accumulate.  Streaming every chunk and finalizing is
+    bitwise the single-shot ``masked_fedavg_packed`` by construction:
+    the accumulate is a sequential per-client scan, and splitting a
+    scan across calls changes nothing about its float-add order.
+    """
+    from .client import packed_cohort_fn
+    from .masking import slot_plan
+    from .topology import (_cohort_runner, _live_ctx, _selection_setup,
+                           resolve_topology)
+    topo = resolve_topology(topology if topology is not None
+                            else fl.topology)
+    strat, ctx = _selection_setup(assign, fl, strategy, scores)
+    if strat.dense:
+        raise ValueError(
+            "the chunked cohort engine carries packed trained-slot "
+            "deltas; the dense 'full' strategy has nothing to pack — "
+            "use a partial strategy (train_fraction < 1)")
+    sampler = resolve_client_sampler(fl.client_sampler)
+    n_slots = fl.resolve_n_slots(ctx.n_units)
+    scoring = strat.stateful or sampler.needs_norms
+    acc_init, accumulate, finalize_agg = topo.build_chunk_agg(assign, fl)
+    chunk_width = fl.cohort_chunk or fl.n_clients
+    run_cohort = _cohort_runner(fl, chunk_width)
+    cohort = packed_cohort_fn(loss_fn, assign, fl, loss_kwargs,
+                              scoring=scoring)
+
+    def select(key, sel_state=None):
+        sel = strat.select(key, _live_ctx(ctx, sel_state))
+        if fl.always_train_head:
+            sel = sel.at[:, -1].set(1.0)
+        return sel
+
+    def chunk_step(global_params, acc, sel_chunk, w_chunk, positions,
+                   batches):
+        rows, valid = jax.vmap(
+            lambda s: slot_plan(assign, s, n_slots, global_params)
+        )(sel_chunk)
+        pdeltas, metrics = run_cohort(cohort, global_params, rows, valid,
+                                      batches)
+        acc = accumulate(acc, pdeltas, rows, valid, w_chunk, positions)
+        out = {"loss": metrics["loss_mean"]}
+        if scoring:
+            out["unit_sqnorm"] = metrics["unit_sqnorm"]
+        return acc, out
+
+    def finalize(global_params, acc, sel, weights, losses):
+        new_params = finalize_agg(global_params, acc, sel, weights)
+        # same jnp.mean over the same (C,) values the sync round step
+        # reduces, so the recorded loss is bitwise the sync round's
+        return new_params, losses.mean()
+
+    return CohortPrograms(
+        select=jax.jit(select), acc_init=jax.jit(acc_init),
+        chunk=jax.jit(chunk_step), finalize=jax.jit(finalize),
+        sampler=sampler, strategy=strat, scoring=scoring, n_slots=n_slots)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+
+class CohortEngine:
+    """Drives chunk-streamed rounds over a registered fleet.
+
+    A round is three phases — ``begin_round`` (sample the cohort, draw
+    the selection, zero the partial aggregate), ``step_chunk`` × the
+    chunk count (stream one chunk's batches through packed local
+    training into the carry), ``finish_round`` (full-cohort finalize,
+    record, telemetry, fleet EMAs) — composed by ``run_round``/``run``.
+    Host memory in flight is O(chunk) batches + O(cohort) selection
+    rows + one packed accumulator, regardless of R.
+
+    ``batch_fn(round_idx, client_ids) -> (len(ids), steps, ...)``
+    pytree is the loader contract (``FederatedLoader.client_batches``):
+    the host never materializes more than one chunk of batches.
+
+    Checkpointing: ``checkpoint_state``/``restore_state`` carry the
+    fleet EMAs and — mid-round — the partial aggregate, streamed-chunk
+    counter, cohort ids/selection/weights and per-chunk losses, so a
+    restore at any chunk boundary resumes bitwise (the server key
+    stream was already advanced by ``begin_round`` and is saved by the
+    ordinary server checkpoint).
+    """
+
+    def __init__(self, server, assign, fl, *, programs: CohortPrograms,
+                 seed: int = 0):
+        self.server = server
+        self.assign = assign
+        self.fl = fl
+        self.programs = programs
+        self.n_registered = fl.n_registered or fl.n_clients
+        self.chunk = fl.cohort_chunk or fl.n_clients
+        self.n_chunks = fl.n_clients // self.chunk
+        self.fleet = fleet_init(self.n_registered)
+        # stateless sampler key stream: round r's draw is a pure
+        # function of (seed, r), independent of the server stream —
+        # nothing to checkpoint, and the server stream stays bitwise
+        # identical to the plain loop's
+        self._sampler_base = jax.random.fold_in(
+            jax.random.PRNGKey(seed), 0x0C0F0E)
+        self._partial: Optional[Dict[str, Any]] = None
+
+    @property
+    def started(self) -> bool:
+        return self.fleet.round > 0 or self._partial is not None
+
+    # -- the three phases -------------------------------------------------
+
+    def begin_round(self, weights=None) -> Dict[str, Any]:
+        server = self.server
+        if self._partial is not None:
+            raise RuntimeError(
+                "a cohort round is already in flight; stream its "
+                "remaining chunks and finish_round() first")
+        r = len(server.history)
+        t0 = time.perf_counter()
+        # SAME key-stream slot as Server.run_round: round key first,
+        # then hooks (StragglerDropout) draw — bitwise-equal streams
+        rk = server.next_key()
+        sk = jax.random.fold_in(self._sampler_base, r)
+        ids = np.asarray(self.programs.sampler.sample(
+            sk, CohortContext(self.n_registered, self.fl.n_clients,
+                              self.fleet)), np.int32)
+        c = self.fl.n_clients
+        if weights is None:
+            w = jnp.ones((c,), jnp.float32)
+        else:
+            wr = np.asarray(weights, np.float32)
+            if wr.shape[0] == c:
+                w = jnp.asarray(wr)
+            elif wr.shape[0] == self.n_registered:
+                w = jnp.asarray(wr[ids])    # fleet weights -> cohort view
+            else:
+                raise ValueError(
+                    f"weights must have length n_clients={c} (cohort) or "
+                    f"n_registered={self.n_registered} (fleet), got "
+                    f"{wr.shape[0]}")
+        for hook in server.hooks:
+            new_w = hook.on_round_start(server, r, w)
+            if new_w is not None:
+                w = new_w
+        w_np = np.asarray(w, np.float32)
+        n_part = int(np.count_nonzero(w_np))
+        p: Dict[str, Any] = {
+            "round": r, "t0": t0, "ids": ids, "w": jnp.asarray(w_np),
+            "eff_w": [float(x) for x in w_np], "n_part": n_part,
+            "chunk": 0, "losses": [], "sqnorms": [],
+            "skipped": n_part == 0, "sel": None, "acc": None,
+        }
+        if n_part:
+            st = server.sel_state
+            sel = self.programs.select(rk) if st is None \
+                else self.programs.select(rk, st)
+            p["sel"] = sel
+            p["acc"] = self.programs.acc_init(server.global_params())
+        self._partial = p
+        return p
+
+    def step_chunk(self, batch_fn: Callable[[int, np.ndarray], Any]):
+        p = self._partial
+        if p is None:
+            raise RuntimeError("no cohort round in flight; begin_round "
+                               "first")
+        if p["skipped"]:
+            return
+        j = p["chunk"]
+        if j >= self.n_chunks:
+            raise RuntimeError(
+                f"all {self.n_chunks} chunks of round {p['round']} are "
+                "already streamed; finish_round()")
+        lo, hi = j * self.chunk, (j + 1) * self.chunk
+        pos = np.arange(lo, hi)
+        batches = batch_fn(p["round"], p["ids"][pos])
+        acc, mets = self.programs.chunk(
+            self.server.global_params(), p["acc"], p["sel"][lo:hi],
+            p["w"][lo:hi], jnp.asarray(pos, jnp.int32), batches)
+        p["acc"] = acc
+        p["losses"].append(np.asarray(mets["loss"], np.float32))
+        if "unit_sqnorm" in mets:
+            p["sqnorms"].append(np.asarray(mets["unit_sqnorm"],
+                                           np.float32))
+        p["chunk"] = j + 1
+
+    def finish_round(self):
+        from .server import RoundRecord
+        p = self._partial
+        if p is None:
+            raise RuntimeError("no cohort round in flight; begin_round "
+                               "first")
+        server = self.server
+        r = p["round"]
+        c = self.fl.n_clients
+        if p["skipped"]:
+            rec = RoundRecord(r, float("nan"), None,
+                              time.perf_counter() - p["t0"], 0.0, 0.0,
+                              n_participants=0, skipped=True,
+                              effective_weights=p["eff_w"])
+            server.sel_history.append(
+                np.zeros((c, self.assign.n_units), np.float32))
+            metrics = None
+        else:
+            if p["chunk"] != self.n_chunks:
+                raise RuntimeError(
+                    f"round {r} has streamed {p['chunk']}/"
+                    f"{self.n_chunks} chunks; step_chunk the rest first")
+            losses = jnp.concatenate(
+                [jnp.asarray(x) for x in p["losses"]]) \
+                if len(p["losses"]) > 1 else jnp.asarray(p["losses"][0])
+            new_params, loss_mean = self.programs.finalize(
+                server.global_params(), p["acc"], p["sel"], p["w"],
+                losses)
+            server.params = new_params   # star topologies: state==params
+            server.sel_history.append(np.asarray(p["sel"]))
+            metrics = {"loss_mean": loss_mean, "loss_per_client": losses,
+                       "sel": p["sel"]}
+            if p["sqnorms"]:
+                metrics["unit_sqnorm"] = np.concatenate(p["sqnorms"],
+                                                        axis=0)
+            ev = None
+            if server.eval_fn is not None:
+                ev = float(server.eval_fn(server.global_params()))
+            rec = RoundRecord(r, float(loss_mean), ev,
+                              time.perf_counter() - p["t0"], 0.0, 0.0,
+                              n_participants=p["n_part"],
+                              effective_weights=p["eff_w"])
+        # selection-state telemetry BEFORE end-of-round hooks, exactly
+        # like the sync loop (a Checkpointer hook must save post-round
+        # state for bit-exact mid-fit resume)
+        server.update_sel_state(server._round_telemetry(r, metrics,
+                                                        p["eff_w"]))
+        self._update_fleet(p, metrics)
+        for hook in server.hooks:
+            hook.on_round_end(server, rec, metrics)
+        rec.seconds = time.perf_counter() - p["t0"]
+        server.history.append(rec)
+        server._trim_history()
+        self._partial = None
+        return rec
+
+    def _update_fleet(self, p: Dict[str, Any],
+                      metrics: Optional[Dict]) -> None:
+        """Fold the round into the fleet EMAs at the *sampled* ids.
+        Dropped clients (effective weight 0) contributed nothing and
+        update nothing, matching the aggregation and sel-state rules."""
+        f = self.fleet
+        if metrics is not None:
+            active = np.asarray(p["eff_w"], np.float32) > 0
+            act = p["ids"][active]
+            if act.size:
+                e = self.fl.sampler_ema
+                seen = f.counts[act] > 0
+                loss = np.asarray(metrics["loss_per_client"],
+                                  np.float32)[active]
+                f.loss_ema[act] = np.where(
+                    seen, e * f.loss_ema[act] + (1.0 - e) * loss, loss)
+                if "unit_sqnorm" in metrics:
+                    norm = np.asarray(metrics["unit_sqnorm"],
+                                      np.float32)[active].sum(axis=1)
+                    f.norm_ema[act] = np.where(
+                        seen, e * f.norm_ema[act] + (1.0 - e) * norm,
+                        norm)
+                f.counts[act] += 1
+        f.round += 1
+
+    # -- composed loops ---------------------------------------------------
+
+    def run_round(self, batch_fn: Callable[[int, np.ndarray], Any],
+                  weights=None):
+        """One full round; resumes a restored mid-round partial (whose
+        hooks and key draws already happened) instead of re-beginning."""
+        if self._partial is None:
+            self.begin_round(weights)
+        p = self._partial
+        while not p["skipped"] and p["chunk"] < self.n_chunks:
+            self.step_chunk(batch_fn)
+        return self.finish_round()
+
+    def run(self, rounds: int, batch_fn: Callable[[int, np.ndarray], Any],
+            weights=None, log_every: int = 0):
+        from .server import RoundLogger
+        server = self.server
+        extra = [RoundLogger(log_every,
+                             total=len(server.history) + rounds,
+                             base=len(server.history))] if log_every else []
+        server.hooks.extend(extra)
+        try:
+            for _ in range(rounds):
+                self.run_round(batch_fn, weights)
+        finally:
+            for h in extra:
+                server.hooks.remove(h)
+        for hook in server.hooks:
+            hook.on_fit_end(server, server.history)
+        return server.history
+
+    # -- checkpoint state (ckpt/store.py) ---------------------------------
+
+    def checkpoint_state(self) -> Tuple[Dict[str, Any], PyTree]:
+        """(json metadata, array pytree): fleet EMAs always, plus the
+        in-flight round's carry when saving at a chunk boundary."""
+        meta: Dict[str, Any] = {
+            "fleet_round": int(self.fleet.round),
+            "n_registered": int(self.n_registered),
+        }
+        arrays: Dict[str, Any] = {"fleet": {
+            "loss_ema": self.fleet.loss_ema,
+            "norm_ema": self.fleet.norm_ema,
+            "counts": self.fleet.counts,
+        }}
+        p = self._partial
+        if p is not None:
+            meta["partial"] = {
+                "round": int(p["round"]), "chunk": int(p["chunk"]),
+                "n_part": int(p["n_part"]),
+                "eff_w": [float(x) for x in p["eff_w"]],
+                "skipped": bool(p["skipped"]),
+                "scored": bool(self.programs.scoring),
+            }
+            pa: Dict[str, Any] = {
+                "ids": np.asarray(p["ids"], np.int32),
+                "w": np.asarray(p["w"], np.float32),
+            }
+            if not p["skipped"]:
+                pa["sel"] = np.asarray(p["sel"], np.float32)
+                pa["acc"] = jax.tree_util.tree_map(np.asarray, p["acc"])
+                if p["losses"]:
+                    pa["losses"] = np.concatenate(p["losses"])
+                if p["sqnorms"]:
+                    pa["sqnorm"] = np.concatenate(p["sqnorms"], axis=0)
+            arrays["partial"] = pa
+        return meta, arrays
+
+    def arrays_template(self, meta: Dict[str, Any]) -> PyTree:
+        sds = jax.ShapeDtypeStruct
+        n_r = int(meta["n_registered"])
+        tpl: Dict[str, Any] = {"fleet": {
+            "loss_ema": sds((n_r,), jnp.float32),
+            "norm_ema": sds((n_r,), jnp.float32),
+            "counts": sds((n_r,), jnp.int32),
+        }}
+        pm = meta.get("partial")
+        if pm is not None:
+            c = self.fl.n_clients
+            pa: Dict[str, Any] = {"ids": sds((c,), jnp.int32),
+                                  "w": sds((c,), jnp.float32)}
+            if not pm["skipped"]:
+                pa["sel"] = sds((c, self.assign.n_units), jnp.float32)
+                pa["acc"] = jax.eval_shape(self.programs.acc_init,
+                                           self.server.global_params())
+                done = int(pm["chunk"]) * self.chunk
+                if done:
+                    pa["losses"] = sds((done,), jnp.float32)
+                    if pm.get("scored"):
+                        pa["sqnorm"] = sds((done, self.assign.n_units),
+                                           jnp.float32)
+            tpl["partial"] = pa
+        return tpl
+
+    def restore_state(self, meta: Dict[str, Any], arrays: PyTree):
+        if int(meta["n_registered"]) != self.n_registered:
+            raise ValueError(
+                f"checkpoint fleet has {meta['n_registered']} registered "
+                f"clients, this engine {self.n_registered}; restore with "
+                "the original FLConfig.n_registered")
+        fa = arrays["fleet"]
+        # np.array (copy): views of jnp arrays are read-only, and the
+        # fleet EMAs are updated in place every round
+        self.fleet = FleetState(
+            loss_ema=np.array(fa["loss_ema"], np.float32),
+            norm_ema=np.array(fa["norm_ema"], np.float32),
+            counts=np.array(fa["counts"], np.int32),
+            round=int(meta["fleet_round"]))
+        pm = meta.get("partial")
+        if pm is None:
+            self._partial = None
+            return
+        pa = arrays["partial"]
+        p: Dict[str, Any] = {
+            "round": int(pm["round"]), "t0": time.perf_counter(),
+            "ids": np.asarray(pa["ids"], np.int32),
+            "w": jnp.asarray(np.asarray(pa["w"], np.float32)),
+            "eff_w": [float(x) for x in pm["eff_w"]],
+            "n_part": int(pm["n_part"]), "chunk": int(pm["chunk"]),
+            "skipped": bool(pm["skipped"]),
+            "losses": [], "sqnorms": [], "sel": None, "acc": None,
+        }
+        if not p["skipped"]:
+            p["sel"] = jnp.asarray(np.asarray(pa["sel"], np.float32))
+            p["acc"] = jax.tree_util.tree_map(jnp.asarray, pa["acc"])
+            if "losses" in pa:
+                p["losses"] = [np.asarray(pa["losses"], np.float32)]
+            if "sqnorm" in pa:
+                p["sqnorms"] = [np.asarray(pa["sqnorm"], np.float32)]
+        self._partial = p

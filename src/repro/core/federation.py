@@ -96,6 +96,31 @@ class FLConfig:
     # every this many rounds/flushes (1 = every round; the round
     # counter advances regardless)
     score_every: int = 1
+    # --- fleet-scale cohort engine (core/cohort.py, DESIGN.md §13) ---
+    # registered fleet size R: >0 attaches the CohortEngine, which
+    # samples an n_clients-sized cohort out of R registered clients
+    # every round (host state stays O(R) scalars + O(cohort) arrays)
+    n_registered: int = 0
+    # stream the cohort through the round in chunks of this many
+    # clients (0 = single shot); must divide n_clients.  Any chunking
+    # is bitwise-equal to the single-shot vmapped round.
+    cohort_chunk: int = 0
+    # registered ClientSampler name: which R-fleet clients form the
+    # round's cohort ("uniform" | "loss_proportional" |
+    # "telemetry_driven" | custom)
+    client_sampler: str = "uniform"
+    # EMA decay of the fleet's per-client loss/grad-norm signals the
+    # scored samplers read
+    sampler_ema: float = 0.9
+    # split the in-flight cohort's local training over this many device
+    # groups of the (client,) mesh via shard_map (0 = plain vmap on one
+    # device); rows are bitwise independent of the split
+    client_shards: int = 0
+    # CommAccounting retention cap: keep at most this many rounds of
+    # per-client selection rows on the host (0 = unbounded).  Older
+    # rounds fold into running totals, so comm_summary stays exact
+    # while accounting memory stays O(cap * cohort)
+    history_cap: int = 0
 
     def __post_init__(self):
         # validate the knobs whose misuse only surfaces rounds later
@@ -113,6 +138,49 @@ class FLConfig:
         if self.score_every < 1:
             raise ValueError(
                 f"score_every must be >= 1, got {self.score_every}")
+        if self.n_registered and self.n_registered < self.n_clients:
+            raise ValueError(
+                f"n_registered={self.n_registered} must be >= the "
+                f"cohort size n_clients={self.n_clients} (0 = cohort "
+                f"is the whole fleet)")
+        if self.cohort_chunk:
+            if self.cohort_chunk < 0 or self.n_clients % self.cohort_chunk:
+                valid = [d for d in range(1, self.n_clients + 1)
+                         if self.n_clients % d == 0]
+                raise ValueError(
+                    f"cohort_chunk={self.cohort_chunk} must divide the "
+                    f"cohort of {self.n_clients} clients so every chunk "
+                    f"compiles to one static shape; valid chunk sizes: "
+                    f"{valid}")
+        if self.client_shards:
+            width = self.cohort_chunk or self.n_clients
+            if self.client_shards < 0 or width % self.client_shards:
+                raise ValueError(
+                    f"client_shards={self.client_shards} must divide "
+                    f"the vmapped cohort width {width} "
+                    f"({'chunk size' if self.cohort_chunk else 'cohort'})")
+        if not 0.0 <= self.sampler_ema < 1.0:
+            raise ValueError(
+                f"sampler_ema must be in [0, 1), got {self.sampler_ema}")
+        if self.history_cap < 0:
+            raise ValueError(
+                f"history_cap must be >= 0 (0 = unbounded), got "
+                f"{self.history_cap}")
+        if self.history_cap and self.async_buffer:
+            raise ValueError(
+                "history_cap with async_buffer is not supported yet: "
+                "buffered flush accounting keeps per-flush entry rows; "
+                "cap the sync/cohort paths or leave history uncapped")
+        if self.uses_cohort_engine() and self.async_buffer:
+            raise ValueError(
+                "the cohort engine (n_registered/cohort_chunk) and the "
+                "buffered-async engine (async_buffer) both own the "
+                "round loop — set one of them, not both")
+
+    def uses_cohort_engine(self) -> bool:
+        """Whether Federation attaches the chunk-streaming CohortEngine
+        (core/cohort.py) instead of the plain synchronous loop."""
+        return bool(self.n_registered or self.cohort_chunk)
 
     def resolve_fused_agg(self) -> bool:
         """Whether the round step should aggregate through the fused

@@ -248,6 +248,14 @@ class Server:
         # buffered-async engine (core/async_agg.py); attached by the
         # Federation facade when FLConfig.async_buffer > 0
         self.async_engine = None
+        # chunk-streamed cohort engine (core/cohort.py); attached when
+        # FLConfig.n_registered/cohort_chunk switch the round loop over
+        self.cohort_engine = None
+        # history_cap retention (DESIGN.md §13): rounds trimmed off the
+        # front of sel_history fold their byte/param totals here so
+        # comm_summary stays exact while memory stays O(cap * cohort)
+        self._sel_base = 0
+        self._comm_totals = {"uplink": 0.0, "trained": 0.0, "rounds": 0}
 
     def next_key(self):
         self.key, k = jax.random.split(self.key)
@@ -273,6 +281,11 @@ class Server:
                 "server is in buffered-async mode (FLConfig.async_buffer "
                 "> 0); a synchronous round would desync the engine's "
                 "version/key bookkeeping — use run()/Federation.fit")
+        if self.cohort_engine is not None:
+            raise RuntimeError(
+                "server is in cohort-engine mode (FLConfig.n_registered/"
+                "cohort_chunk); a plain round would desync the engine's "
+                "fleet/key bookkeeping — use run()/Federation.fit")
         t0 = time.perf_counter()
         r = len(self.history)
         rk = self.next_key()
@@ -319,7 +332,38 @@ class Server:
             hook.on_round_end(self, rec, metrics)
         rec.seconds = time.perf_counter() - t0
         self.history.append(rec)
+        self._trim_history()
         return rec
+
+    def _trim_history(self) -> None:
+        """Enforce ``FLConfig.history_cap``: fold selection rows older
+        than the cap into running uplink/params totals and drop them,
+        bounding accounting memory at O(cap * cohort) for long fits
+        while keeping ``comm_summary`` exact."""
+        cap = getattr(self.fl, "history_cap", 0)
+        if not cap:
+            return
+        while len(self.sel_history) > cap:
+            s = self.sel_history.pop(0)
+            i = self._sel_base
+            rec = self.history[i] if i < len(self.history) else None
+            eff = rec.effective_weights if rec is not None else None
+            if eff is not None and len(eff) == s.shape[0]:
+                s = s * (np.asarray(eff, np.float32) > 0
+                         ).astype(s.dtype)[:, None]
+            if s.shape[1] == self.assign.n_units:
+                counts = comm.unit_param_counts(self.assign,
+                                                self.global_params())
+                self._comm_totals["uplink"] += self.topology.round_bytes(
+                    s, self.unit_bytes(), self.fl)["uplink"]
+                self._comm_totals["trained"] += float(
+                    np.einsum("cu,u->", s, counts))
+                self._comm_totals["rounds"] += 1
+            if rec is not None:
+                # the O(cohort) weight list already served accounting;
+                # null it so long fits keep O(1) state per old round
+                rec.effective_weights = None
+            self._sel_base += 1
 
     def _round_telemetry(self, round_idx: int, metrics: Optional[Dict],
                          eff_w: Sequence[float]):
@@ -354,6 +398,14 @@ class Server:
         self.async_engine = engine
         return self
 
+    def attach_cohort_engine(self, engine) -> "Server":
+        """Switch the server to chunk-streamed cohort rounds
+        (core/cohort.py): ``run`` drives the engine's round loop; its
+        records are ordinary sync records, so accounting/summary need
+        no special casing."""
+        self.cohort_engine = engine
+        return self
+
     def run(self, rounds: int, batch_fn: Callable[[int], Any],
             weights=None, log_every: int = 0) -> List[RoundRecord]:
         if self.async_engine is not None:
@@ -362,6 +414,12 @@ class Server:
             return self.async_engine.run(rounds, batch_fn,
                                          weights=weights,
                                          log_every=log_every)
+        if self.cohort_engine is not None:
+            # cohort-engine mode: batch_fn(round_idx, client_ids) loads
+            # one chunk of the sampled cohort at a time
+            return self.cohort_engine.run(rounds, batch_fn,
+                                          weights=weights,
+                                          log_every=log_every)
         extra = [RoundLogger(log_every, total=len(self.history) + rounds,
                              base=len(self.history))] \
             if log_every else []
@@ -379,6 +437,8 @@ class Server:
     def comm_summary(self) -> Dict[str, float]:
         if self.async_engine is not None and self.async_engine.started:
             return self.async_engine.comm_summary()
+        if self._sel_base:
+            return self._capped_summary()
         if not self.sel_history:
             return {"avg_uplink_bytes": 0.0, "avg_trained_params": 0.0,
                     "total_uplink_bytes": 0.0, "reduction_vs_full": 0.0}
@@ -403,3 +463,41 @@ class Server:
                     "reduction_vs_full": 0.0}
         return self.topology.summary(self.assign, self.global_params(),
                                      hist, self.fl)
+
+    def _capped_summary(self) -> Dict[str, float]:
+        """``comm_summary`` with ``history_cap`` trimming active: the
+        folded totals of trimmed rounds plus the retained window,
+        through the same per-round ``Topology.round_bytes`` math — the
+        result matches the uncapped summary up to float accumulation
+        order (regression-tested)."""
+        ub = self.unit_bytes()
+        counts = comm.unit_param_counts(self.assign, self.global_params())
+        up = self._comm_totals["uplink"]
+        tp = self._comm_totals["trained"]
+        n = self._comm_totals["rounds"]
+        for i, s in enumerate(self.sel_history):
+            rec_i = self._sel_base + i
+            eff = self.history[rec_i].effective_weights \
+                if rec_i < len(self.history) else None
+            if eff is not None and len(eff) == s.shape[0]:
+                s = s * (np.asarray(eff, np.float32) > 0
+                         ).astype(s.dtype)[:, None]
+            up += self.topology.round_bytes(s, ub, self.fl)["uplink"]
+            tp += float(np.einsum("cu,u->", s, counts))
+            n += 1
+        if not n:
+            return {"avg_uplink_bytes": 0.0, "avg_trained_params": 0.0,
+                    "total_uplink_bytes": 0.0, "reduction_vs_full": 0.0}
+        # full-model uplink is a per-round constant given the cohort
+        # shape, so the reduction needs no retained history
+        c = self.sel_history[0].shape[0] if self.sel_history \
+            else self.fl.n_clients
+        full = self.topology.round_bytes(
+            np.ones((c, self.assign.n_units), np.float32), ub,
+            self.fl)["uplink"]
+        return {
+            "avg_uplink_bytes": up / n,
+            "avg_trained_params": tp / n,
+            "total_uplink_bytes": up,
+            "reduction_vs_full": 1.0 - (up / n) / full if full else 0.0,
+        }

@@ -118,6 +118,17 @@ class Federation:
                 cohort_fn=cohort_fn,
                 flush_fn=self.topology.build_buffered_flush(assign, fl),
                 seed=seed))
+        if fl.uses_cohort_engine():
+            # fleet-scale cohort engine (DESIGN.md §13): samples the
+            # round's cohort out of n_registered clients and streams it
+            # through the round in cohort_chunk-sized compiled chunks
+            # (mutually exclusive with async_buffer — FLConfig validates)
+            from .cohort import CohortEngine, build_cohort_programs
+            programs = build_cohort_programs(
+                loss_fn, assign, fl, loss_kwargs, strategy=strategy,
+                scores=scores, topology=self.topology)
+            self.server.attach_cohort_engine(CohortEngine(
+                self.server, assign, fl, programs=programs, seed=seed))
 
     # -- construction -----------------------------------------------------
 
@@ -186,6 +197,15 @@ class Federation:
                              "data= to from_config or use run_round")
         if weights is None:
             weights = jnp.asarray(self.loader.weights())
+        if self.server.cohort_engine is not None:
+            # cohort-engine mode: the loader holds the registered fleet
+            # and serves one chunk of sampled clients at a time; the
+            # engine indexes it by absolute round (resume-safe), so no
+            # history base is added here
+            return self.server.run(
+                rounds, lambda r, ids: jax.tree_util.tree_map(
+                    jnp.asarray, self.loader.client_batches(r, ids)),
+                weights=weights, log_every=log_every)
         base = 0 if self.server.async_engine is not None \
             else len(self.server.history)
         return self.server.run(

@@ -60,10 +60,11 @@ from . import comm
 from .aggregation import (fedavg, hierarchical_edge_partials,
                           hierarchical_masked_fedavg,
                           hierarchical_masked_fedavg_packed, masked_fedavg,
-                          masked_fedavg_packed)
-from .client import local_update, local_update_packed
+                          masked_fedavg_packed, packed_acc_init,
+                          packed_accumulate, packed_finalize)
+from .client import local_update, packed_cohort_fn
 from .masking import (UnitAssignment, dense_norm_hook, mask_tree,
-                      packed_norm_hook, slot_plan)
+                      slot_plan)
 from .registry import unknown_name_message
 from .strategies import SelectionContext, resolve_strategy
 
@@ -114,6 +115,25 @@ def _live_ctx(ctx: SelectionContext, sel_state) -> SelectionContext:
                                state=sel_state)
 
 
+def _cohort_runner(fl, width: int) -> Callable:
+    """How a round step runs its vmapped cohort stage: directly on one
+    device, or split over the ``(client,)`` mesh when
+    ``fl.client_shards`` is set (DESIGN.md §13).  ``run(fn, gp,
+    *per_client)`` — ``gp`` replicated, everything else carrying a
+    leading ``width`` client axis.  Rows of a batched local update are
+    bitwise independent of their cohort, so both paths agree exactly.
+    """
+    shards = getattr(fl, "client_shards", 0)
+    if not shards:
+        return lambda fn, gp, *per_client: fn(gp, *per_client)
+    from ..launch.mesh import shard_over_clients
+
+    def run(fn, gp, *per_client):
+        return shard_over_clients(fn, shards, width)(gp, *per_client)
+
+    return run
+
+
 def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
                      loss_kwargs: Optional[Dict], *, strategy, scores,
                      aggregate: Callable, aggregate_dense: Callable,
@@ -150,6 +170,32 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
             "set FLConfig.packed=False")
     n_slots = fl.resolve_n_slots(ctx.n_units)
     scoring = strat.stateful
+    run_cohort = _cohort_runner(fl, fl.n_clients)
+    packed_cohort = packed_cohort_fn(loss_fn, assign, fl, loss_kwargs,
+                                     scoring=scoring)
+
+    def dense_cohort(gp, client_batches):
+        hook = dense_norm_hook(assign) if scoring else None
+        ones_mask = jax.tree_util.tree_map(
+            lambda x: jnp.ones((), jnp.float32), gp)
+
+        def one_client_dense(batches):
+            return local_update(loss_fn, gp, ones_mask, batches, lr=fl.lr,
+                                optimizer=fl.optimizer, prox_mu=fl.prox_mu,
+                                loss_kwargs=loss_kwargs, norm_hook=hook)
+
+        return jax.vmap(one_client_dense)(client_batches)
+
+    def masked_cohort(gp, sel, client_batches):
+        hook = dense_norm_hook(assign) if scoring else None
+
+        def one_client(sel_row, batches):
+            mask = mask_tree(assign, sel_row, gp)
+            return local_update(loss_fn, gp, mask, batches, lr=fl.lr,
+                                optimizer=fl.optimizer, prox_mu=fl.prox_mu,
+                                loss_kwargs=loss_kwargs, norm_hook=hook)
+
+        return jax.vmap(one_client)(sel, client_batches)
 
     def round_step(global_params, client_batches, weights, round_key,
                    sel_state=None):
@@ -157,51 +203,24 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
         sel = strat.select(round_key, c)
         if fl.always_train_head:
             sel = sel.at[:, -1].set(1.0)
-        hook = dense_norm_hook(assign) if scoring else None
 
         if strat.dense:
             # every unit trained: unmasked local step + the topology's
             # dense aggregation — for hub, bit-exact with the
             # conventional-FedAvg baseline trace
-            ones_mask = jax.tree_util.tree_map(
-                lambda x: jnp.ones((), jnp.float32), global_params)
-
-            def one_client_dense(batches):
-                return local_update(loss_fn, global_params, ones_mask,
-                                    batches, lr=fl.lr,
-                                    optimizer=fl.optimizer,
-                                    prox_mu=fl.prox_mu,
-                                    loss_kwargs=loss_kwargs,
-                                    norm_hook=hook)
-
-            deltas, metrics = jax.vmap(one_client_dense)(client_batches)
+            deltas, metrics = run_cohort(dense_cohort, global_params,
+                                         client_batches)
             new_params = aggregate_dense(global_params, deltas, sel, weights)
         elif use_packed:
             rows, valid = jax.vmap(
                 lambda s: slot_plan(assign, s, n_slots, global_params))(sel)
-
-            def one_client_packed(rows_c, valid_c, batches):
-                return local_update_packed(
-                    loss_fn, global_params, assign, rows_c, valid_c,
-                    batches, lr=fl.lr, optimizer=fl.optimizer,
-                    prox_mu=fl.prox_mu, loss_kwargs=loss_kwargs,
-                    norm_hook=packed_norm_hook(assign, rows_c)
-                    if scoring else None)
-
-            pdeltas, metrics = jax.vmap(one_client_packed)(
-                rows, valid, client_batches)
+            pdeltas, metrics = run_cohort(packed_cohort, global_params,
+                                          rows, valid, client_batches)
             new_params = aggregate_packed(global_params, pdeltas, rows,
                                           valid, sel, weights)
         else:
-            def one_client(sel_row, batches):
-                mask = mask_tree(assign, sel_row, global_params)
-                return local_update(loss_fn, global_params, mask, batches,
-                                    lr=fl.lr, optimizer=fl.optimizer,
-                                    prox_mu=fl.prox_mu,
-                                    loss_kwargs=loss_kwargs,
-                                    norm_hook=hook)
-
-            deltas, metrics = jax.vmap(one_client)(sel, client_batches)
+            deltas, metrics = run_cohort(masked_cohort, global_params,
+                                         sel, client_batches)
             new_params = aggregate(global_params, deltas, sel, weights)
         out_metrics = {
             "loss_mean": metrics["loss_mean"].mean(),
@@ -293,6 +312,22 @@ class Topology:
         raise ValueError(
             f"topology {self.name!r} has no buffered-async path; set "
             "FLConfig.async_buffer=0 or use hub/hierarchical")
+
+    def build_chunk_agg(self, assign: UnitAssignment, fl):
+        """The topology's chunk-streamed aggregation stage (DESIGN.md
+        §13): ``(init, accumulate, finalize)`` over the packed carry
+        primitives of core/aggregation.py.  ``init(global) -> acc``;
+        ``accumulate(acc, pdeltas, rows, valid, weights, positions) ->
+        acc`` folds one chunk of packed uploads (``positions`` are the
+        chunk's cohort positions, in order); ``finalize(global, acc,
+        sel, weights) -> new_global`` applies the full-cohort
+        denominators.  Streaming any chunking of the cohort in order
+        reproduces the single-shot packed aggregate bitwise.
+        """
+        raise ValueError(
+            f"topology {self.name!r} has no chunked cohort path; set "
+            "FLConfig.cohort_chunk=0/n_registered=0 or use "
+            "hub/hierarchical")
 
     # -- exact byte accounting -------------------------------------------
 
@@ -420,6 +455,19 @@ class Hub(Topology):
                                         weights, assign)
         return flush
 
+    def build_chunk_agg(self, assign, fl):
+        def init(g):
+            return packed_acc_init(assign, g)
+
+        def accumulate(acc, pdeltas, rows, valid, weights, positions):
+            return packed_accumulate(assign, acc, pdeltas, rows, valid,
+                                     weights)
+
+        def finalize(g, acc, sel, weights):
+            return packed_finalize(assign, g, acc, sel, weights)
+
+        return init, accumulate, finalize
+
     def round_bytes(self, sel, ubytes, fl):
         return comm.hub_round_bytes(
             sel, ubytes,
@@ -473,6 +521,25 @@ class Hierarchical(Topology):
                 mem[:, client_ids])
         return flush
 
+    def build_chunk_agg(self, assign, fl):
+        mem = jnp.asarray(comm.edge_membership(
+            fl.n_clients, fl.resolve_n_edges())).astype(jnp.float32)
+        edge_of = jnp.argmax(mem, axis=0)                     # (C,)
+
+        def init(g):
+            return packed_acc_init(assign, g, n_edges=mem.shape[0])
+
+        def accumulate(acc, pdeltas, rows, valid, weights, positions):
+            # each chunk client lands in its edge's stage-1 partial
+            return packed_accumulate(assign, acc, pdeltas, rows, valid,
+                                     weights, edge_idx=edge_of[positions])
+
+        def finalize(g, acc, sel, weights):
+            return packed_finalize(assign, g, acc, sel, weights,
+                                   membership=mem)
+
+        return init, accumulate, finalize
+
     def round_bytes(self, sel, ubytes, fl):
         mem = comm.edge_membership(fl.n_clients, fl.resolve_n_edges())
         return comm.hierarchical_round_bytes(
@@ -524,6 +591,12 @@ class Gossip(Topology):
             raise ValueError(
                 "packed round path: gossip mixing blends full replicas, "
                 "so there is nothing to pack — use hub or hierarchical")
+        if getattr(fl, "client_shards", 0):
+            raise ValueError(
+                "client_shards: gossip carries per-client replicas as "
+                "server state and mixes them with a ring matmul — the "
+                "cohort cannot shard over the client mesh axis; use "
+                "hub or hierarchical")
         strat, ctx = _selection_setup(assign, fl, strategy, scores)
         mix = jnp.asarray(ring_mixing_matrix(fl.n_clients))
         scoring = strat.stateful

@@ -60,9 +60,23 @@ class FederatedLoader:
         return np.asarray(sizes, np.float32)
 
     def round_batches(self, rnd: int) -> Dict[str, np.ndarray]:
+        return self.client_batches(rnd, range(self.n_clients))
+
+    def client_batches(self, rnd: int,
+                       client_ids: Sequence[int]) -> Dict[str, np.ndarray]:
+        """Batches for a subset of clients: (len(ids), steps, B, ...).
+
+        Each client's draw is a pure function of (key, round, client
+        id), so a chunk of a sampled cohort gets bitwise the rows the
+        full-fleet ``round_batches`` would have built — the cohort
+        engine's loader contract (DESIGN.md §13), with host memory
+        bounded by the chunk, not the fleet.
+        """
         need = self.batch_size * self.steps
         per_client = []
-        for ci, data in enumerate(self.client_data):
+        for ci in client_ids:
+            ci = int(ci)
+            data = self.client_data[ci]
             n = len(next(iter(data.values())))
             rng = np.random.default_rng((self.key, rnd, ci))
             idx = rng.permutation(n)

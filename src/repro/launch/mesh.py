@@ -18,12 +18,28 @@ subgroups (their reduce stays on local interconnect — the edge
 aggregator); only the per-edge partial aggregates cross the ``edge``
 axis boundary, which is the edge->hub WAN link.
 
+``make_client_mesh`` / ``shard_over_clients`` are the cohort engine's
+1-D ``(client,)`` device mesh (DESIGN.md §13): the in-flight cohort's
+leading client axis is split over device groups with ``shard_map``, each
+group vmapping its shard of clients — per-client rows of a batched
+local update are independent of their cohort, so the sharded run is
+bitwise-equal to the single-device vmap (property-tested).
+
 Functions, not module constants: importing this module never touches
 jax device state (dryrun.py must set XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
 import jax
+
+
+def _nearest_valid(total: int, want: int) -> str:
+    """Human hint: the divisors of ``total`` bracketing ``want``."""
+    divs = [d for d in range(1, total + 1) if total % d == 0]
+    below = max((d for d in divs if d < want), default=None)
+    above = min((d for d in divs if d > want), default=None)
+    opts = [str(d) for d in (below, above) if d is not None]
+    return " or ".join(opts) if opts else "none"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -41,9 +57,18 @@ def make_fl_mesh(n_clients: int, *, multi_pod: bool = False):
         # cross-silo: the pod axis folds into the client axis
         n_clients = max(n_clients, pods)
         if n_clients % pods:
-            raise ValueError("multi-pod clients must fill pods evenly")
+            raise ValueError(
+                f"multi-pod clients must fill the {pods} pods evenly: "
+                f"requested {n_clients} clients with "
+                f"{len(jax.devices())} devices visible; nearest valid "
+                f"cohort sizes: {pods * (n_clients // pods)} or "
+                f"{pods * (n_clients // pods + 1)}")
     if total_dp % n_clients:
-        raise ValueError(f"client axis {n_clients} must divide {total_dp}")
+        raise ValueError(
+            f"client axis {n_clients} must divide the {total_dp}-way "
+            f"data parallelism ({len(jax.devices())} devices visible, "
+            f"model axis 16); nearest valid cohort sizes: "
+            f"{_nearest_valid(total_dp, n_clients)}")
     shape = (n_clients, total_dp // n_clients, 16)
     return jax.make_mesh(shape, ("client", "data", "model"),
                          devices=jax.devices()[: _size(shape)])
@@ -61,13 +86,69 @@ def make_hier_fl_mesh(n_edges: int, n_clients: int, *,
     pods = 2 if multi_pod else 1
     total_dp = pods * 16
     if n_edges < 1 or n_clients % n_edges:
-        raise ValueError(f"edge axis {n_edges} must divide the "
-                         f"{n_clients} clients evenly")
+        raise ValueError(
+            f"edge axis {n_edges} must divide the {n_clients} clients "
+            f"evenly ({len(jax.devices())} devices visible); nearest "
+            f"valid edge counts for {n_clients} clients: "
+            f"{_nearest_valid(n_clients, max(n_edges, 1))}")
     if total_dp % n_clients:
-        raise ValueError(f"client axis {n_clients} must divide {total_dp}")
+        raise ValueError(
+            f"client axis {n_clients} must divide the {total_dp}-way "
+            f"data parallelism ({len(jax.devices())} devices visible, "
+            f"model axis 16); nearest valid cohort sizes: "
+            f"{_nearest_valid(total_dp, n_clients)}")
     shape = (n_edges, n_clients // n_edges, total_dp // n_clients, 16)
     return jax.make_mesh(shape, ("edge", "client", "data", "model"),
                          devices=jax.devices()[: _size(shape)])
+
+
+def make_client_mesh(n_shards: int):
+    """1-D ``(client,)`` mesh over the first ``n_shards`` devices."""
+    ndev = len(jax.devices())
+    if n_shards < 1 or n_shards > ndev:
+        raise ValueError(
+            f"client_shards={n_shards} needs between 1 and {ndev} "
+            f"devices ({ndev} visible)")
+    return jax.make_mesh((n_shards,), ("client",),
+                         devices=jax.devices()[:n_shards])
+
+
+def shard_over_clients(fn, n_shards: int, n_clients: int):
+    """Split ``fn``'s leading client axis over a ``(client,)`` mesh.
+
+    ``fn(replicated, *per_client) -> per-client outputs`` — typically a
+    vmapped cohort stage: the first argument (a pytree, e.g. global
+    params) is replicated, every other argument and every output leaf
+    carries a leading client axis that shard_map splits into
+    ``n_shards`` device-local blocks, each vmapped on its own device
+    group.  Per-client rows are independent, so the result is bitwise
+    what the unsharded vmap produces.
+    """
+    ndev = len(jax.devices())
+    if n_clients % n_shards:
+        valid = [d for d in range(1, min(n_clients, ndev) + 1)
+                 if n_clients % d == 0]
+        raise ValueError(
+            f"client_shards={n_shards} must divide the cohort of "
+            f"{n_clients} clients ({ndev} devices visible); valid "
+            f"shard counts here: {valid}")
+    mesh = make_client_mesh(n_shards)
+    from jax.sharding import PartitionSpec as P
+    try:
+        _shard_map = jax.shard_map
+        extra = {"check_vma": False}
+    except AttributeError:  # jax < 0.6 spells it experimental
+        from jax.experimental.shard_map import shard_map as _shard_map
+        extra = {"check_rep": False}
+
+    def wrapped(replicated, *per_client):
+        sharded = _shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(),) + tuple(P("client") for _ in per_client),
+            out_specs=P("client"), **extra)
+        return sharded(replicated, *per_client)
+
+    return wrapped
 
 
 def make_host_mesh(*, model: int = 1):

@@ -9,6 +9,9 @@ scale; on a pod the same code runs under the production mesh).
         [--synchronized] [--topology hub|hierarchical|gossip [--edges 2]]
         [--packed] [--fused-agg auto|on|off] [--ckpt results/ck/run1]
         [--async-buffer 4 --staleness polynomial --delay-dist pareto:1.5]
+        [--registered 100000 --cohort-chunk 2 --client-sampler uniform|
+         loss_proportional|telemetry_driven] [--client-shards 2]
+        [--history-cap 64] [--prod-env]
 
 Drives the paper's federated round (per-client layer subsets from the
 registered strategy, masked local Adam, participation-weighted FedAvg)
@@ -19,13 +22,15 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import numpy as np
 
 from ..configs.base import get_config, list_configs
 from ..core import (Checkpointer, FLConfig, Federation,
-                    registered_strategies, registered_topologies)
+                    registered_client_samplers, registered_strategies,
+                    registered_topologies)
 from ..data import FederatedLoader, iid_partition, lm_batch
 
 
@@ -68,6 +73,29 @@ def main():
                     help="simulated client-latency distribution for "
                          "async rounds: none|exponential[:s]|"
                          "lognormal[:s]|pareto[:a]")
+    ap.add_argument("--registered", type=int, default=0,
+                    help="registered fleet size: sample --clients "
+                         "participants per round from this many "
+                         "registered clients (0 = fleet == cohort)")
+    ap.add_argument("--cohort-chunk", type=int, default=0,
+                    help="stream the cohort through the round step in "
+                         "chunks of this many clients (0 = whole "
+                         "cohort in one shot); bounds host memory")
+    ap.add_argument("--client-sampler", default="uniform",
+                    choices=registered_client_samplers(),
+                    help="per-round cohort draw from the registered "
+                         "fleet (core/cohort.py registry)")
+    ap.add_argument("--client-shards", type=int, default=0,
+                    help="shard_map the cohort over this many device "
+                         "groups on the mesh client axis (0 = vmap)")
+    ap.add_argument("--history-cap", type=int, default=0,
+                    help="retain at most N rounds of selection history; "
+                         "older rounds fold into O(1) accounting "
+                         "totals (0 = unbounded)")
+    ap.add_argument("--prod-env", action="store_true",
+                    help="re-exec under the production launch profile "
+                         "(launch/env.py: latency-hiding scheduler, "
+                         "combined collectives, tcmalloc)")
     ap.add_argument("--dropout", type=float, default=0.0)
     ap.add_argument("--lr", type=float, default=2e-3)
     ap.add_argument("--batch-size", type=int, default=4)
@@ -76,6 +104,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
+
+    if args.prod_env:
+        # LD_PRELOAD and XLA_FLAGS only take effect at process start:
+        # replace this launcher with itself under the profile (no-op
+        # in the re-exec'd child — env.GUARD_VAR is set there).
+        from .env import reexec_under_prod_env
+        reexec_under_prod_env("repro.launch.train", sys.argv[1:])
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -90,8 +125,14 @@ def main():
         data["frames"] = np.random.default_rng(args.seed).normal(
             0, 1, (n, cfg.enc_seq, cfg.d_model)).astype(np.float32)
     shards = iid_partition(n, args.clients, key=args.seed + 1)
-    loader = FederatedLoader([{k: v[s] for k, v in data.items()}
-                              for s in shards],
+    client_data = [{k: v[s] for k, v in data.items()} for s in shards]
+    if args.registered > args.clients:
+        # registered fleet larger than the synthetic corpus: tile the
+        # cohort-sized shards (dict views, no copies) so every
+        # registered id resolves; per-(round, id) draws stay distinct
+        client_data = [client_data[i % args.clients]
+                       for i in range(args.registered)]
+    loader = FederatedLoader(client_data,
                              batch_size=args.batch_size,
                              steps_per_round=args.steps_per_round,
                              key=args.seed)
@@ -106,7 +147,12 @@ def main():
                   staleness=args.staleness,
                   staleness_alpha=args.staleness_alpha,
                   client_delay_dist=args.delay_dist,
-                  score_ema=args.score_ema, score_every=args.score_every)
+                  score_ema=args.score_ema, score_every=args.score_every,
+                  n_registered=args.registered,
+                  cohort_chunk=args.cohort_chunk,
+                  client_sampler=args.client_sampler,
+                  client_shards=args.client_shards,
+                  history_cap=args.history_cap)
     hooks = [Checkpointer(args.ckpt)] if args.ckpt else []
     fed = Federation.from_config(cfg, fl, data=loader, seed=args.seed,
                                  dropout_rate=args.dropout, hooks=hooks)
@@ -119,7 +165,13 @@ def main():
           (f" async_buffer={fl.async_buffer} staleness={fl.staleness}"
            f" delays={fl.client_delay_dist}" if fl.async_buffer else "") +
           (f" scoring=on ema={fl.score_ema} every={fl.score_every}"
-           if fed.server.sel_state is not None else ""))
+           if fed.server.sel_state is not None else "") +
+          (f" fleet={fl.n_registered or args.clients}"
+           f" chunk={fl.cohort_chunk or args.clients}"
+           f" sampler={fl.client_sampler or 'uniform'}"
+           if fl.uses_cohort_engine() else "") +
+          (f" client_shards={fl.client_shards}"
+           if fl.client_shards else ""))
     t0 = time.time()
     fed.fit(args.rounds, log_every=1)
     print(f"total {time.time()-t0:.1f}s; comm summary:")

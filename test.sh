@@ -29,4 +29,6 @@ if [[ "$FAST" == "0" ]]; then
     --out results/dryrun-smoke
   # serving engine smoke: continuous == static streams, one decode compile
   python -m benchmarks.serve_bench --smoke --out results/BENCH_serve_smoke.json
+  # cohort engine smoke: chunked == vmapped bitwise + fleet-scale RSS rows
+  python -m benchmarks.cohort_bench --smoke --out results/BENCH_cohort_smoke.json
 fi

@@ -1,0 +1,446 @@
+"""Fleet-scale cohort engine (DESIGN.md §13): chunk-streamed rounds ==
+single-shot vmapped rounds BITWISE (property-tested across topologies ×
+strategies × chunk sizes with straggler dropout), mid-round checkpoint
+restore at a chunk boundary, the client-sampler registry, fleet EMA
+telemetry, shard_map'd cohorts, and the history_cap accounting fix."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import restore_server_state, save_server_state
+from repro.core import (ClientSampler, CohortContext, FLConfig, Federation,
+                        UnknownClientSamplerError, build_cohort_programs,
+                        fleet_init, get_client_sampler,
+                        register_client_sampler, registered_client_samplers,
+                        resolve_client_sampler, unregister_client_sampler)
+from repro.models.toy import init_toy_mlp, toy_batches, toy_loss, toy_units
+
+C = 4
+
+
+def _setup(n_blocks=6, d=16, hidden=32, out=4, steps=2, batch=2):
+    key = jax.random.PRNGKey(0)
+    params = init_toy_mlp(key, n_blocks=n_blocks, d=d, hidden=hidden,
+                          out=out)
+    assign = toy_units(params)
+    batches = toy_batches(jax.random.fold_in(key, 1), n_clients=C,
+                          steps=steps, batch=batch, d=d, out=out)
+    return params, assign, batches
+
+
+def _bf(batches):
+    """Engine loader contract: (round, ids) -> the ids' rows."""
+    return lambda r, ids: jax.tree_util.tree_map(
+        lambda x: x[np.asarray(ids)], batches)
+
+
+def _assert_trees_bitexact(a, b):
+    for pa, pb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(pa), np.asarray(pb)), \
+            "trees diverged bitwise"
+
+
+def _assert_runs_equal(ref, eng):
+    _assert_trees_bitexact(ref.server.params, eng.server.params)
+    _assert_trees_bitexact(ref.server.sel_history, eng.server.sel_history)
+    for ra, rb in zip(ref.history, eng.history):
+        assert (np.isnan(ra.loss) and np.isnan(rb.loss)) \
+            or ra.loss == rb.loss
+        assert ra.uplink_bytes == rb.uplink_bytes
+        assert ra.n_participants == rb.n_participants
+        assert ra.skipped == rb.skipped
+    assert ref.comm_summary() == eng.comm_summary()
+
+
+# -- the tentpole property: chunked == single-shot vmapped, BITWISE --------
+
+@settings(max_examples=8, deadline=None)
+@given(topology=st.sampled_from(["hub", "hierarchical"]),
+       strategy=st.sampled_from(["uniform", "score_weighted"]),
+       chunk=st.sampled_from([1, 2, 4]),
+       drop=st.booleans())
+def test_chunked_bitwise_equals_vmapped(topology, strategy, chunk, drop):
+    """With R == C every sampler yields the identity cohort, so the
+    engine's chunk-streamed rounds must reproduce the plain synchronous
+    packed loop bit-for-bit: params, selection history, per-round loss
+    and byte accounting — including straggler-dropped rounds."""
+    params, assign, batches = _setup()
+    rate = 0.3 if drop else 0.0
+    fl0 = FLConfig(n_clients=C, train_fraction=0.5, strategy=strategy,
+                   topology=topology, packed=True, fused_agg="off")
+    ref = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl0, seed=3, dropout_rate=rate)
+    ref.server.run(3, lambda r: batches)
+    fl1 = dataclasses.replace(fl0, cohort_chunk=chunk, n_registered=C)
+    eng = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl1, seed=3, dropout_rate=rate)
+    eng.server.run(3, _bf(batches))
+    _assert_runs_equal(ref, eng)
+
+
+def test_engine_fit_routes_through_loader():
+    """Federation.fit in engine mode streams loader.client_batches with
+    ABSOLUTE round indices — equal to the plain fit on the same data."""
+    from repro.data import FederatedLoader, iid_partition
+    params, assign, _ = _setup()
+    rng = np.random.default_rng(0)
+    data = {"x": rng.normal(0, 1, (64, 16)).astype(np.float32),
+            "y": rng.normal(0, 1, (64, 4)).astype(np.float32)}
+    shards = iid_partition(64, C, key=1)
+    loader = FederatedLoader([{k: v[s] for k, v in data.items()}
+                              for s in shards], batch_size=2,
+                             steps_per_round=2, key=5)
+    fl0 = FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                   fused_agg="off")
+    ref = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl0, loader=loader, seed=2)
+    ref.fit(3)
+    fl1 = dataclasses.replace(fl0, cohort_chunk=2, n_registered=C)
+    eng = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl1, loader=loader, seed=2)
+    eng.fit(3)
+    _assert_runs_equal(ref, eng)
+
+
+# -- mid-round checkpoint restore at a chunk boundary ----------------------
+
+@pytest.mark.parametrize("strategy", ["uniform", "score_weighted"])
+def test_midround_restore_at_chunk_boundary(tmp_path, strategy):
+    """Save after streaming 1 of 2 chunks, restore into a fresh
+    Federation, finish the fit — bitwise an uninterrupted run."""
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, strategy=strategy,
+                  topology="hub", packed=True, fused_agg="off",
+                  cohort_chunk=2, n_registered=C)
+
+    def fresh():
+        return Federation(loss_fn=toy_loss, params=params, assign=assign,
+                          fl=fl, seed=7, dropout_rate=0.3)
+
+    ref = fresh()
+    ref.server.run(3, _bf(batches))
+
+    one = fresh()
+    one.server.run(1, _bf(batches))
+    eng = one.server.cohort_engine
+    eng.begin_round()
+    eng.step_chunk(_bf(batches))
+    assert eng._partial["chunk"] == 1
+    path = str(tmp_path / "mid")
+    save_server_state(path, one.server)
+
+    two = fresh()
+    restore_server_state(path, two.server)
+    eng2 = two.server.cohort_engine
+    assert eng2._partial is not None and eng2._partial["chunk"] == 1
+    two.server.run(2, _bf(batches))  # resumes the partial, then round 2
+    _assert_runs_equal(ref, two)
+    np.testing.assert_array_equal(eng2.fleet.counts,
+                                  ref.server.cohort_engine.fleet.counts)
+
+
+def test_cohort_ckpt_needs_engine(tmp_path):
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                  fused_agg="off", n_registered=8)
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=1)
+    fed.server.run(1, _bf(batches))
+    path = str(tmp_path / "ck")
+    save_server_state(path, fed.server)
+    plain = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                       fl=dataclasses.replace(fl, n_registered=0), seed=1)
+    with pytest.raises(ValueError, match="cohort-engine state"):
+        restore_server_state(path, plain.server)
+
+
+def test_fleet_size_mismatch_rejected(tmp_path):
+    params, assign, batches = _setup()
+
+    def make(r):
+        return Federation(
+            loss_fn=toy_loss, params=params, assign=assign,
+            fl=FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                        fused_agg="off", n_registered=r), seed=1)
+
+    fed = make(8)
+    fed.server.run(1, _bf(batches))
+    path = str(tmp_path / "ck")
+    save_server_state(path, fed.server)
+    with pytest.raises(ValueError, match="registered"):
+        restore_server_state(path, make(16).server)
+
+
+# -- client-sampler registry ------------------------------------------------
+
+def test_builtin_samplers_registered():
+    assert {"uniform", "loss_proportional", "telemetry_driven"} <= \
+        set(registered_client_samplers())
+    assert get_client_sampler("telemetry_driven").needs_norms
+    assert not get_client_sampler("uniform").needs_norms
+
+
+def test_unknown_sampler_error_shares_uniform_format():
+    with pytest.raises(UnknownClientSamplerError,
+                       match=r"unknown client sampler 'nope'; "
+                             r"registered: "):
+        get_client_sampler("nope")
+
+
+def test_register_unregister_roundtrip():
+    @register_client_sampler
+    class FirstOnly(ClientSampler):
+        name = "first_only"
+
+        def sample(self, key, ctx):
+            return np.arange(ctx.cohort, dtype=np.int32)
+
+    try:
+        assert "first_only" in registered_client_samplers()
+        assert isinstance(resolve_client_sampler("first_only"), FirstOnly)
+    finally:
+        unregister_client_sampler("first_only")
+    assert "first_only" not in registered_client_samplers()
+
+
+def test_resolve_defaults_to_uniform():
+    s = resolve_client_sampler(None)
+    assert s.name == "uniform"
+    inst = get_client_sampler("loss_proportional")
+    assert resolve_client_sampler(inst) is inst
+
+
+@pytest.mark.parametrize("name", ["uniform", "loss_proportional",
+                                  "telemetry_driven"])
+def test_sampler_draw_contract(name):
+    """Sorted unique in-range ids; identity when R == C (the anchor the
+    bitwise property rests on); valid subsets for R > C both cold
+    (no signal -> uniform) and warm (EMAs populated)."""
+    s = get_client_sampler(name)
+    key = jax.random.PRNGKey(11)
+    ids = s.sample(key, CohortContext(C, C, fleet_init(C)))
+    np.testing.assert_array_equal(ids, np.arange(C))
+    fleet = fleet_init(12)
+    for warm in (False, True):
+        if warm:
+            fleet.loss_ema[:] = np.linspace(0, 3, 12)
+            fleet.norm_ema[:] = np.linspace(3, 0, 12)
+            fleet.counts[:6] = 2
+        ids = np.asarray(s.sample(key, CohortContext(12, C, fleet)))
+        assert ids.shape == (C,) and ids.dtype == np.int32
+        assert len(set(ids.tolist())) == C
+        assert np.all(np.sort(ids) == ids)
+        assert ids.min() >= 0 and ids.max() < 12
+
+
+def test_fleet_emas_track_participation():
+    """R > C: counts advance only at sampled-and-surviving ids and sum
+    to the recorded participant totals; EMAs populate only where seen."""
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                  fused_agg="off", n_registered=10,
+                  client_sampler="telemetry_driven")
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=5, dropout_rate=0.3)
+    fed.server.run(4, _bf(batches))
+    eng = fed.server.cohort_engine
+    assert eng.fleet.round == 4
+    total = sum(r.n_participants for r in fed.history)
+    assert eng.fleet.counts.sum() == total
+    seen = eng.fleet.counts > 0
+    assert np.all(eng.fleet.loss_ema[~seen] == 0)
+    assert np.any(eng.fleet.norm_ema[seen] > 0)  # needs_norms telemetry
+
+
+# -- engine state-machine errors -------------------------------------------
+
+def _engine(fl_kwargs=None, **fed_kwargs):
+    params, assign, batches = _setup()
+    kw = dict(n_registered=C, cohort_chunk=2)
+    kw.update(fl_kwargs or {})
+    fl = FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                  fused_agg="off", **kw)
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=1, **fed_kwargs)
+    return fed, fed.server.cohort_engine, _bf(batches)
+
+
+def test_begin_twice_raises():
+    _, eng, _ = _engine()
+    eng.begin_round()
+    with pytest.raises(RuntimeError, match="already in flight"):
+        eng.begin_round()
+
+
+def test_step_and_finish_out_of_order():
+    _, eng, bf = _engine()
+    with pytest.raises(RuntimeError, match="begin_round"):
+        eng.step_chunk(bf)
+    with pytest.raises(RuntimeError, match="begin_round"):
+        eng.finish_round()
+    eng.begin_round()
+    eng.step_chunk(bf)
+    with pytest.raises(RuntimeError, match="streamed 1/2"):
+        eng.finish_round()
+    eng.step_chunk(bf)
+    with pytest.raises(RuntimeError, match="already streamed"):
+        eng.step_chunk(bf)
+    eng.finish_round()
+
+
+def test_weights_length_validated():
+    _, eng, _ = _engine()
+    with pytest.raises(ValueError, match="n_clients.*or.*n_registered"):
+        eng.begin_round(weights=np.ones(3))
+
+
+def test_fleet_weights_gathered_to_cohort():
+    fed, eng, bf = _engine({"n_registered": 8, "cohort_chunk": 0})
+    wr = np.arange(1, 9, dtype=np.float32)
+    p = eng.begin_round(weights=wr)
+    np.testing.assert_array_equal(np.asarray(p["w"]), wr[p["ids"]])
+    eng.step_chunk(bf)
+    eng.finish_round()
+
+
+def test_dense_full_strategy_rejected():
+    params, assign, _ = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=1.0, strategy="full",
+                  packed=True, fused_agg="off", n_registered=C)
+    with pytest.raises(ValueError, match="nothing to pack"):
+        Federation(loss_fn=toy_loss, params=params, assign=assign,
+                   fl=fl, seed=1)
+
+
+def test_run_round_rejected_in_engine_mode():
+    fed, _, _ = _engine()
+    with pytest.raises(RuntimeError, match="cohort-engine mode"):
+        fed.server.run_round(lambda r: None)
+
+
+# -- shard_map'd cohorts ----------------------------------------------------
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="client-shard tests need >= 2 XLA devices "
+           "(test.sh forces 8 host devices)")
+
+
+@needs_devices
+def test_sharded_cohort_bitwise_equals_vmapped():
+    """client_shards splits the vmapped cohort over the (client,) mesh;
+    per-client rows are independent, so results are bitwise equal —
+    plain loop and chunked engine alike."""
+    params, assign, batches = _setup()
+    fl0 = FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                   fused_agg="off", strategy="score_weighted")
+    ref = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl0, seed=4)
+    ref.server.run(2, lambda r: batches)
+    sharded = Federation(
+        loss_fn=toy_loss, params=params, assign=assign,
+        fl=dataclasses.replace(fl0, client_shards=2), seed=4)
+    sharded.server.run(2, lambda r: batches)
+    _assert_runs_equal(ref, sharded)
+    both = Federation(
+        loss_fn=toy_loss, params=params, assign=assign,
+        fl=dataclasses.replace(fl0, client_shards=2, cohort_chunk=2,
+                               n_registered=C), seed=4)
+    both.server.run(2, _bf(batches))
+    _assert_runs_equal(ref, both)
+
+
+@needs_devices
+def test_sharded_async_cohort_bitwise():
+    """The buffered-async engine shares the packed cohort trace, so
+    client_shards composes with async_buffer bitwise."""
+    params, assign, batches = _setup()
+    fl0 = FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                   fused_agg="off", async_buffer=2,
+                   client_delay_dist="exponential:1.0")
+    a = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                   fl=fl0, seed=6)
+    a.server.run(3, lambda w: batches)
+    b = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                   fl=dataclasses.replace(fl0, client_shards=2), seed=6)
+    b.server.run(3, lambda w: batches)
+    _assert_trees_bitexact(a.server.params, b.server.params)
+    for ra, rb in zip(a.history, b.history):
+        assert ra.loss == rb.loss
+
+
+# -- history_cap: bounded accounting, exact summaries ----------------------
+
+def test_history_cap_bounds_retention_and_keeps_summary():
+    """The satellite bugfix: a capped run retains at most cap rows of
+    selection history yet reports the same comm_summary as the
+    unbounded run (up to float fold order)."""
+    params, assign, batches = _setup()
+    fl0 = FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                   fused_agg="off")
+    ref = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl0, seed=9, dropout_rate=0.25)
+    ref.server.run(12, lambda r: batches)
+    cap = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=dataclasses.replace(fl0, history_cap=3), seed=9,
+                     dropout_rate=0.25)
+    cap.server.run(12, lambda r: batches)
+    assert len(cap.server.sel_history) == 3
+    assert len(ref.server.sel_history) == 12
+    assert cap.server._sel_base == 9
+    _assert_trees_bitexact(ref.server.params, cap.server.params)
+    a, b = ref.comm_summary(), cap.comm_summary()
+    assert a.keys() == b.keys()
+    for k in a:
+        np.testing.assert_allclose(b[k], a[k], rtol=1e-6)
+
+
+def test_history_cap_with_cohort_engine_and_ckpt(tmp_path):
+    """Cap + engine compose; the folded totals survive a checkpoint
+    roundtrip so a resumed run's summary stays exact."""
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                  fused_agg="off", n_registered=6, cohort_chunk=2,
+                  history_cap=2)
+    fed = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=2)
+    fed.server.run(6, _bf(batches))
+    assert len(fed.server.sel_history) == 2
+    want = fed.comm_summary()
+    path = str(tmp_path / "capped")
+    save_server_state(path, fed.server)
+    res = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=fl, seed=2)
+    restore_server_state(path, res.server)
+    assert res.server._sel_base == fed.server._sel_base
+    assert res.comm_summary() == want
+    res.server.run(2, _bf(batches))  # keeps trimming after resume
+    assert len(res.server.sel_history) == 2
+
+
+def test_history_cap_validation():
+    with pytest.raises(ValueError, match="history_cap"):
+        FLConfig(n_clients=C, train_fraction=0.5, history_cap=-1)
+    with pytest.raises(ValueError, match="async_buffer"):
+        FLConfig(n_clients=C, train_fraction=0.5, history_cap=2,
+                 async_buffer=2)
+
+
+# -- programs-level guard ---------------------------------------------------
+
+def test_build_programs_standalone():
+    """build_cohort_programs is usable outside Federation (the
+    benchmark drives it directly)."""
+    params, assign, batches = _setup()
+    fl = FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                  fused_agg="off", cohort_chunk=2)
+    progs = build_cohort_programs(toy_loss, assign, fl)
+    assert progs.n_slots >= 1
+    assert progs.sampler.name == "uniform"
+    sel = progs.select(jax.random.PRNGKey(0))
+    assert sel.shape == (C, assign.n_units)

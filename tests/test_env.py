@@ -1,0 +1,96 @@
+"""launch/env.py production profile: XLA-flag merge semantics (user
+flags win), tcmalloc LD_PRELOAD gating on .so presence, the re-exec
+guard, and a live-backend smoke that the flag set actually parses
+(XLA aborts the process on unknown XLA_FLAGS entries)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch import env as prod
+
+
+def test_profile_flags_applied_to_empty_env():
+    e = prod.production_env(base={}, tcmalloc=False)
+    flags = e["XLA_FLAGS"].split()
+    assert list(prod.PROD_XLA_FLAGS) == flags
+    assert e["TF_CPP_MIN_LOG_LEVEL"] == "4"
+    assert e[prod.GUARD_VAR] == "1"
+    assert "LD_PRELOAD" not in e
+
+
+def test_user_flags_not_clobbered():
+    """An explicit operator value for a profile flag survives; profile
+    flags the user did not set are appended."""
+    user = "--xla_gpu_enable_latency_hiding_scheduler=false --xla_abc=1"
+    e = prod.production_env(base={"XLA_FLAGS": user}, tcmalloc=False)
+    flags = e["XLA_FLAGS"].split()
+    assert "--xla_gpu_enable_latency_hiding_scheduler=false" in flags
+    assert "--xla_gpu_enable_latency_hiding_scheduler=true" not in flags
+    assert "--xla_abc=1" in flags
+    for f in prod.PROD_XLA_FLAGS[1:]:
+        assert f in flags
+
+
+def test_unrelated_env_preserved():
+    e = prod.production_env(base={"PATH": "/bin", "HOME": "/root"},
+                            tcmalloc=False)
+    assert e["PATH"] == "/bin" and e["HOME"] == "/root"
+
+
+def test_tcmalloc_preload_only_when_so_exists(tmp_path, monkeypatch):
+    so = tmp_path / "libtcmalloc_minimal.so.4"
+    # absent: no preload, no threshold
+    monkeypatch.setattr(prod, "TCMALLOC_PATHS", (str(so),))
+    e = prod.production_env(base={})
+    assert "LD_PRELOAD" not in e
+    assert "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD" not in e
+    # present: appended to an existing preload list, threshold set
+    so.write_bytes(b"")
+    e = prod.production_env(base={"LD_PRELOAD": "/lib/other.so"})
+    assert e["LD_PRELOAD"] == f"/lib/other.so:{so}"
+    assert e["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] == "60000000000"
+    # idempotent: already preloaded -> not duplicated
+    e2 = prod.production_env(base={"LD_PRELOAD": e["LD_PRELOAD"]})
+    assert e2["LD_PRELOAD"].count(str(so)) == 1
+
+
+def test_reexec_guard_is_a_noop(monkeypatch):
+    called = []
+    monkeypatch.setattr(os, "execve",
+                        lambda *a, **k: called.append(a))
+    monkeypatch.setenv(prod.GUARD_VAR, "1")
+    prod.reexec_under_prod_env("repro.launch.train", ["--rounds", "1"])
+    assert called == []
+
+
+def test_reexec_builds_module_argv(monkeypatch):
+    called = []
+    monkeypatch.setattr(os, "execve",
+                        lambda path, argv, e: called.append((path, argv, e)))
+    monkeypatch.delenv(prod.GUARD_VAR, raising=False)
+    prod.reexec_under_prod_env("repro.launch.train", ["--rounds", "1"],
+                               tcmalloc=False)
+    (path, argv, e), = called
+    assert path == sys.executable
+    assert argv == [sys.executable, "-m", "repro.launch.train",
+                    "--rounds", "1"]
+    assert e[prod.GUARD_VAR] == "1"
+    for f in prod.PROD_XLA_FLAGS:
+        assert f in e["XLA_FLAGS"]
+
+
+@pytest.mark.slow
+def test_prod_flags_parse_on_live_backend():
+    """XLA LOG(FATAL)s on unknown XLA_FLAGS entries — a stale flag in
+    PROD_XLA_FLAGS would kill every --prod-env launch at startup, so
+    smoke the set against the real backend in a subprocess."""
+    e = prod.production_env()
+    e["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import jax; print(int(jax.numpy.arange(4).sum()))"],
+        env=e, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip().endswith("6")

@@ -1,0 +1,88 @@
+"""launch/mesh.py failure modes: every invalid mesh request dies with a
+message naming the offending value, the visible device count and the
+nearest valid alternatives (the satellite's rich-ValueError contract)."""
+import jax
+import pytest
+
+from repro.launch.mesh import (_nearest_valid, make_client_mesh,
+                               make_fl_mesh, make_hier_fl_mesh,
+                               shard_over_clients)
+
+
+def test_nearest_valid_brackets_the_request():
+    assert _nearest_valid(16, 5) == "4 or 8"
+    assert _nearest_valid(16, 3) == "2 or 4"
+    assert _nearest_valid(16, 1) == "2"      # nothing below 1
+    assert _nearest_valid(16, 16) == "8"     # nothing above total
+    assert _nearest_valid(1, 1) == "none"
+
+
+def test_fl_mesh_indivisible_clients():
+    with pytest.raises(ValueError) as e:
+        make_fl_mesh(5)
+    msg = str(e.value)
+    assert "client axis 5" in msg
+    assert "16-way" in msg
+    assert f"{len(jax.devices())} devices visible" in msg
+    assert "nearest valid cohort sizes: 4 or 8" in msg
+
+
+def test_fl_mesh_multipod_uneven_pods():
+    with pytest.raises(ValueError) as e:
+        make_fl_mesh(3, multi_pod=True)
+    msg = str(e.value)
+    assert "must fill the 2 pods evenly" in msg
+    assert "requested 3 clients" in msg
+    assert "2 or 4" in msg
+
+
+def test_hier_mesh_edges_must_divide_clients():
+    with pytest.raises(ValueError) as e:
+        make_hier_fl_mesh(3, 4)
+    msg = str(e.value)
+    assert "edge axis 3 must divide the 4 clients" in msg
+    assert "nearest valid edge counts" in msg
+    assert "2 or 4" in msg
+
+
+def test_hier_mesh_zero_edges():
+    with pytest.raises(ValueError, match="edge axis 0"):
+        make_hier_fl_mesh(0, 4)
+
+
+def test_hier_mesh_indivisible_clients():
+    with pytest.raises(ValueError) as e:
+        make_hier_fl_mesh(1, 3)
+    assert "client axis 3" in str(e.value)
+    assert "nearest valid cohort sizes: 2 or 4" in str(e.value)
+
+
+def test_client_mesh_bounds():
+    ndev = len(jax.devices())
+    for bad in (0, -1, ndev + 1):
+        with pytest.raises(ValueError) as e:
+            make_client_mesh(bad)
+        msg = str(e.value)
+        assert f"client_shards={bad}" in msg
+        assert f"between 1 and {ndev}" in msg
+        assert f"({ndev} visible)" in msg
+
+
+def test_shard_over_clients_indivisible_cohort():
+    with pytest.raises(ValueError) as e:
+        shard_over_clients(lambda g, x: x, 3, 4)
+    msg = str(e.value)
+    assert "client_shards=3 must divide the cohort of 4 clients" in msg
+    assert "valid shard counts here: [1, 2, 4]" in msg
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 XLA devices")
+def test_shard_over_clients_runs_valid_config():
+    import jax.numpy as jnp
+    import numpy as np
+    fn = jax.vmap(lambda g, x: g * x, in_axes=(None, 0))
+    wrapped = shard_over_clients(fn, 2, 4)
+    x = jnp.arange(4.0)
+    np.testing.assert_array_equal(np.asarray(wrapped(2.0, x)),
+                                  np.asarray(fn(2.0, x)))
