@@ -1,0 +1,232 @@
+"""Chaos-vs-accuracy bench: fit under injected faults (DESIGN.md §14).
+
+Runs the paper's VGG16 (reduced width) on CIFAR-shaped data at the
+paper's 25%/50% freeze settings under a ladder of fault regimes —
+clean, zero-rate chaos (every fault named, every rate 0.0), 10% client
+crash, 10% crash + 5% NaN corruption, 25% crash + 5% NaN — and records
+the accuracy trajectory, the wasted-bytes column (quarantined uploads)
+and the quarantine counts per regime.
+
+Two acceptance gates ride in the JSON (what CI relies on):
+
+* ``zero_fault_bitwise_equal`` — the zero-rate chaos run's params are
+  BITWISE the clean run's: the compiled-in injection + validation gate
+  are exact identities when nothing fires.
+* ``resume_bitwise_equal`` — a run with injected server kills
+  (``kill:`` fault), auto-restarted from its checkpoint by
+  ``run_with_restarts``, reproduces the uninterrupted fit bit-exactly.
+* ``quarantine_matches_plan`` — quarantined-update counts equal the
+  injector's deterministic corruption plan exactly, per round.
+
+Writes BENCH_faults.json (EXPERIMENTS.md §Faults).  ``--smoke`` is the
+CI-gate variant (tiny data, fewer rounds, same JSON shape).
+
+    PYTHONPATH=src python -m benchmarks.faults_bench [--smoke]
+        [--out BENCH_faults.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+import platform
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Checkpointer, FLConfig, Federation, ModelSpec,
+                        ServerHook, run_with_restarts)
+from repro.data import FederatedLoader, cifar_like, iid_partition
+from repro.models import paper_models as pm
+
+FULL = dict(n_clients=8, rounds=8, width=0.125, n_data=256, n_eval=128,
+            batch=4, steps=2, lr=2e-3, kill=0.3)
+SMOKE = dict(n_clients=4, rounds=4, width=0.125, n_data=128, n_eval=64,
+             batch=4, steps=2, lr=2e-3, kill=0.5)
+
+# the fault ladder: ISSUE acceptance regimes + the bitwise gates' pair
+VARIANTS = [
+    ("clean", ""),
+    ("zero_rate", "crash:0,nan:0"),
+    ("crash10", "crash:0.1"),
+    ("crash10_nan5", "crash:0.1,nan:0.05"),
+    ("crash25_nan5", "crash:0.25,nan:0.05"),
+]
+
+
+def vgg_loss(p, batch):
+    return pm.xent_loss(pm.vgg16_apply(p, batch["x"]), batch["y"]), {}
+
+
+def _setup(cfg):
+    spec = ModelSpec(
+        name="vgg16",
+        init_params=functools.partial(pm.init_vgg16,
+                                      width_mult=cfg["width"]),
+        loss_fn=vgg_loss, unit_order=pm.vgg16_units)
+    x, y = cifar_like(cfg["n_data"], key=0)
+    shards = iid_partition(cfg["n_data"], cfg["n_clients"], key=1)
+    loader = FederatedLoader([{"x": x[s], "y": y[s]} for s in shards],
+                             batch_size=cfg["batch"],
+                             steps_per_round=cfg["steps"])
+    ex, ey = cifar_like(cfg["n_eval"], key=7)
+    ex, ey = jnp.asarray(ex), jnp.asarray(ey)
+
+    @jax.jit
+    def accuracy(params):
+        return (pm.vgg16_apply(params, ex).argmax(-1) == ey).mean()
+
+    return spec, loader, accuracy
+
+
+class _QuarantineCount(ServerHook):
+    def __init__(self):
+        self.count = 0
+
+    def on_round_end(self, server, record, metrics):
+        if metrics is not None and "quarantined" in metrics:
+            self.count += int((np.asarray(metrics["quarantined"]) > 0)
+                              .sum())
+
+
+def _leaves(fed):
+    return [np.asarray(x)
+            for x in jax.tree_util.tree_leaves(fed.server.params)]
+
+
+def _bitequal(a, b):
+    return all(np.array_equal(x, y) for x, y in zip(_leaves(a),
+                                                    _leaves(b)))
+
+
+def run_variant(cfg, *, fraction, faults, seed=0):
+    spec, loader, accuracy = _setup(cfg)
+    fl = FLConfig(n_clients=cfg["n_clients"], train_fraction=fraction,
+                  lr=cfg["lr"], fused_agg="off", packed=True,
+                  faults=faults)
+    quar = _QuarantineCount()
+    fed = Federation.from_config(spec, fl, data=loader, seed=seed,
+                                 eval_fn=accuracy, hooks=[quar])
+    fed.fit(cfg["rounds"])
+    injected = 0
+    inj = fed.server.fault_injector
+    if inj is not None and inj.has_delta:
+        injected = sum(
+            int((inj.corrupt_plan(r, range(cfg["n_clients"]))["mode"]
+                 != 0).sum()) for r in range(cfg["rounds"]))
+    accs = [r.eval_metric for r in fed.history]
+    return fed, {
+        "faults": faults,
+        "accs": [float(a) for a in accs],
+        "final_acc": float(accs[-1]),
+        "finite": bool(all(np.isfinite(x).all() for x in _leaves(fed))),
+        "total_wasted_bytes": float(sum(r.wasted_bytes
+                                        for r in fed.history)),
+        "quarantined": quar.count,
+        "injected_corruptions": injected,
+    }
+
+
+def run_resume_gate(cfg, *, fraction, seed=0):
+    """Kill-at-any-boundary + auto-resume == uninterrupted, bitwise.
+    Both runs share the same crash/NaN chaos (those draws are keyed on
+    coordinates, not the restart count); only the kill axis differs."""
+    spec, loader, accuracy = _setup(cfg)
+    base = "crash:0.1,nan:0.05"
+    fl = FLConfig(n_clients=cfg["n_clients"], train_fraction=fraction,
+                  lr=cfg["lr"], fused_agg="off", packed=True)
+    ref = Federation.from_config(spec, dataclasses.replace(fl, faults=base),
+                                 data=loader, seed=seed, eval_fn=accuracy)
+    ref.fit(cfg["rounds"])
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ck")
+
+        def make(inc):
+            return Federation.from_config(
+                spec, dataclasses.replace(
+                    fl, faults=f"{base},kill:{cfg['kill']}"),
+                data=loader, seed=seed, eval_fn=accuracy,
+                hooks=[Checkpointer(path, every=1)],
+                incarnation=inc)
+
+        fed = run_with_restarts(make, cfg["rounds"], path)
+    return {
+        "restarts": int(fed.server.fault_injector.incarnation),
+        "resume_bitwise_equal": _bitequal(ref, fed),
+        "losses_equal": bool(
+            len(fed.history) == len(ref.history)
+            and all(a.loss == b.loss
+                    for a, b in zip(ref.history, fed.history))),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale run (tiny model/data, fewer rounds)")
+    ap.add_argument("--out", default="BENCH_faults.json")
+    ap.add_argument("--fractions", type=float, nargs="+",
+                    default=[0.25, 0.50])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    cfg = SMOKE if args.smoke else FULL
+
+    results, failures = {}, []
+    for frac in args.fractions:
+        row, feds = {}, {}
+        for name, spec in VARIANTS:
+            fed, res = run_variant(cfg, fraction=frac, faults=spec,
+                                   seed=args.seed)
+            row[name] = res
+            feds[name] = fed
+            print(f"frac={frac:.2f} {name:<13} "
+                  f"acc={res['final_acc']:.3f} "
+                  f"wasted={res['total_wasted_bytes']/1e3:.1f}kB "
+                  f"quarantined={res['quarantined']}"
+                  f"/{res['injected_corruptions']}")
+            if not res["finite"]:
+                failures.append(f"non-finite params: {name}@{frac}")
+            if res["quarantined"] != res["injected_corruptions"]:
+                failures.append(
+                    f"quarantine {res['quarantined']} != injected "
+                    f"{res['injected_corruptions']}: {name}@{frac}")
+        row["zero_fault_bitwise_equal"] = _bitequal(feds["clean"],
+                                                    feds["zero_rate"])
+        if not row["zero_fault_bitwise_equal"]:
+            failures.append(f"zero-rate chaos not bitwise at {frac}")
+        results[f"{frac:.2f}"] = row
+
+    resume = run_resume_gate(cfg, fraction=args.fractions[0],
+                             seed=args.seed)
+    print(f"resume gate: restarts={resume['restarts']} "
+          f"bitwise={resume['resume_bitwise_equal']}")
+    if not resume["resume_bitwise_equal"] or not resume["losses_equal"]:
+        failures.append("kill+resume diverged from uninterrupted run")
+
+    report = {
+        "bench": "faults",
+        "mode": "smoke" if args.smoke else "full",
+        "model": cfg,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "results": results,
+        "resume": resume,
+        "sanity_ok": not failures,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    if failures:
+        raise SystemExit("faults bench sanity FAILED: " +
+                         "; ".join(failures))
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,5 @@
 from .store import (  # noqa: F401
     save_pytree, load_pytree, load_metadata, save_server_state,
-    restore_server_state,
+    restore_server_state, FORMAT_VERSION,
+    CheckpointError, CorruptCheckpointError, CheckpointVersionError,
 )

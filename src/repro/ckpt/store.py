@@ -3,11 +3,22 @@
 Restartable server state for long federated runs: global params, round
 counter, RNG key and selection history.  No external deps (orbax is not
 available offline); paths are the stable "a/b/c" keys from common.pytree.
+
+Writes are crash-atomic (DESIGN.md §14): both files are staged to a tmp
+path, fsync'd and ``os.replace``'d, with the npz committed *before* the
+manifest — a kill at any byte leaves either the previous complete
+checkpoint or the new one, never a torn mix.  Restores verify a CRC32
+over the npz payload and the manifest format version, raising typed
+errors (:class:`CorruptCheckpointError` / :class:`CheckpointVersionError`)
+instead of whatever np.load would garble out of a truncated zip.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
+import zipfile
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -16,20 +27,27 @@ import numpy as np
 
 from ..common import pytree as pt
 
+# bump when the on-disk layout changes incompatibly; readers accept
+# anything <= their own version (older manifests carry no version at
+# all and are treated as version 0)
+FORMAT_VERSION = 1
 
-def save_pytree(path: str, tree: Any, metadata: Optional[Dict] = None):
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat = dict(pt.flatten_with_paths(tree))
-    np.savez(path if path.endswith(".npz") else path + ".npz",
-             **{k: np.asarray(v) for k, v in flat.items()})
-    manifest = {
-        "paths": list(flat.keys()),
-        "shapes": {k: list(np.shape(v)) for k, v in flat.items()},
-        "dtypes": {k: str(np.asarray(v).dtype) for k, v in flat.items()},
-        "metadata": metadata or {},
-    }
-    with open(_manifest_path(path), "w") as f:
-        json.dump(manifest, f, indent=1)
+
+class CheckpointError(RuntimeError):
+    """Base class for typed checkpoint-restore failures."""
+
+
+class CorruptCheckpointError(CheckpointError):
+    """The checkpoint bytes are damaged (truncated, bit-flipped, or not
+    the format the manifest promises)."""
+
+
+class CheckpointVersionError(CheckpointError):
+    """The checkpoint was written by a newer format than this reader."""
+
+
+def _npz_path(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
 
 
 def _manifest_path(path: str) -> str:
@@ -37,12 +55,94 @@ def _manifest_path(path: str) -> str:
     return base + ".json"
 
 
+def _atomic_write(path: str, data: bytes) -> None:
+    """tmp file + fsync + rename: the previous complete file survives a
+    crash at any point, and readers never observe a partial write."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def save_pytree(path: str, tree: Any, metadata: Optional[Dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = dict(pt.flatten_with_paths(tree))
+    buf = io.BytesIO()
+    np.savez(buf, **{k: np.asarray(v) for k, v in flat.items()})
+    payload = buf.getvalue()
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "checksum": zlib.crc32(payload) & 0xFFFFFFFF,
+        "paths": list(flat.keys()),
+        "shapes": {k: list(np.shape(v)) for k, v in flat.items()},
+        "dtypes": {k: str(np.asarray(v).dtype) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    # npz first, manifest second: the manifest (whose checksum covers
+    # the npz) is the commit point both loaders and the crash-restart
+    # harness key off
+    _atomic_write(_npz_path(path), payload)
+    _atomic_write(_manifest_path(path),
+                  json.dumps(manifest, indent=1).encode())
+
+
+def _read_manifest(path: str) -> Dict:
+    mp = _manifest_path(path)
+    if not os.path.exists(mp):
+        return {}
+    try:
+        with open(mp) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CorruptCheckpointError(
+            f"checkpoint manifest {mp} is not valid JSON ({e}); the "
+            "write was torn or the file was damaged") from None
+    ver = int(manifest.get("format_version", 0))
+    if ver > FORMAT_VERSION:
+        raise CheckpointVersionError(
+            f"checkpoint {path} is format version {ver}, this reader "
+            f"understands <= {FORMAT_VERSION}; upgrade the code or "
+            "re-save the checkpoint")
+    return manifest
+
+
+def _verified_bytes(path: str, manifest: Dict) -> bytes:
+    npz_path = _npz_path(path)
+    try:
+        with open(npz_path, "rb") as f:
+            data = f.read()
+    except OSError as e:
+        raise CorruptCheckpointError(
+            f"checkpoint arrays {npz_path} unreadable: {e}") from None
+    want = manifest.get("checksum")
+    if want is not None and (zlib.crc32(data) & 0xFFFFFFFF) != int(want):
+        raise CorruptCheckpointError(
+            f"checkpoint {npz_path} fails its CRC32 check: the file is "
+            "truncated or bit-flipped; restore from the previous "
+            "checkpoint")
+    return data
+
+
 def load_pytree(path: str, like: Any) -> Any:
     """Restore into the structure of ``like`` (params template)."""
-    npz = np.load(path if path.endswith(".npz") else path + ".npz")
-    flat = {k: npz[k] for k in npz.files}
+    manifest = _read_manifest(path)
+    data = _verified_bytes(path, manifest)
+    try:
+        npz = np.load(io.BytesIO(data))
+        flat = {k: npz[k] for k in npz.files}
+    except (zipfile.BadZipFile, ValueError, OSError, EOFError,
+            KeyError) as e:
+        raise CorruptCheckpointError(
+            f"checkpoint {_npz_path(path)} is not a readable npz "
+            f"archive ({e}); the file is truncated or damaged") from None
 
     def fill(p, leaf):
+        if p not in flat:
+            raise CorruptCheckpointError(
+                f"checkpoint {_npz_path(path)} is missing array {p!r} "
+                "the restore template requires")
         arr = flat[p]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{p}: checkpoint shape {arr.shape} != "
@@ -53,14 +153,23 @@ def load_pytree(path: str, like: Any) -> Any:
 
 
 def load_metadata(path: str) -> Dict:
-    with open(_manifest_path(path)) as f:
-        return json.load(f).get("metadata", {})
+    if not os.path.exists(_manifest_path(path)):
+        raise FileNotFoundError(_manifest_path(path))
+    return _read_manifest(path).get("metadata", {})
 
 
-def save_server_state(path: str, server, extra: Optional[Dict] = None):
+def save_server_state(path: str, server, extra: Optional[Dict] = None,
+                      pending_record: Optional[Any] = None):
+    """``pending_record`` lets a Checkpointer hook persist the round it
+    is being called *for*: end-of-round hooks run before the server
+    appends the record to ``history``, so without it a kill right after
+    the save would lose the newest completed round."""
+    history = list(server.history)
+    if pending_record is not None:
+        history.append(pending_record)
     meta = {
-        "round": len(server.history),
-        "history": [vars(r) for r in server.history],
+        "round": len(history),
+        "history": [vars(r) for r in history],
         "sel_history": [np.asarray(s).tolist() for s in server.sel_history],
         "key": np.asarray(jax.random.key_data(server.key)).tolist()
         if hasattr(jax.random, "key_data") else np.asarray(server.key).tolist(),

@@ -4,3 +4,4 @@ from .pytree import (  # noqa: F401
     tree_zeros_like, tree_allclose, tree_any_nan, global_norm, tree_cast,
     tree_stack, tree_unstack, leaf_by_path, tree_size_report,
 )
+from .retry import Backoff, retry_call  # noqa: F401

@@ -176,6 +176,77 @@ def packed_finalize(assign: UnitAssignment, global_params, acc, sel,
                                   acc, is_leaf=_is_leafunit)
 
 
+def gate_packed_updates(assign: UnitAssignment, packed_deltas, valid,
+                        weights, max_norm: float = 0.0
+                        ) -> Tuple[PyTree, jnp.ndarray, jnp.ndarray]:
+    """Packed-delta validation gate (DESIGN.md §14): quarantine hostile
+    uploads *before* the scatter-accumulate sees them.
+
+    A client is quarantined when any element of its **valid** slot rows
+    is non-finite, or (``max_norm > 0``) when its weighted-valid delta
+    sqnorm exceeds ``max_norm**2`` across all leaves.  Returns
+    ``(clean_deltas, gated_weights, quarantined)``:
+
+    * ``clean_deltas`` — quarantined clients' rows zeroed, and every
+      non-finite element zeroed everywhere (the accumulate scatters
+      padding rows with weight 0, and ``0 * NaN`` would still poison
+      the numerator — a torn payload whose NaN tail lands on padding
+      must not sink an otherwise-intact update);
+    * ``gated_weights`` — ``weights * ok``: quarantined clients leave
+      the per-unit denominators, so surviving weights renormalize
+      exactly as if the client had never uploaded;
+    * ``quarantined`` — (C,) float32 0/1 per client.
+
+    Fault-free inputs make every select take its first branch
+    (``where(True, d, 0) == d``; ``w * 1.0 == w`` for finite f32), so
+    an enabled-but-untripped gate is BITWISE transparent — the property
+    the zero-rate chaos tests pin down.
+    """
+    checks = []                                # (finite (C,), sq (C,))
+
+    def vmask(lu, d, v):
+        lead = 1 if lu.kind == "scalar" else 2
+        return jnp.reshape(v != 0, v.shape + (1,) * (d.ndim - lead))
+
+    def check(lu, d, v):
+        c = d.shape[0]
+        if not jnp.issubdtype(d.dtype, jnp.floating):
+            checks.append((jnp.ones((c,), bool),
+                           jnp.zeros((c,), jnp.float32)))
+            return d
+        vb = vmask(lu, d, v)
+        fin = jnp.isfinite(d)
+        # client health is judged on valid rows only: garbage in
+        # weight-0 padding does not incriminate the upload
+        finite = (fin | ~vb).reshape(c, -1).all(axis=1)
+        df = jnp.where(vb & fin, d.astype(jnp.float32), 0.0)
+        checks.append((finite, (df * df).reshape(c, -1).sum(axis=1)))
+        return d
+
+    from .masking import _is_leafunit
+    jax.tree_util.tree_map(check, assign.leaf_units, packed_deltas,
+                           valid, is_leaf=_is_leafunit)
+    ok = checks[0][0]
+    sq = checks[0][1]
+    for f, s in checks[1:]:
+        ok = ok & f
+        sq = sq + s
+    if max_norm > 0.0:
+        ok = ok & (sq <= jnp.float32(max_norm) ** 2)
+    okf = ok.astype(jnp.float32)
+
+    def clean(lu, d, v):
+        if not jnp.issubdtype(d.dtype, jnp.floating):
+            return d
+        keep = ok.reshape((d.shape[0],) + (1,) * (d.ndim - 1))
+        return jnp.where(keep & jnp.isfinite(d), d, jnp.zeros_like(d))
+
+    cleaned = jax.tree_util.tree_map(clean, assign.leaf_units,
+                                     packed_deltas, valid,
+                                     is_leaf=_is_leafunit)
+    return cleaned, weights * okf, 1.0 - okf
+
+
 def fedavg(global_params, deltas, weights) -> PyTree:
     """deltas: pytree with leading client dim C; weights (C,) data sizes."""
     w = weights / jnp.maximum(weights.sum(), 1e-9)

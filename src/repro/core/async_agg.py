@@ -145,9 +145,25 @@ class DelayScheduler:
     needs only the per-client dispatch counters to reproduce every
     future draw (the per-client key stream of DESIGN.md §8)."""
 
-    def __init__(self, dist: str = "none", seed: int = 0):
+    def __init__(self, dist: str = "none", seed: int = 0,
+                 drop_prob: float = 0.0):
         self.dist, self.param = parse_delay_dist(dist)
         self.seed = int(seed)
+        if not 0.0 <= drop_prob < 1.0:
+            raise ValueError(
+                f"drop_prob must be in [0, 1), got {drop_prob}")
+        self.drop_prob = float(drop_prob)
+
+    def dropped(self, client: int, seq: int) -> bool:
+        """Permanent in-transit loss of client ``c``'s ``seq``-th update
+        (not just delay).  Drawn in its own tag domain so enabling drops
+        never shifts the delay draws — a drop_prob=0 run replays the
+        plain scheduler bit-exactly without drawing at all."""
+        if self.drop_prob <= 0.0:
+            return False
+        rng = np.random.default_rng(np.random.SeedSequence(
+            (self.seed, 0xD70B, int(client), int(seq))))
+        return float(rng.random()) < self.drop_prob
 
     def delay(self, client: int, seq: int) -> float:
         if self.dist in ("none", "fixed"):
@@ -208,15 +224,24 @@ class BufferedAggregator:
     """
 
     def __init__(self, buffer_size: int, staleness: str, alpha: float,
-                 flush_fn: Callable):
+                 flush_fn: Callable, gated: bool = False):
         if buffer_size < 1:
             raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
         get_staleness(staleness)          # fail fast on unknown rules
         self.buffer_size = buffer_size
         self.staleness = staleness
         self.alpha = alpha
+        # gated flush_fns (the validation gate wrapped around the
+        # topology's buffered aggregation, session.py) return
+        # (new_params, quarantined) instead of bare params
+        self.gated = gated
         self._flush = jax.jit(flush_fn)
         self.entries: List[BufferedUpdate] = []
+        # duplicate-delivery defense: per-client seq watermark.  Each
+        # client has at most one dispatch in flight, so its seqs arrive
+        # strictly increasing — any (client, seq) at or below the
+        # watermark is a redelivery and is rejected
+        self._last_seq: Dict[int, int] = {}
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -225,8 +250,15 @@ class BufferedAggregator:
     def ready(self) -> bool:
         return len(self.entries) >= self.buffer_size
 
-    def push(self, update: BufferedUpdate):
+    def push(self, update: BufferedUpdate) -> bool:
+        """Accept ``update`` into the buffer; False = duplicate
+        delivery (seq at/below the client's watermark), discarded."""
+        last = self._last_seq.get(update.client)
+        if last is not None and update.seq <= last:
+            return False
+        self._last_seq[update.client] = update.seq
         self.entries.append(update)
+        return True
 
     def flush(self, global_params: PyTree, version: int
               ) -> Tuple[PyTree, Dict[str, Any]]:
@@ -239,8 +271,12 @@ class BufferedAggregator:
         eff = (w * factor).astype(np.float32)
         pdeltas, rows, valid, sel = _stack_entries(entries)
         clients = np.asarray([e.client for e in entries], np.int32)
-        new_params = self._flush(global_params, pdeltas, rows, valid, sel,
-                                 jnp.asarray(eff), jnp.asarray(clients))
+        out = self._flush(global_params, pdeltas, rows, valid, sel,
+                          jnp.asarray(eff), jnp.asarray(clients))
+        if self.gated:
+            new_params, quarantined = out
+        else:
+            new_params, quarantined = out, None
         stats = {
             "entry_sel": np.asarray(sel),
             "entry_clients": clients,
@@ -249,6 +285,8 @@ class BufferedAggregator:
             "effective_weights": eff,
             "losses": np.asarray([e.loss for e in entries], np.float32),
         }
+        if quarantined is not None:
+            stats["quarantined"] = np.asarray(quarantined)
         if all(e.unit_sqnorm is not None for e in entries):
             stats["entry_sqnorm"] = np.stack(
                 [np.asarray(e.unit_sqnorm, np.float32) for e in entries])
@@ -362,7 +400,7 @@ class AsyncRoundEngine:
     """
 
     def __init__(self, server, assign, fl, *, select_fn, cohort_fn,
-                 flush_fn, seed: int = 0):
+                 flush_fn, seed: int = 0, gated: bool = False):
         self.server = server
         self.assign = assign
         self.fl = fl
@@ -370,8 +408,13 @@ class AsyncRoundEngine:
         self.cohort_fn = cohort_fn
         self.n_slots = fl.resolve_n_slots(assign.n_units)
         self.buffer = BufferedAggregator(fl.async_buffer, fl.staleness,
-                                         fl.staleness_alpha, flush_fn)
-        self.scheduler = DelayScheduler(fl.client_delay_dist, seed=seed)
+                                         fl.staleness_alpha, flush_fn,
+                                         gated=gated)
+        self.scheduler = DelayScheduler(fl.client_delay_dist, seed=seed,
+                                        drop_prob=fl.client_drop_prob)
+        # bytes clients uploaded since the last flush that never landed
+        # in the buffer (in-transit loss, crashes, rejected duplicates)
+        self._wasted = 0.0
         self.started = False
         self.version = 0
         self.clock = 0.0
@@ -443,10 +486,29 @@ class AsyncRoundEngine:
             self._begin_version()
             self._dispatch(range(self.fl.n_clients), w_np, batch_fn)
         trigger = None
+        inj = server.fault_injector
         while not self.buffer.ready:
             t_done, c, seq = heapq.heappop(self.pending)
             self.clock = max(self.clock, t_done)
-            self.buffer.push(self.inflight.pop((c, seq)))
+            upd = self.inflight.pop((c, seq))
+            if self.scheduler.dropped(c, seq) or \
+                    (inj is not None and inj.crashed_async(c, seq)):
+                # the update never arrives (in-transit loss / client
+                # crash): the client's upload is wasted work and the
+                # engine re-dispatches it against the current version
+                self._wasted += self._entry_bytes(upd)
+                self._dispatch([c], w_np, batch_fn)
+                continue
+            if inj is not None:
+                upd = inj.perturb_update(upd)     # torn/corrupt delivery
+                accepted = self.buffer.push(upd)
+                if accepted and inj.duplicated(c, seq) \
+                        and not self.buffer.push(upd):
+                    # duplicate delivery: the redelivered bytes crossed
+                    # the WAN, the watermark defense rejected them
+                    self._wasted += self._entry_bytes(upd)
+            else:
+                self.buffer.push(upd)
             if self.buffer.ready:
                 trigger = c           # re-dispatched at the NEW version
             else:
@@ -482,12 +544,22 @@ class AsyncRoundEngine:
         self.flush_clients.append(stats["entry_clients"])
         metrics = {"entry_sel": stats["entry_sel"],
                    "entry_clients": stats["entry_clients"],
-                   "staleness": s, "loss_per_entry": stats["losses"]}
+                   "staleness": s, "loss_per_entry": stats["losses"],
+                   "dropped_bytes": self._wasted}
+        if "quarantined" in stats:
+            metrics["quarantined"] = stats["quarantined"]
+        self._wasted = 0.0     # billed to this flush's record
         for hook in server.hooks:
             hook.on_round_end(server, rec, metrics)
         rec.seconds = time.perf_counter() - t0
         server.history.append(rec)
         return rec
+
+    def _entry_bytes(self, upd: BufferedUpdate) -> float:
+        """Upload cost of one packed update (the client's trained-unit
+        bytes — hub math; good enough for the wasted-bytes column)."""
+        return float((np.asarray(upd.sel_row, np.float32)
+                      * self.server.unit_bytes()).sum())
 
     def _flush_telemetry(self, flush_idx: int, stats: Dict[str, Any]):
         """One flush's staleness-weighted NormTelemetry, or None.
@@ -504,6 +576,10 @@ class AsyncRoundEngine:
             return None
         from .strategies import NormTelemetry
         active = (stats["effective_weights"] > 0)
+        if "quarantined" in stats:
+            # a quarantined entry's delta was discarded by the gate;
+            # its telemetry must not steer selection scores either
+            active = active & (stats["quarantined"] <= 0)
         f = np.where(active, stats["staleness_factor"],
                      0.0).astype(np.float32)
         raw = active.astype(np.float32)
@@ -539,7 +615,8 @@ class AsyncRoundEngine:
         server = self.server
         if not server.sel_history:
             return {"avg_uplink_bytes": 0.0, "avg_trained_params": 0.0,
-                    "total_uplink_bytes": 0.0, "reduction_vs_full": 0.0}
+                    "total_uplink_bytes": 0.0, "reduction_vs_full": 0.0,
+                    "total_wasted_bytes": 0.0, "avg_wasted_bytes": 0.0}
         ub = server.unit_bytes()
         counts = comm.unit_param_counts(self.assign, server.global_params())
         ups, fulls, tps = [], [], []
@@ -564,6 +641,10 @@ class AsyncRoundEngine:
             "avg_staleness": float(np.mean(
                 [r.staleness_mean for r in server.history])),
             "sim_time": float(self.clock),
+            "total_wasted_bytes": float(np.sum(
+                [r.wasted_bytes for r in server.history])),
+            "avg_wasted_bytes": float(np.mean(
+                [r.wasted_bytes for r in server.history])),
         }
 
     # -- checkpoint state (ckpt/store.py) ---------------------------------
@@ -605,6 +686,12 @@ class AsyncRoundEngine:
             "inflight": [self._update_meta(u) for u in inflight],
             "flush_clients": [np.asarray(c).tolist()
                               for c in self.flush_clients],
+            # fault-axis state: the dedup watermark and wasted bytes
+            # accumulated since the last flush (both empty/zero in
+            # fault-free runs, so old checkpoints restore cleanly)
+            "last_seq": {str(c): int(s)
+                         for c, s in self.buffer._last_seq.items()},
+            "wasted_pending": float(self._wasted),
         }
         arrays = {
             "sel": self._sel,
@@ -646,6 +733,9 @@ class AsyncRoundEngine:
         self.version = int(meta["version"])
         self.clock = float(meta["clock"])
         self.seq = np.asarray(meta["seq"], np.int64)
+        self.buffer._last_seq = {int(c): int(s) for c, s in
+                                 meta.get("last_seq", {}).items()}
+        self._wasted = float(meta.get("wasted_pending", 0.0))
         self._sel = np.asarray(arrays["sel"], np.float32)
         self.buffer.entries = updates(meta["buffer"], arrays["buffer"])
         self.inflight = {(u.client, u.seq): u

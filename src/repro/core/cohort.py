@@ -263,6 +263,8 @@ def build_cohort_programs(loss_fn: Callable, assign, fl,
     from .masking import slot_plan
     from .topology import (_cohort_runner, _live_ctx, _selection_setup,
                            resolve_topology)
+    from . import faults as _faults
+    from .aggregation import gate_packed_updates
     topo = resolve_topology(topology if topology is not None
                             else fl.topology)
     strat, ctx = _selection_setup(assign, fl, strategy, scores)
@@ -286,17 +288,33 @@ def build_cohort_programs(loss_fn: Callable, assign, fl,
             sel = sel.at[:, -1].set(1.0)
         return sel
 
+    inject_on = _faults.delta_faults_configured(fl)
+    gate_on = _faults.gate_enabled(fl)
+
     def chunk_step(global_params, acc, sel_chunk, w_chunk, positions,
-                   batches):
+                   batches, mode=None, scale=None):
         rows, valid = jax.vmap(
             lambda s: slot_plan(assign, s, n_slots, global_params)
         )(sel_chunk)
         pdeltas, metrics = run_cohort(cohort, global_params, rows, valid,
                                       batches)
-        acc = accumulate(acc, pdeltas, rows, valid, w_chunk, positions)
         out = {"loss": metrics["loss_mean"]}
         if scoring:
             out["unit_sqnorm"] = metrics["unit_sqnorm"]
+        # fault axis (DESIGN.md §14): corruption + validation gate ride
+        # the chunk program when configured — both bitwise identities
+        # when untripped, so zero-rate chaos keeps chunked == single-
+        # shot == plain bitwise
+        if inject_on:
+            if mode is None:
+                mode = jnp.zeros((chunk_width,), jnp.int32)
+                scale = jnp.ones((chunk_width,), jnp.float32)
+            pdeltas = _faults.chaos_inject(pdeltas, mode, scale)
+        if gate_on:
+            pdeltas, w_chunk, quar = gate_packed_updates(
+                assign, pdeltas, valid, w_chunk, fl.max_delta_norm)
+            out["quarantined"] = quar
+        acc = accumulate(acc, pdeltas, rows, valid, w_chunk, positions)
         return acc, out
 
     def finalize(global_params, acc, sel, weights, losses):
@@ -376,6 +394,14 @@ class CohortEngine:
         ids = np.asarray(self.programs.sampler.sample(
             sk, CohortContext(self.n_registered, self.fl.n_clients,
                               self.fleet)), np.int32)
+        # crash-resilient cohort assembly (DESIGN.md §14): crashed
+        # members are resampled from the rest of the registered fleet
+        # with bounded jittered backoff; slots that exhaust their
+        # retries degrade to zero-weight holes (partial round)
+        dead: List[int] = []
+        inj = server.fault_injector
+        if inj is not None and inj.crash_prob > 0.0:
+            ids, dead = self._resample_crashed(r, ids)
         c = self.fl.n_clients
         if weights is None:
             w = jnp.ones((c,), jnp.float32)
@@ -390,6 +416,10 @@ class CohortEngine:
                     f"weights must have length n_clients={c} (cohort) or "
                     f"n_registered={self.n_registered} (fleet), got "
                     f"{wr.shape[0]}")
+        if dead:
+            mask = np.ones((c,), np.float32)
+            mask[dead] = 0.0
+            w = w * jnp.asarray(mask)
         for hook in server.hooks:
             new_w = hook.on_round_start(server, r, w)
             if new_w is not None:
@@ -399,7 +429,7 @@ class CohortEngine:
         p: Dict[str, Any] = {
             "round": r, "t0": t0, "ids": ids, "w": jnp.asarray(w_np),
             "eff_w": [float(x) for x in w_np], "n_part": n_part,
-            "chunk": 0, "losses": [], "sqnorms": [],
+            "chunk": 0, "losses": [], "sqnorms": [], "quars": [],
             "skipped": n_part == 0, "sel": None, "acc": None,
         }
         if n_part:
@@ -410,6 +440,45 @@ class CohortEngine:
             p["acc"] = self.programs.acc_init(server.global_params())
         self._partial = p
         return p
+
+    def _resample_crashed(self, r: int,
+                          ids: np.ndarray) -> Tuple[np.ndarray, List[int]]:
+        """Replace crashed cohort members with freshly sampled fleet
+        clients (bounded attempts via ``common/retry.py``); returns the
+        repaired ids and the positions that stayed dead."""
+        from ..common.retry import Backoff, retry_call
+        from .faults import ClientCrashed
+        inj = self.server.fault_injector
+        ids = np.array(ids, np.int32)
+        taken = {int(i) for i in ids}
+        dead: List[int] = []
+        backoff = Backoff(attempts=max(1, self.fl.fault_retries),
+                          seed=inj.seed)
+        for pos in range(ids.shape[0]):
+            if not inj.crashed(r, int(ids[pos])):
+                continue
+            taken.discard(int(ids[pos]))
+
+            def attempt(k, _pos=pos):
+                cand = inj.resample(r, _pos, k, self.n_registered,
+                                    frozenset(taken))
+                if cand is None or inj.crashed(r, cand):
+                    raise ClientCrashed(
+                        f"round {r} slot {_pos}: no live replacement "
+                        f"on attempt {k}")
+                return cand
+
+            try:
+                # simulated time: the jittered backoff schedule bounds
+                # attempts but nobody really sleeps (sleep=None)
+                new = retry_call(attempt, backoff=backoff,
+                                 retry_on=(ClientCrashed,),
+                                 token=(r, pos), sleep=None)
+                ids[pos] = new
+                taken.add(int(new))
+            except ClientCrashed:
+                dead.append(pos)
+        return ids, dead
 
     def step_chunk(self, batch_fn: Callable[[int, np.ndarray], Any]):
         p = self._partial
@@ -426,14 +495,25 @@ class CohortEngine:
         lo, hi = j * self.chunk, (j + 1) * self.chunk
         pos = np.arange(lo, hi)
         batches = batch_fn(p["round"], p["ids"][pos])
+        inj = self.server.fault_injector
+        chunk_kw = {}
+        if inj is not None and inj.has_delta:
+            # the corruption plan is a pure function of (seed, round,
+            # client id) — recomputed here, never checkpointed
+            plan = inj.corrupt_plan(p["round"], p["ids"][pos])
+            chunk_kw = {"mode": jnp.asarray(plan["mode"]),
+                        "scale": jnp.asarray(plan["scale"])}
         acc, mets = self.programs.chunk(
             self.server.global_params(), p["acc"], p["sel"][lo:hi],
-            p["w"][lo:hi], jnp.asarray(pos, jnp.int32), batches)
+            p["w"][lo:hi], jnp.asarray(pos, jnp.int32), batches,
+            **chunk_kw)
         p["acc"] = acc
         p["losses"].append(np.asarray(mets["loss"], np.float32))
         if "unit_sqnorm" in mets:
             p["sqnorms"].append(np.asarray(mets["unit_sqnorm"],
                                            np.float32))
+        if "quarantined" in mets:
+            p["quars"].append(np.asarray(mets["quarantined"], np.float32))
         p["chunk"] = j + 1
 
     def finish_round(self):
@@ -445,11 +525,14 @@ class CohortEngine:
         server = self.server
         r = p["round"]
         c = self.fl.n_clients
+        t0 = p["t0"]
         if p["skipped"]:
-            rec = RoundRecord(r, float("nan"), None,
-                              time.perf_counter() - p["t0"], 0.0, 0.0,
+            # loss 0.0 (NOT NaN): a skipped round must never leak NaN
+            # into loss summaries / EMA consumers downstream
+            rec = RoundRecord(r, 0.0, None,
+                              time.perf_counter() - t0, 0.0, 0.0,
                               n_participants=0, skipped=True,
-                              effective_weights=p["eff_w"])
+                              dropped=True, effective_weights=p["eff_w"])
             server.sel_history.append(
                 np.zeros((c, self.assign.n_units), np.float32))
             metrics = None
@@ -461,8 +544,15 @@ class CohortEngine:
             losses = jnp.concatenate(
                 [jnp.asarray(x) for x in p["losses"]]) \
                 if len(p["losses"]) > 1 else jnp.asarray(p["losses"][0])
+            w_fin = p["w"]
+            quar_full = None
+            if p["quars"]:
+                quar_full = np.concatenate(p["quars"])
+                # quarantined clients already accumulated with weight 0
+                # per chunk; zero them in the full-cohort denominator too
+                w_fin = w_fin * jnp.asarray(1.0 - quar_full)
             new_params, loss_mean = self.programs.finalize(
-                server.global_params(), p["acc"], p["sel"], p["w"],
+                server.global_params(), p["acc"], p["sel"], w_fin,
                 losses)
             server.params = new_params   # star topologies: state==params
             server.sel_history.append(np.asarray(p["sel"]))
@@ -471,11 +561,13 @@ class CohortEngine:
             if p["sqnorms"]:
                 metrics["unit_sqnorm"] = np.concatenate(p["sqnorms"],
                                                         axis=0)
+            if quar_full is not None:
+                metrics["quarantined"] = quar_full
             ev = None
             if server.eval_fn is not None:
                 ev = float(server.eval_fn(server.global_params()))
             rec = RoundRecord(r, float(loss_mean), ev,
-                              time.perf_counter() - p["t0"], 0.0, 0.0,
+                              time.perf_counter() - t0, 0.0, 0.0,
                               n_participants=p["n_part"],
                               effective_weights=p["eff_w"])
         # selection-state telemetry BEFORE end-of-round hooks, exactly
@@ -484,12 +576,15 @@ class CohortEngine:
         server.update_sel_state(server._round_telemetry(r, metrics,
                                                         p["eff_w"]))
         self._update_fleet(p, metrics)
+        # clear the in-flight round BEFORE end hooks: a ChaosHook kill
+        # must not leave a completed round marked partial, or the resumed
+        # run would double-apply it
+        self._partial = None
         for hook in server.hooks:
             hook.on_round_end(server, rec, metrics)
-        rec.seconds = time.perf_counter() - p["t0"]
+        rec.seconds = time.perf_counter() - t0
         server.history.append(rec)
         server._trim_history()
-        self._partial = None
         return rec
 
     def _update_fleet(self, p: Dict[str, Any],
@@ -500,6 +595,12 @@ class CohortEngine:
         f = self.fleet
         if metrics is not None:
             active = np.asarray(p["eff_w"], np.float32) > 0
+            if "quarantined" in metrics:
+                # a quarantined upload contributed nothing to the model;
+                # its (possibly poisoned) telemetry must not steer the
+                # sampler either
+                active &= np.asarray(metrics["quarantined"],
+                                     np.float32) <= 0
             act = p["ids"][active]
             if act.size:
                 e = self.fl.sampler_ema
@@ -570,6 +671,7 @@ class CohortEngine:
                 "eff_w": [float(x) for x in p["eff_w"]],
                 "skipped": bool(p["skipped"]),
                 "scored": bool(self.programs.scoring),
+                "gated": bool(p["quars"]),
             }
             pa: Dict[str, Any] = {
                 "ids": np.asarray(p["ids"], np.int32),
@@ -582,6 +684,8 @@ class CohortEngine:
                     pa["losses"] = np.concatenate(p["losses"])
                 if p["sqnorms"]:
                     pa["sqnorm"] = np.concatenate(p["sqnorms"], axis=0)
+                if p["quars"]:
+                    pa["quar"] = np.concatenate(p["quars"])
             arrays["partial"] = pa
         return meta, arrays
 
@@ -608,6 +712,8 @@ class CohortEngine:
                     if pm.get("scored"):
                         pa["sqnorm"] = sds((done, self.assign.n_units),
                                            jnp.float32)
+                    if pm.get("gated"):
+                        pa["quar"] = sds((done,), jnp.float32)
             tpl["partial"] = pa
         return tpl
 
@@ -637,7 +743,8 @@ class CohortEngine:
             "eff_w": [float(x) for x in pm["eff_w"]],
             "n_part": int(pm["n_part"]), "chunk": int(pm["chunk"]),
             "skipped": bool(pm["skipped"]),
-            "losses": [], "sqnorms": [], "sel": None, "acc": None,
+            "losses": [], "sqnorms": [], "quars": [],
+            "sel": None, "acc": None,
         }
         if not p["skipped"]:
             p["sel"] = jnp.asarray(np.asarray(pa["sel"], np.float32))
@@ -646,4 +753,6 @@ class CohortEngine:
                 p["losses"] = [np.asarray(pa["losses"], np.float32)]
             if "sqnorm" in pa:
                 p["sqnorms"] = [np.asarray(pa["sqnorm"], np.float32)]
+            if "quar" in pa:
+                p["quars"] = [np.asarray(pa["quar"], np.float32)]
         self._partial = p

@@ -121,6 +121,25 @@ class FLConfig:
     # rounds fold into running totals, so comm_summary stays exact
     # while accounting memory stays O(cap * cohort)
     history_cap: int = 0
+    # --- fault injection + defenses (core/faults.py, DESIGN.md §14) ---
+    # chaos spec "name:prob[,name:prob[:param]]" over the registered
+    # fault kinds (crash, nan, inf, bitflip, scale, duplicate, torn,
+    # kill).  "" = no injection.  A spec that names delta faults — even
+    # at rate 0 — compiles the corruption transform and validation gate
+    # into the packed round step (both bitwise identities at rate 0)
+    faults: str = ""
+    # validation-gate norm threshold: quarantine any upload whose total
+    # valid-slot delta L2 norm exceeds this (0 = finiteness check only,
+    # and the gate is compiled in only when delta faults are configured)
+    max_delta_norm: float = 0.0
+    # async-path permanent packet loss: each (client, seq) update is
+    # lost with this probability (seeded, DelayScheduler draw domain) —
+    # the engine re-dispatches the client, nothing enters the buffer
+    client_drop_prob: float = 0.0
+    # crash handling: bounded resampling attempts per crashed cohort
+    # slot (common/retry.py jittered backoff) before the slot degrades
+    # to a zero-weight hole in the round
+    fault_retries: int = 3
 
     def __post_init__(self):
         # validate the knobs whose misuse only surfaces rounds later
@@ -176,6 +195,46 @@ class FLConfig:
                 "the cohort engine (n_registered/cohort_chunk) and the "
                 "buffered-async engine (async_buffer) both own the "
                 "round loop — set one of them, not both")
+        if self.max_delta_norm < 0.0:
+            raise ValueError(
+                f"max_delta_norm must be >= 0 (0 = finiteness gate "
+                f"only), got {self.max_delta_norm}")
+        if self.fault_retries < 0:
+            raise ValueError(
+                f"fault_retries must be >= 0, got {self.fault_retries}")
+        if not 0.0 <= self.client_drop_prob < 1.0:
+            raise ValueError(
+                f"client_drop_prob must be in [0, 1), got "
+                f"{self.client_drop_prob}")
+        if self.client_drop_prob > 0.0 and not self.async_buffer:
+            raise ValueError(
+                "client_drop_prob models lost async updates; it needs "
+                "the buffered engine (async_buffer > 0)")
+        if self.faults or self.max_delta_norm:
+            # fail at config time, not rounds later: parse the spec and
+            # check each fault's seam has a round path that can host it
+            from .faults import parse_faults
+            parsed = parse_faults(self.faults)
+            if any(f.seam == "delta" for f in parsed) \
+                    or self.max_delta_norm > 0.0:
+                if not self.packed:
+                    raise ValueError(
+                        "delta faults and max_delta_norm run inside the "
+                        "packed scatter-accumulate: set packed=True")
+                if self.topology == "gossip":
+                    raise ValueError(
+                        "delta faults need a packed aggregation path; "
+                        "the gossip topology has none")
+            if any(f.seam == "delivery" for f in parsed) \
+                    and not self.async_buffer:
+                raise ValueError(
+                    "delivery faults (duplicate, torn) perturb the "
+                    "BufferedAggregator: set async_buffer > 0")
+            if any(f.name == "torn" for f in parsed) and not self.packed:
+                raise ValueError(
+                    "torn delivery corrupts packed payload bytes; the "
+                    "validation gate that catches it runs on the packed "
+                    "path: set packed=True")
 
     def uses_cohort_engine(self) -> bool:
         """Whether Federation attaches the chunk-streaming CohortEngine

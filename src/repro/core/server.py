@@ -53,6 +53,15 @@ class RoundRecord:
     staleness_mean: float = 0.0
     staleness_max: float = 0.0
     sim_time: float = 0.0
+    # bytes that crossed the WAN (or left a client) without landing in
+    # the aggregate: quarantined uploads, duplicate deliveries, updates
+    # lost in transit (DESIGN.md §14) — keeps the comm tables honest
+    # under faults; wasted ⊆ uplink only for quarantined entries
+    wasted_bytes: float = 0.0
+    # every client dropped/crashed: the round was a recorded no-op.
+    # Unlike the legacy NaN loss, dropped rounds carry loss 0.0 and are
+    # excluded from EMAs and convergence summaries explicitly
+    dropped: bool = False
 
 
 class ServerHook:
@@ -117,6 +126,18 @@ class CommAccounting(ServerHook):
                 server.fl)["uplink"]
             record.trained_params = float(np.einsum("cu,u->", entry_sel,
                                                     counts))
+            # wasted: bytes the engine saw leave a client but never
+            # aggregate (duplicates, in-transit loss) plus entries the
+            # validation gate quarantined at flush time
+            wasted = float(metrics.get("dropped_bytes", 0.0))
+            quar = metrics.get("quarantined")
+            if quar is not None:
+                qm = (np.asarray(quar) > 0).astype(entry_sel.dtype)
+                wasted += server.topology.buffered_round_bytes(
+                    entry_sel * qm[:, None],
+                    np.asarray(metrics["entry_clients"]), ub,
+                    server.fl)["uplink"]
+            record.wasted_bytes = wasted
             return
         sel = np.asarray(metrics["sel"])
         if sel.shape[1] != server.assign.n_units:
@@ -134,6 +155,13 @@ class CommAccounting(ServerHook):
         record.uplink_bytes = server.topology.round_bytes(
             sel, ub, server.fl)["uplink"]
         record.trained_params = float(np.einsum("cu,u->", sel, counts))
+        quar = metrics.get("quarantined")
+        if quar is not None:
+            # quarantined clients uploaded (billed above) but their
+            # deltas were discarded by the validation gate
+            qm = (np.asarray(quar) > 0).astype(sel.dtype)
+            record.wasted_bytes = server.topology.round_bytes(
+                sel * qm[:, None], ub, server.fl)["uplink"]
 
     @staticmethod
     def _mask_dropped(sel: np.ndarray, record) -> np.ndarray:
@@ -159,20 +187,25 @@ class RoundLogger(ServerHook):
         self.base = base
 
     def on_round_end(self, server, record, metrics):
+        if record.skipped:
+            # a skipped round is an anomaly worth one line regardless
+            # of cadence — silent no-op rounds read as hangs
+            print(f"  round {record.round:>4d} SKIPPED "
+                  f"(all clients dropped)")
+            return
         last = self.total is not None and record.round == self.total - 1
         if (record.round - self.base) % self.every and not last:
             return
         line = f"  round {record.round:>4d}"
-        if record.skipped:
-            line += " SKIPPED (all clients dropped)"
-        else:
-            line += f" loss={record.loss:.4f}"
-            if record.eval_metric is not None:
-                line += f" eval={record.eval_metric:.4f}"
-            line += f" uplink={record.uplink_bytes/1e6:.1f}MB"
-            if record.sim_time > 0.0:      # buffered-async flush
-                line += (f" t_sim={record.sim_time:.1f}"
-                         f" stale={record.staleness_mean:.2f}")
+        line += f" loss={record.loss:.4f}"
+        if record.eval_metric is not None:
+            line += f" eval={record.eval_metric:.4f}"
+        line += f" uplink={record.uplink_bytes/1e6:.1f}MB"
+        if record.wasted_bytes > 0.0:
+            line += f" wasted={record.wasted_bytes/1e6:.1f}MB"
+        if record.sim_time > 0.0:          # buffered-async flush
+            line += (f" t_sim={record.sim_time:.1f}"
+                     f" stale={record.staleness_mean:.2f}")
         print(line)
 
 
@@ -184,13 +217,18 @@ class Checkpointer(ServerHook):
         self.path = path
         self.every = every
 
-    def _save(self, server):
+    def _save(self, server, pending_record=None):
         from ..ckpt import save_server_state
-        save_server_state(self.path, server)
+        save_server_state(self.path, server,
+                          pending_record=pending_record)
 
     def on_round_end(self, server, record, metrics):
+        # end hooks run before history.append, so the in-flight record
+        # rides along as pending_record — without it the checkpoint
+        # would pair post-round params/keys with pre-round history and
+        # a resume would silently re-run the round
         if self.every and (record.round + 1) % self.every == 0:
-            self._save(server)
+            self._save(server, pending_record=record)
 
     def on_fit_end(self, server, history):
         self._save(server)
@@ -245,6 +283,10 @@ class Server:
         self.history: List[RoundRecord] = []
         self.sel_history: List[np.ndarray] = []
         self._ubytes = None
+        # fault axis (core/faults.py): set by the Federation facade
+        # when FLConfig.faults is non-empty; owns every seeded fault
+        # draw (numpy SeedSequence domain — never the jax key stream)
+        self.fault_injector = None
         # buffered-async engine (core/async_agg.py); attached by the
         # Federation facade when FLConfig.async_buffer > 0
         self.async_engine = None
@@ -300,22 +342,31 @@ class Server:
         eff_w = [float(x) for x in np.asarray(weights)]
         if n_part == 0:
             # every client dropped: a FedAvg denominator of zero — the
-            # round is a recorded no-op, global params unchanged
-            rec = RoundRecord(r, float("nan"), None,
+            # round is a recorded no-op, global params unchanged.  The
+            # record carries loss 0.0 + dropped=True (not NaN: a NaN
+            # here used to leak into logs and loss EMAs)
+            rec = RoundRecord(r, 0.0, None,
                               time.perf_counter() - t0, 0.0, 0.0,
                               n_participants=0, skipped=True,
-                              effective_weights=eff_w)
+                              dropped=True, effective_weights=eff_w)
             self.sel_history.append(
                 np.zeros((c, self.assign.n_units), np.float32))
             metrics = None
         else:
+            step_kw = {}
+            inj = self.fault_injector
+            if inj is not None and inj.has_delta:
+                plan = inj.corrupt_plan(r, range(c))
+                step_kw["fault_plan"] = {
+                    "mode": jnp.asarray(plan["mode"]),
+                    "scale": jnp.asarray(plan["scale"])}
             if self.sel_state is not None:
                 self.params, metrics = self.round_step(
                     self.params, client_batches, weights, rk,
-                    self.sel_state)
+                    self.sel_state, **step_kw)
             else:
                 self.params, metrics = self.round_step(
-                    self.params, client_batches, weights, rk)
+                    self.params, client_batches, weights, rk, **step_kw)
             self.sel_history.append(np.asarray(metrics["sel"]))
             ev = None
             if self.eval_fn is not None:
@@ -434,14 +485,23 @@ class Server:
             hook.on_fit_end(self, self.history)
         return self.history
 
+    def _wasted_summary(self) -> Dict[str, float]:
+        """Fault-accounting columns (DESIGN.md §14), from the per-round
+        records CommAccounting already filled."""
+        per_round = [r.wasted_bytes for r in self.history]
+        total = float(np.sum(per_round)) if per_round else 0.0
+        return {"total_wasted_bytes": total,
+                "avg_wasted_bytes": total / max(1, len(per_round))}
+
     def comm_summary(self) -> Dict[str, float]:
         if self.async_engine is not None and self.async_engine.started:
             return self.async_engine.comm_summary()
         if self._sel_base:
-            return self._capped_summary()
+            return dict(self._capped_summary(), **self._wasted_summary())
         if not self.sel_history:
             return {"avg_uplink_bytes": 0.0, "avg_trained_params": 0.0,
-                    "total_uplink_bytes": 0.0, "reduction_vs_full": 0.0}
+                    "total_uplink_bytes": 0.0, "reduction_vs_full": 0.0,
+                    "total_wasted_bytes": 0.0, "avg_wasted_bytes": 0.0}
         # selection rows of clients whose effective weight was zeroed
         # (straggler dropout) shipped nothing — mask them out so the
         # run summary matches the per-round records
@@ -456,13 +516,16 @@ class Server:
         hist = np.stack(masked)
         if hist.shape[2] != self.assign.n_units:   # legacy no-assign shim
             per_round = [r.uplink_bytes for r in self.history]
-            return {"avg_uplink_bytes": float(np.mean(per_round)),
-                    "avg_trained_params": float(np.mean(
-                        [r.trained_params for r in self.history])),
-                    "total_uplink_bytes": float(np.sum(per_round)),
-                    "reduction_vs_full": 0.0}
-        return self.topology.summary(self.assign, self.global_params(),
-                                     hist, self.fl)
+            return dict({"avg_uplink_bytes": float(np.mean(per_round)),
+                         "avg_trained_params": float(np.mean(
+                             [r.trained_params for r in self.history])),
+                         "total_uplink_bytes": float(np.sum(per_round)),
+                         "reduction_vs_full": 0.0},
+                        **self._wasted_summary())
+        return dict(self.topology.summary(self.assign,
+                                          self.global_params(),
+                                          hist, self.fl),
+                    **self._wasted_summary())
 
     def _capped_summary(self) -> Dict[str, float]:
         """``comm_summary`` with ``history_cap`` trimming active: the

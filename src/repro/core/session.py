@@ -92,7 +92,8 @@ class Federation:
                  hooks: Sequence[ServerHook] = (),
                  strategy: Union[str, SelectionStrategy, None] = None,
                  scores: Optional[jnp.ndarray] = None,
-                 topology: Union[str, Topology, None] = None):
+                 topology: Union[str, Topology, None] = None,
+                 incarnation: int = 0):
         self.fl = fl
         self.assign = assign
         self.loader = loader
@@ -105,19 +106,42 @@ class Federation:
                              eval_fn=eval_fn, seed=seed,
                              dropout_rate=dropout_rate, hooks=hooks,
                              topology=self.topology, strategy=strategy)
+        # fault-injection chaos axis (DESIGN.md §14): the injector is a
+        # pure function of (seed, incarnation, coordinates), so a
+        # restarted process with incarnation+1 replays a *different*
+        # kill schedule while the training key streams stay identical
+        injector = None
+        if fl.faults:
+            from .faults import FaultInjector
+            injector = FaultInjector(fl.faults, seed=seed,
+                                     incarnation=incarnation)
+        self.server.fault_injector = injector
         if fl.async_buffer:
             # semi-async buffered rounds (DESIGN.md §8): the engine owns
             # the simulated-delay scheduler, per-version selection keys
             # and the FedBuff-style buffer; one fit "round" = one flush
             from .async_agg import AsyncRoundEngine, build_cohort_step
+            from .faults import gate_enabled
             select_fn, cohort_fn, _ = build_cohort_step(
                 loss_fn, assign, fl, loss_kwargs, strategy=strategy,
                 scores=scores)
+            base_flush = self.topology.build_buffered_flush(assign, fl)
+            flush_fn, gated = base_flush, False
+            if gate_enabled(fl):
+                from .aggregation import gate_packed_updates
+
+                def flush_fn(g, pdeltas, rows, valid, sel, weights,
+                             clients, _base=base_flush):
+                    pdeltas, gw, quar = gate_packed_updates(
+                        assign, pdeltas, valid, weights,
+                        fl.max_delta_norm)
+                    return _base(g, pdeltas, rows, valid, sel, gw,
+                                 clients), quar
+                gated = True
             self.server.attach_async_engine(AsyncRoundEngine(
                 self.server, assign, fl, select_fn=select_fn,
-                cohort_fn=cohort_fn,
-                flush_fn=self.topology.build_buffered_flush(assign, fl),
-                seed=seed))
+                cohort_fn=cohort_fn, flush_fn=flush_fn,
+                seed=seed, gated=gated))
         if fl.uses_cohort_engine():
             # fleet-scale cohort engine (DESIGN.md §13): samples the
             # round's cohort out of n_registered clients and streams it
@@ -129,6 +153,11 @@ class Federation:
                 scores=scores, topology=self.topology)
             self.server.attach_cohort_engine(CohortEngine(
                 self.server, assign, fl, programs=programs, seed=seed))
+        if injector is not None:
+            # appended LAST so a user Checkpointer hook has already
+            # saved the round before an injected kill can raise
+            from .faults import ChaosHook
+            self.server.hooks.append(ChaosHook(injector))
 
     # -- construction -----------------------------------------------------
 

@@ -57,7 +57,8 @@ import numpy as np
 import dataclasses
 
 from . import comm
-from .aggregation import (fedavg, hierarchical_edge_partials,
+from .aggregation import (fedavg, gate_packed_updates,
+                          hierarchical_edge_partials,
                           hierarchical_masked_fedavg,
                           hierarchical_masked_fedavg_packed, masked_fedavg,
                           masked_fedavg_packed, packed_acc_init,
@@ -168,6 +169,18 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
         raise ValueError(
             f"topology {fl.topology!r} has no packed aggregation path; "
             "set FLConfig.packed=False")
+    # the fault axis (core/faults.py): delta corruption + the validation
+    # gate are compiled into the packed branch only — both are bitwise
+    # identities when untripped, so a zero-rate chaos config keeps the
+    # plain trace's numbers exactly
+    from . import faults as _faults
+    inject_on = _faults.delta_faults_configured(fl)
+    gate_on = _faults.gate_enabled(fl)
+    if (inject_on or gate_on) and not use_packed:
+        raise ValueError(
+            "delta faults / the validation gate run inside the packed "
+            "scatter-accumulate; set FLConfig.packed=True (or drop "
+            "delta faults and max_delta_norm)")
     n_slots = fl.resolve_n_slots(ctx.n_units)
     scoring = strat.stateful
     run_cohort = _cohort_runner(fl, fl.n_clients)
@@ -198,12 +211,13 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
         return jax.vmap(one_client)(sel, client_batches)
 
     def round_step(global_params, client_batches, weights, round_key,
-                   sel_state=None):
+                   sel_state=None, fault_plan=None):
         c = _live_ctx(ctx, sel_state)
         sel = strat.select(round_key, c)
         if fl.always_train_head:
             sel = sel.at[:, -1].set(1.0)
 
+        quarantined = None
         if strat.dense:
             # every unit trained: unmasked local step + the topology's
             # dense aggregation — for hub, bit-exact with the
@@ -216,6 +230,16 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
                 lambda s: slot_plan(assign, s, n_slots, global_params))(sel)
             pdeltas, metrics = run_cohort(packed_cohort, global_params,
                                           rows, valid, client_batches)
+            if inject_on:
+                if fault_plan is None:
+                    fault_plan = {
+                        "mode": jnp.zeros((fl.n_clients,), jnp.int32),
+                        "scale": jnp.ones((fl.n_clients,), jnp.float32)}
+                pdeltas = _faults.chaos_inject(pdeltas, fault_plan["mode"],
+                                               fault_plan["scale"])
+            if gate_on:
+                pdeltas, weights, quarantined = gate_packed_updates(
+                    assign, pdeltas, valid, weights, fl.max_delta_norm)
             new_params = aggregate_packed(global_params, pdeltas, rows,
                                           valid, sel, weights)
         else:
@@ -229,6 +253,8 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
         }
         if scoring:
             out_metrics["unit_sqnorm"] = metrics["unit_sqnorm"]
+        if quarantined is not None:
+            out_metrics["quarantined"] = quarantined
         return new_params, out_metrics
 
     # the Server derives state ownership from the strategy actually

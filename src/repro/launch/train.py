@@ -96,6 +96,18 @@ def main():
                     help="re-exec under the production launch profile "
                          "(launch/env.py: latency-hiding scheduler, "
                          "combined collectives, tcmalloc)")
+    ap.add_argument("--faults", default="",
+                    help="fault-injection chaos spec, e.g. "
+                         "'crash:0.1,nan:0.05,kill:0.02' (core/faults.py;"
+                         " delta faults need --packed)")
+    ap.add_argument("--max-delta-norm", type=float, default=0.0,
+                    help="quarantine packed updates whose delta norm "
+                         "exceeds this (0 = isfinite gate only)")
+    ap.add_argument("--drop-prob", type=float, default=0.0,
+                    help="per-dispatch in-transit loss probability "
+                         "(async mode only)")
+    ap.add_argument("--fault-retries", type=int, default=3,
+                    help="resample attempts per crashed cohort slot")
     ap.add_argument("--dropout", type=float, default=0.0)
     ap.add_argument("--lr", type=float, default=2e-3)
     ap.add_argument("--batch-size", type=int, default=4)
@@ -152,7 +164,11 @@ def main():
                   cohort_chunk=args.cohort_chunk,
                   client_sampler=args.client_sampler,
                   client_shards=args.client_shards,
-                  history_cap=args.history_cap)
+                  history_cap=args.history_cap,
+                  faults=args.faults,
+                  max_delta_norm=args.max_delta_norm,
+                  client_drop_prob=args.drop_prob,
+                  fault_retries=args.fault_retries)
     hooks = [Checkpointer(args.ckpt)] if args.ckpt else []
     fed = Federation.from_config(cfg, fl, data=loader, seed=args.seed,
                                  dropout_rate=args.dropout, hooks=hooks)
@@ -171,7 +187,8 @@ def main():
            f" sampler={fl.client_sampler or 'uniform'}"
            if fl.uses_cohort_engine() else "") +
           (f" client_shards={fl.client_shards}"
-           if fl.client_shards else ""))
+           if fl.client_shards else "") +
+          (f" faults={fl.faults}" if fl.faults else ""))
     t0 = time.time()
     fed.fit(args.rounds, log_every=1)
     print(f"total {time.time()-t0:.1f}s; comm summary:")

@@ -22,6 +22,10 @@ done
 
 python -m pytest -q "${ARGS[@]+"${ARGS[@]}"}"
 
+# chaos harness smoke (runs in --fast too): zero-rate chaos bitwise ==
+# clean, kill+resume bitwise == uninterrupted, quarantine == plan
+python -m benchmarks.faults_bench --smoke --out results/BENCH_faults_smoke.json
+
 if [[ "$FAST" == "0" ]]; then
   # one representative (arch x shape x mesh) dry-run as a smoke gate
   python -m benchmarks.run_dryrun_all --mesh single \

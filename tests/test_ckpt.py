@@ -101,3 +101,94 @@ def test_server_state_roundtrip(tmp_path, rng):
     meta = restore_server_state(path, srv2)
     assert meta["round"] == 1
     assert tree_allclose(srv.params, srv2.params)
+
+
+# -- adversarial checkpoint files (DESIGN.md §14) --------------------------
+
+def _save_small(tmp_path, name="adv"):
+    from repro.ckpt import save_pytree
+    p = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+         "b": {"c": jnp.ones((5,), jnp.int32)}}
+    path = str(tmp_path / name)
+    save_pytree(path, p, metadata={"round": 3})
+    return path, p
+
+
+def test_truncated_npz_raises_typed_error(tmp_path):
+    from repro.ckpt import CorruptCheckpointError
+    path, p = _save_small(tmp_path)
+    with open(path + ".npz", "rb") as f:
+        data = f.read()
+    with open(path + ".npz", "wb") as f:
+        f.write(data[:len(data) // 2])
+    with pytest.raises(CorruptCheckpointError, match="truncated|CRC32"):
+        load_pytree(path, p)
+
+
+def test_bitflipped_npz_raises_typed_error(tmp_path):
+    from repro.ckpt import CorruptCheckpointError
+    path, p = _save_small(tmp_path)
+    with open(path + ".npz", "rb") as f:
+        data = bytearray(f.read())
+    data[len(data) // 2] ^= 0x40
+    with open(path + ".npz", "wb") as f:
+        f.write(bytes(data))
+    with pytest.raises(CorruptCheckpointError, match="CRC32"):
+        load_pytree(path, p)
+
+
+def test_version_mismatch_raises_typed_error(tmp_path):
+    from repro.ckpt import CheckpointVersionError, FORMAT_VERSION
+    path, p = _save_small(tmp_path)
+    with open(path + ".json") as f:
+        man = json.load(f)
+    man["format_version"] = FORMAT_VERSION + 1
+    with open(path + ".json", "w") as f:
+        json.dump(man, f)
+    with pytest.raises(CheckpointVersionError, match="format version"):
+        load_pytree(path, p)
+    with pytest.raises(CheckpointVersionError):
+        load_metadata(path)
+
+
+def test_torn_manifest_raises_typed_error(tmp_path):
+    from repro.ckpt import CorruptCheckpointError
+    path, p = _save_small(tmp_path)
+    with open(path + ".json") as f:
+        text = f.read()
+    with open(path + ".json", "w") as f:
+        f.write(text[:len(text) // 2])        # torn mid-write
+    with pytest.raises(CorruptCheckpointError, match="JSON"):
+        load_pytree(path, p)
+
+
+def test_legacy_manifest_without_checksum_still_loads(tmp_path):
+    """Pre-versioning checkpoints (no format_version / checksum keys)
+    must keep loading — the verification is opt-in by presence."""
+    from repro.common import tree_allclose as close
+    path, p = _save_small(tmp_path)
+    with open(path + ".json") as f:
+        man = json.load(f)
+    del man["format_version"], man["checksum"]
+    with open(path + ".json", "w") as f:
+        json.dump(man, f)
+    assert close(p, load_pytree(path, p))
+    assert load_metadata(path)["round"] == 3
+
+
+def test_atomic_overwrite_keeps_last_good(tmp_path):
+    """A crash mid-save must leave the previous complete checkpoint:
+    writes stage to a .tmp path and os.replace over the target, so a
+    torn temp file is never visible under the real name."""
+    from repro.ckpt import save_pytree
+    path, p = _save_small(tmp_path)
+    # simulate a writer dying mid-stage: the tmp file exists, torn
+    with open(path + ".npz.tmp", "wb") as f:
+        f.write(b"torn partial bytes")
+    p2 = load_pytree(path, p)          # last-good still loads
+    from repro.common import tree_allclose as close
+    assert close(p, p2)
+    # a later successful save replaces cleanly and remains loadable
+    save_pytree(path, p, metadata={"round": 4})
+    assert load_metadata(path)["round"] == 4
+    assert close(p, load_pytree(path, p))

@@ -1,0 +1,399 @@
+"""Fault-injection chaos axis (DESIGN.md §14): the fault registry and
+spec parser, seeded determinism, the zero-rate bitwise-transparency
+property on all three round paths (sync packed / buffered-async /
+chunked-cohort), quarantine exactness against the injected corruption
+plan, crash resample with bounded retry, permanent in-transit loss, and
+the kill-at-any-boundary + auto-resume crash-restart harness."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.retry import Backoff, retry_call
+from repro.core import (Checkpointer, FLConfig, Fault, Federation,
+                        ServerHook, UnknownFaultError, get_fault,
+                        parse_faults, register_fault, registered_faults,
+                        run_with_restarts, unregister_fault)
+from repro.core.faults import FaultInjector
+from repro.data import FederatedLoader, iid_partition
+from repro.models.toy import init_toy_mlp, toy_batches, toy_loss, toy_units
+
+C = 4
+
+
+def _setup():
+    key = jax.random.PRNGKey(0)
+    params = init_toy_mlp(key, n_blocks=6, d=16, hidden=32, out=4)
+    assign = toy_units(params)
+    batches = toy_batches(jax.random.fold_in(key, 1), n_clients=C,
+                          steps=2, batch=2, d=16, out=4)
+    return params, assign, batches
+
+
+def _bf(batches):
+    return lambda r, ids: jax.tree_util.tree_map(
+        lambda x: x[np.asarray(ids)], batches)
+
+
+def _leaves(fed):
+    return [np.asarray(x)
+            for x in jax.tree_util.tree_leaves(fed.server.params)]
+
+
+def _assert_bitequal(a, b):
+    for x, y in zip(_leaves(a), _leaves(b)):
+        assert np.array_equal(x, y), "params diverged bitwise"
+
+
+SYNC = FLConfig(n_clients=C, train_fraction=0.5, packed=True,
+                fused_agg="off")
+COHORT = dataclasses.replace(SYNC, cohort_chunk=2, n_registered=C)
+ASYNC = dataclasses.replace(SYNC, async_buffer=C, staleness="constant",
+                            client_delay_dist="none")
+
+
+def _fed(fl, params, assign, **kw):
+    return Federation(loss_fn=toy_loss, params=params, assign=assign,
+                      fl=fl, seed=3, **kw)
+
+
+def _run(fed, fl, batches, rounds=3):
+    if fl.uses_cohort_engine():
+        return fed.server.run(rounds, _bf(batches))
+    return fed.server.run(rounds, lambda r: batches)
+
+
+# -- registry + parser -----------------------------------------------------
+
+def test_fault_registry_and_parser():
+    assert {"crash", "nan", "inf", "bitflip", "scale", "duplicate",
+            "torn", "kill"} <= set(registered_faults())
+    faults = parse_faults("crash:0.1,nan:0.05,scale:0.02:512")
+    assert [f.name for f in faults] == ["crash", "nan", "scale"]
+    assert faults[0].prob == pytest.approx(0.1)
+    assert faults[2].param == pytest.approx(512.0)
+    with pytest.raises(UnknownFaultError) as e:
+        get_fault("meteor")
+    assert "registered" in str(e.value)
+    with pytest.raises(ValueError):
+        parse_faults("crash:1.5")
+    with pytest.raises(ValueError):
+        parse_faults("crash:oops")
+    with pytest.raises(ValueError):
+        parse_faults("crash")
+
+
+def test_register_fault_plugin():
+    @register_fault
+    class Meteor(Fault):
+        name = "meteor"
+        seam = "crash"
+    try:
+        assert "meteor" in registered_faults()
+        (f,) = parse_faults("meteor:0.5")
+        assert isinstance(f, Meteor) and f.prob == 0.5
+    finally:
+        unregister_fault("meteor")
+    assert "meteor" not in registered_faults()
+
+
+def test_injector_determinism():
+    a = FaultInjector("crash:0.3,nan:0.2", seed=7)
+    b = FaultInjector("crash:0.3,nan:0.2", seed=7)
+    assert [a.crashed(r, c) for r in range(5) for c in range(C)] == \
+        [b.crashed(r, c) for r in range(5) for c in range(C)]
+    pa, pb = a.corrupt_plan(2, range(C)), b.corrupt_plan(2, range(C))
+    assert np.array_equal(pa["mode"], pb["mode"])
+    other = FaultInjector("crash:0.3,nan:0.2", seed=8)
+    grid = [(r, c) for r in range(20) for c in range(C)]
+    assert [a.crashed(r, c) for r, c in grid] != \
+        [other.crashed(r, c) for r, c in grid]
+
+
+def test_flconfig_validates_fault_specs():
+    with pytest.raises(ValueError):
+        FLConfig(n_clients=C, faults="nan:0.1")      # delta needs packed
+    with pytest.raises(ValueError):
+        FLConfig(n_clients=C, packed=True, faults="duplicate:0.1")
+    with pytest.raises(ValueError):
+        FLConfig(n_clients=C, client_drop_prob=0.1)  # needs async_buffer
+    with pytest.raises(ValueError):
+        FLConfig(n_clients=C, faults="nan:0.1", packed=True,
+                 topology="gossip")
+
+
+# -- retry/backoff ---------------------------------------------------------
+
+def test_backoff_deterministic_and_bounded():
+    bo = Backoff(attempts=5, base=0.1, factor=2.0, max_delay=0.5,
+                 jitter=0.5, seed=3)
+    ds = [bo.delay(k, token=(1, 2)) for k in range(5)]
+    assert ds == [bo.delay(k, token=(1, 2)) for k in range(5)]
+    for k, d in enumerate(ds):
+        cap = min(0.1 * 2.0 ** k, 0.5)
+        assert 0.5 * cap <= d <= cap
+    assert ds != [bo.delay(k, token=(1, 3)) for k in range(5)]
+
+
+def test_retry_call_retries_then_raises():
+    calls = []
+
+    def flaky(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise OSError("transient")
+        return "ok"
+
+    assert retry_call(flaky, backoff=Backoff(attempts=3), sleep=None) \
+        == "ok"
+    assert calls == [0, 1, 2]
+    with pytest.raises(OSError):
+        retry_call(lambda k: (_ for _ in ()).throw(OSError("always")),
+                   backoff=Backoff(attempts=2), sleep=None)
+
+
+# -- zero-rate chaos is a bitwise no-op on every round path ----------------
+
+@pytest.mark.parametrize("fl", [SYNC, COHORT, ASYNC],
+                         ids=["sync", "cohort", "async"])
+def test_zero_rate_faults_bitwise_noop(fl):
+    """An enabled-but-untripped chaos config (every rate 0.0) must leave
+    every round path bitwise identical to a run with no fault axis at
+    all: the injected where-chains and the validation gate are exact
+    identities when nothing fires."""
+    params, assign, batches = _setup()
+    ref = _fed(fl, params, assign)
+    _run(ref, fl, batches)
+    spec = "crash:0,nan:0,kill:0" if not fl.async_buffer \
+        else "crash:0,nan:0,kill:0,duplicate:0,torn:0"
+    z = _fed(dataclasses.replace(fl, faults=spec), params, assign)
+    _run(z, fl, batches)
+    _assert_bitequal(ref, z)
+    for ra, rb in zip(ref.history, z.history):
+        assert ra.loss == rb.loss
+        assert rb.wasted_bytes == 0.0
+
+
+# -- quarantine ------------------------------------------------------------
+
+class _Capture(ServerHook):
+    def __init__(self):
+        self.quars = []
+
+    def on_round_end(self, server, record, metrics):
+        q = None if metrics is None else metrics.get("quarantined")
+        self.quars.append(None if q is None
+                          else np.asarray(q, np.float32))
+
+
+@pytest.mark.parametrize("fl", [SYNC, COHORT], ids=["sync", "cohort"])
+def test_quarantine_counts_match_injected_corruptions(fl):
+    """Every NaN-corrupted upload — and ONLY those — must be quarantined
+    by the validation gate, exactly matching the injector's deterministic
+    corruption plan recomputed from the same seed."""
+    params, assign, batches = _setup()
+    cap = _Capture()
+    fed = _fed(dataclasses.replace(fl, faults="nan:0.4"), params, assign,
+               hooks=[cap])
+    _run(fed, fl, batches, rounds=4)
+    inj = fed.server.fault_injector
+    assert inj.has_delta
+    hit = 0
+    for r, q in enumerate(cap.quars):
+        want = (inj.corrupt_plan(r, range(C))["mode"] != 0)
+        assert q is not None
+        assert np.array_equal(q > 0, want), f"round {r}"
+        hit += int(want.sum())
+    assert hit > 0, "rate 0.4 over 16 draws fired nothing; seed broken?"
+    for x in _leaves(fed):
+        assert np.isfinite(x).all()
+    assert sum(r.wasted_bytes for r in fed.history) > 0.0
+
+
+def test_norm_gate_quarantines_scaled_deltas():
+    """A magnitude-scaled (still finite) delta sails through the
+    isfinite check and must be caught by the norm gate instead."""
+    params, assign, batches = _setup()
+    cap = _Capture()
+    fl = dataclasses.replace(SYNC, faults="scale:0.4:4096",
+                             max_delta_norm=100.0)
+    fed = _fed(fl, params, assign, hooks=[cap])
+    _run(fed, SYNC, batches, rounds=3)
+    inj = fed.server.fault_injector
+    for r, q in enumerate(cap.quars):
+        want = (inj.corrupt_plan(r, range(C))["mode"] != 0)
+        assert np.array_equal(q > 0, want), f"round {r}"
+    for x in _leaves(fed):
+        assert np.isfinite(x).all()
+
+
+def test_chaos_run_completes_finite():
+    """The acceptance mix — 10% crash + 5% NaN corruption — must fit to
+    completion with finite params on the cohort path (crashed slots are
+    resampled from the fleet, corrupted uploads quarantined)."""
+    params, assign, batches8 = (_setup()[0], _setup()[1],
+                                toy_batches(jax.random.PRNGKey(9),
+                                            n_clients=8, steps=2,
+                                            batch=2, d=16, out=4))
+    fl = dataclasses.replace(COHORT, n_registered=8,
+                             faults="crash:0.1,nan:0.05")
+    fed = _fed(fl, params, assign)
+    hist = fed.server.run(5, _bf(batches8))
+    assert len(hist) == 5
+    for x in _leaves(fed):
+        assert np.isfinite(x).all()
+    for r in hist:
+        assert np.isfinite(r.loss)
+
+
+# -- crash resample / dropped rounds ---------------------------------------
+
+def test_cohort_crash_resample_replaces_dead_members():
+    """With a fleet larger than the cohort and a moderate crash rate,
+    the engine must resample live replacements (full participation) on
+    at least some rounds where the original draw crashed."""
+    params, assign, _ = _setup()
+    batches8 = toy_batches(jax.random.PRNGKey(9), n_clients=8, steps=2,
+                           batch=2, d=16, out=4)
+    fl = dataclasses.replace(COHORT, n_registered=8, faults="crash:0.3")
+    fed = _fed(fl, params, assign)
+    eng = fed.server.cohort_engine
+    inj = fed.server.fault_injector
+    crashed_draws = 0
+    for r in range(4):
+        p = eng.begin_round()
+        # whatever ids ended up in the cohort must be alive (or the
+        # slot zero-weighted)
+        w = np.asarray(p["w"], np.float32)
+        for pos, cid in enumerate(p["ids"]):
+            if w[pos] > 0:
+                assert not inj.crashed(r, int(cid))
+        crashed_draws += sum(inj.crashed(r, int(c)) for c in range(8))
+        while p["chunk"] < eng.n_chunks:
+            eng.step_chunk(_bf(batches8))
+        eng.finish_round()
+    assert crashed_draws > 0, "crash:0.3 never fired across 32 draws"
+
+
+def test_all_crashed_round_degrades_to_dropped():
+    """crash:1.0 kills every candidate including resamples: the round
+    must degrade to a recorded skip (loss 0.0, dropped=True) rather
+    than poisoning the params or raising."""
+    params, assign, batches = _setup()
+    fl = dataclasses.replace(COHORT, faults="crash:1.0", fault_retries=2)
+    fed = _fed(fl, params, assign)
+    hist = fed.server.run(2, _bf(batches))
+    for rec in hist:
+        assert rec.skipped and rec.dropped
+        assert rec.loss == 0.0 and not np.isnan(rec.loss)
+        assert rec.n_participants == 0
+    _assert_bitequal(fed, _fed(fl, params, assign))  # params untouched
+
+
+# -- async delivery faults -------------------------------------------------
+
+def test_delay_scheduler_drop_prob_deterministic():
+    from repro.core import DelayScheduler
+    a = DelayScheduler("none", seed=4, drop_prob=0.3)
+    b = DelayScheduler("none", seed=4, drop_prob=0.3)
+    grid = [(c, s) for c in range(C) for s in range(16)]
+    da = [a.dropped(c, s) for c, s in grid]
+    assert da == [b.dropped(c, s) for c, s in grid]
+    assert any(da) and not all(da)
+    none = DelayScheduler("none", seed=4, drop_prob=0.0)
+    assert not any(none.dropped(c, s) for c, s in grid)
+    with pytest.raises(ValueError):
+        DelayScheduler("none", drop_prob=1.0)
+
+
+def test_async_chaos_completes_and_accounts_waste():
+    """Duplicates, torn payloads, in-transit loss and async client
+    crashes together: the run completes finite, and the wasted-bytes
+    column records the lost traffic."""
+    params, assign, batches = _setup()
+    fl = dataclasses.replace(ASYNC, client_drop_prob=0.2,
+                             faults="duplicate:0.3,torn:0.2,crash:0.1")
+    fed = _fed(fl, params, assign)
+    hist = fed.server.run(5, lambda r: batches)
+    assert len(hist) == 5
+    for x in _leaves(fed):
+        assert np.isfinite(x).all()
+    total = fed.comm_summary()["total_wasted_bytes"]
+    assert total > 0.0
+    assert total == pytest.approx(sum(r.wasted_bytes for r in hist))
+
+
+def test_buffered_aggregator_rejects_duplicate_seq():
+    from repro.core import BufferedUpdate
+    from repro.core.async_agg import BufferedAggregator
+    agg = BufferedAggregator(8, "constant", 0.5, lambda *a: a[0])
+    upd = BufferedUpdate(client=1, seq=3, version=0, t_done=0.0,
+                         weight=1.0, loss=0.0,
+                         sel_row=np.zeros((2,), np.float32),
+                         pdelta={}, rows=np.zeros((1,), np.int32),
+                         valid=np.zeros((1,), np.float32))
+    assert agg.push(upd)
+    assert not agg.push(upd)                       # exact redelivery
+    assert not agg.push(dataclasses.replace(upd, seq=2))   # stale seq
+    assert agg.push(dataclasses.replace(upd, seq=4))
+    assert agg.push(dataclasses.replace(upd, client=2, seq=3))
+
+
+# -- kill + resume ---------------------------------------------------------
+
+def _loader():
+    rng = np.random.default_rng(0)
+    data = {"x": rng.normal(0, 1, (64, 16)).astype(np.float32),
+            "y": rng.normal(0, 1, (64, 4)).astype(np.float32)}
+    shards = iid_partition(64, C, key=1)
+    return FederatedLoader([{k: v[s] for k, v in data.items()}
+                            for s in shards], batch_size=2,
+                           steps_per_round=2, key=5)
+
+
+@pytest.mark.parametrize("fl", [SYNC, COHORT, ASYNC],
+                         ids=["sync", "cohort", "async"])
+def test_kill_and_resume_bitwise_equals_uninterrupted(tmp_path, fl):
+    """The crash-restart harness: inject server kills between end-of-
+    round hooks, auto-resume from the last checkpoint, and require the
+    stitched run to reproduce the uninterrupted fit bit-exactly —
+    params, per-round losses and history length."""
+    rounds = 5
+    params, assign, _ = _setup()
+    ref = Federation(loss_fn=toy_loss, params=params, assign=assign,
+                     fl=dataclasses.replace(fl, faults=""),
+                     loader=_loader(), seed=3)
+    ref.fit(rounds)
+
+    path = str(tmp_path / "ck")
+
+    def make(inc):
+        return Federation(loss_fn=toy_loss, params=params, assign=assign,
+                          fl=dataclasses.replace(fl, faults="kill:0.5"),
+                          loader=_loader(), seed=3, incarnation=inc,
+                          hooks=[Checkpointer(path, every=1)])
+
+    fed = run_with_restarts(make, rounds, path)
+    assert fed.server.fault_injector.incarnation > 0, \
+        "kill:0.5 over 5 rounds never fired; the harness proved nothing"
+    _assert_bitequal(ref, fed)
+    assert len(fed.history) == rounds
+    for ra, rb in zip(ref.history, fed.history):
+        assert ra.round == rb.round and ra.loss == rb.loss
+
+
+def test_sync_all_dropped_round_records_zero_loss(capsys):
+    """The all-dropped-round NaN leak (sync path): a round with no
+    participants must record loss 0.0 + dropped=True and log an
+    explicit SKIPPED line, never a NaN that poisons summaries."""
+    from repro.core import RoundLogger
+    params, assign, batches = _setup()
+    fed = _fed(SYNC, params, assign)
+    fed.server.hooks.append(RoundLogger(every=1))
+    rec = fed.server.run_round(batches, weights=jnp.zeros((C,)))
+    assert rec.skipped and rec.dropped and rec.n_participants == 0
+    assert rec.loss == 0.0 and not np.isnan(rec.loss)
+    assert "SKIPPED" in capsys.readouterr().out
