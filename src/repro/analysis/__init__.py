@@ -1,0 +1,11 @@
+"""Static-analysis subsystem (DESIGN.md §15): jaxpr contract checkers
+(`tracecheck`), repo AST lint (`lint`), and the `CompileGuard` jit
+wrapper every compiled entry point routes through.
+
+Only `CompileGuard` is exported eagerly — `core/` and `serve/` import
+it, so this package must not import them back at import time.  The
+checkers live behind `repro.analysis.cli`.
+"""
+from .compileguard import CompileGuard, CompileGuardError
+
+__all__ = ["CompileGuard", "CompileGuardError"]

@@ -1,0 +1,175 @@
+"""CompileGuard: ``jax.jit`` with an enforced compile-count contract.
+
+The serve engine's recompile-free contract (DESIGN.md §12) was a
+single-site assertion — ``decode_cache_size == 1`` read off the jitted
+decode step after the fact.  CompileGuard generalizes it to every
+compiled path in the system: each entry point declares up front how
+many distinct programs it is allowed to compile (``max_programs``, the
+round paths all declare 1), the wrapper records the abstract signature
+of every call, and a call that would cross the budget raises
+:class:`CompileGuardError` **before** paying for the retrace — naming
+the argument whose shape/dtype/structure changed, which is exactly the
+information a silent recompile hides.
+
+Donation rides the same wrapper: ``donate_argnums`` is forwarded to
+``jax.jit`` and kept introspectable (``guard.donate_argnums``) so the
+static analyzer (``repro.analysis.tracecheck``) can assert the round
+paths donate their dead params/accumulator buffers and that the
+lowering actually aliased them (no silent copies).
+
+This module must stay import-light (jax only): ``core/`` and ``serve/``
+import it, so it cannot import anything from ``repro``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+__all__ = ["CompileGuard", "CompileGuardError"]
+
+
+class CompileGuardError(RuntimeError):
+    """A guarded entry point tried to compile more programs than its
+    declared budget (or retraced without a visible signature change)."""
+
+
+def _leaf_spec(x) -> Tuple:
+    """Hashable abstract spec of one argument leaf (what jit keys on)."""
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return ("array", tuple(x.shape), str(x.dtype),
+                bool(getattr(x, "weak_type", False)))
+    # python scalars trace as weak-typed 0-d arrays: the value never
+    # forces a retrace, only the python type can
+    return ("py", type(x).__name__)
+
+
+def _spec_str(spec: Tuple) -> str:
+    if spec[0] == "array":
+        kind, shape, dtype, weak = spec
+        return f"{dtype}{list(shape)}" + ("*" if weak else "")
+    return f"<{spec[1]}>"
+
+
+class CompileGuard:
+    """Wrap ``fn`` in ``jax.jit`` and enforce a program-count budget.
+
+    Parameters
+    ----------
+    fn:            the python function to jit (kept on ``guard.fn``).
+    name:          label used in error messages and analyzer reports.
+    max_programs:  how many distinct compiled programs this entry point
+                   may own; ``None`` = unbounded (signature history is
+                   still recorded for reporting).  The round paths and
+                   the serve decode step declare 1; serve prefill is
+                   unbounded (one program per distinct prompt length is
+                   the documented shape cache).
+    donate_argnums: forwarded to ``jax.jit`` and kept introspectable.
+    jit_kwargs:    any further ``jax.jit`` options (``in_shardings``,
+                   ``out_shardings``, ``static_argnums``, ...).
+    """
+
+    def __init__(self, fn: Callable, *, name: Optional[str] = None,
+                 max_programs: Optional[int] = 1,
+                 donate_argnums: Sequence[int] = (),
+                 **jit_kwargs: Any):
+        self.fn = fn
+        self.name = name or getattr(fn, "__name__", "jitted")
+        self.max_programs = max_programs
+        self.donate_argnums = tuple(donate_argnums)
+        self._jit = jax.jit(fn, donate_argnums=self.donate_argnums,
+                            **jit_kwargs)
+        # call-order history of abstract signatures:
+        # sig key -> [(pretty arg path, leaf spec), ...]
+        self._sigs: Dict[Tuple, List[Tuple[str, Tuple]]] = {}
+
+    # -- signature bookkeeping ----------------------------------------------
+
+    def _signature(self, args, kwargs):
+        leaves, treedef = jax.tree_util.tree_flatten((args, dict(kwargs)))
+        paths = [jax.tree_util.keystr(p) for p, _ in
+                 jax.tree_util.tree_flatten_with_path((args,
+                                                       dict(kwargs)))[0]]
+        specs = tuple(_leaf_spec(x) for x in leaves)
+        key = (str(treedef), specs)
+        pretty = list(zip(paths, specs))
+        return key, pretty
+
+    def _diff(self, pretty) -> List[str]:
+        """Human diff of the new signature vs the last recorded one."""
+        if not self._sigs:
+            return []
+        old = list(self._sigs.values())[-1]
+        if len(old) != len(pretty):
+            return [f"argument structure changed: {len(old)} -> "
+                    f"{len(pretty)} leaves (e.g. an optional argument "
+                    f"appeared or a pytree changed shape)"]
+        out = []
+        for (op, os), (np_, ns) in zip(old, pretty):
+            if os != ns or op != np_:
+                out.append(f"arg {np_ or op}: "
+                           f"{_spec_str(os)} -> {_spec_str(ns)}")
+        return out or ["no shape/dtype change visible — weak_type or "
+                       "sharding drift forced the retrace"]
+
+    def _record(self, args, kwargs, *, about_to_compile: bool):
+        key, pretty = self._signature(args, kwargs)
+        if key in self._sigs:
+            return
+        if (about_to_compile and self.max_programs is not None
+                and len(self._sigs) >= self.max_programs):
+            diff = "\n  ".join(self._diff(pretty))
+            raise CompileGuardError(
+                f"CompileGuard[{self.name}]: call would compile program "
+                f"#{len(self._sigs) + 1} (budget {self.max_programs}). "
+                f"Retrace-triggering argument(s):\n  {diff}")
+        self._sigs[key] = pretty
+
+    # -- jit surface --------------------------------------------------------
+
+    def __call__(self, *args, **kwargs):
+        self._record(args, kwargs, about_to_compile=True)
+        out = self._jit(*args, **kwargs)
+        # ground truth: jit may retrace on distinctions our spec does
+        # not model (e.g. sharding changes); catch those after the fact
+        n = self.cache_size
+        if self.max_programs is not None and n > self.max_programs:
+            raise CompileGuardError(
+                f"CompileGuard[{self.name}]: jit cache holds {n} "
+                f"programs (budget {self.max_programs}) but the call "
+                f"signatures look identical — a non-shape retrace "
+                f"(sharding/weak_type) slipped through")
+        return out
+
+    def lower(self, *args, **kwargs):
+        """Explicit lowering (dry-run paths); counts against the budget."""
+        self._record(args, kwargs, about_to_compile=True)
+        return self._jit.lower(*args, **kwargs)
+
+    def eval_shape(self, *args, **kwargs):
+        return jax.eval_shape(self.fn, *args, **kwargs)
+
+    # -- introspection (used by repro.analysis.tracecheck) ------------------
+
+    @property
+    def cache_size(self) -> int:
+        """Number of compiled programs: max of the jit cache (executed
+        calls) and the recorded signature count (``lower()`` calls)."""
+        try:
+            cached = self._jit._cache_size()
+        except Exception:
+            cached = 0
+        return max(cached, len(self._sigs))
+
+    @property
+    def programs(self) -> List[List[Tuple[str, str]]]:
+        """Recorded signatures, call order: [[(arg path, spec), ...]]."""
+        return [[(p, _spec_str(s)) for p, s in sig]
+                for sig in self._sigs.values()]
+
+    def assert_programs(self, n: int):
+        """Hard assertion for smoke gates: at most ``n`` programs."""
+        if self.cache_size > n:
+            raise CompileGuardError(
+                f"CompileGuard[{self.name}]: {self.cache_size} compiled "
+                f"programs, expected <= {n}")

@@ -1,0 +1,581 @@
+"""Level-1 jaxpr contract checker (DESIGN.md §15).
+
+The repo's core invariants — frozen-slot gradients are dead code
+(PR 3), compiled paths never host-sync or retrace (PR 6), every random
+draw descends from the seed stream (PR 8), dead buffers are donated
+(this PR) — were guaranteed *dynamically*, by property tests that
+execute the paths.  This module proves them *statically*: it traces
+every registered compiled path via ``jax.make_jaxpr`` and walks the
+jaxprs, so a violation is caught on every trace, for every
+configuration traced here, without running a round.
+
+Traced paths (the program registry, ``traced_programs()``):
+
+* sync packed round step (``Server.round_step``),
+* buffered-async select + flush (``build_cohort_step`` /
+  ``Topology.build_buffered_flush``),
+* cohort-engine select / chunk / finalize (``build_cohort_programs``),
+* serve prefill + decode (``DecodeEngine``), traced under typed PRNG
+  keys so key flow is visible in the jaxpr,
+* one frozen-grad probe per round path: ``jax.grad`` of the shared
+  ``packed_cohort_fn`` loss w.r.t. the *global* params.
+
+Checkers (each also exposed as a pure ``check_*`` function over an
+explicit jaxpr, which is how the intentionally-bad fixtures in
+``tests/test_analysis.py`` prove every checker fires):
+
+* ``trace-frozen-grad`` — every stacked leaf's global-params cotangent
+  must be a scatter(-add) chain into a zeros base: only gathered slot
+  rows receive gradient, so frozen rows are DCE-dead.  Removing the
+  ``stop_gradient`` in ``local_update_packed`` adds a dense cotangent
+  term to the base and the walker rejects it.
+* ``trace-host-sync`` — no callback/infeed/debug primitives anywhere
+  inside a compiled path (recursively, through pjit/scan/cond bodies).
+* ``trace-key-flow`` — every consumed PRNG key descends from
+  ``fold_in``/``split``; no key is consumed twice; no raw
+  ``random_seed`` output is fed straight to ``random_bits``.
+* ``trace-donation`` — paths that declare ``donate_argnums`` actually
+  alias every donated leaf in the lowering (``tf.aliasing_output`` in
+  the StableHLO), i.e. no silent copies.
+* ``trace-compileguard`` — the live entry points are ``CompileGuard``
+  instances with the contracted ``max_programs``/``donate_argnums``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.core as jcore
+import jax.numpy as jnp
+import numpy as np
+
+from .compileguard import CompileGuard
+from .findings import Finding, register_checker
+
+__all__ = ["traced_programs", "TracedProgram",
+           "check_host_sync_jaxpr", "check_key_flow_jaxpr",
+           "check_frozen_grad_jaxpr", "check_donation_text",
+           "check_guard_contract"]
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking helpers
+
+def _sub_closed(eqn) -> List[jcore.ClosedJaxpr]:
+    """Every ClosedJaxpr nested in one equation's params (pjit body,
+    scan body, cond branches, custom_vjp calls, ...)."""
+    out = []
+    for v in eqn.params.values():
+        vals = v if isinstance(v, (list, tuple)) else [v]
+        for cj in vals:
+            if isinstance(cj, jcore.ClosedJaxpr):
+                out.append(cj)
+            elif isinstance(cj, jcore.Jaxpr):
+                out.append(jcore.ClosedJaxpr(cj, ()))
+    return out
+
+
+def _iter_eqns(jaxpr):
+    """All equations, recursively through nested jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for cj in _sub_closed(eqn):
+            yield from _iter_eqns(cj.jaxpr)
+
+
+def _is_key(v) -> bool:
+    dt = getattr(getattr(v, "aval", None), "dtype", None)
+    return dt is not None and "key<" in str(dt)
+
+
+def _is_zero_literal(v) -> bool:
+    return isinstance(v, jcore.Literal) and np.all(np.asarray(v.val) == 0)
+
+
+# ---------------------------------------------------------------------------
+# checker cores (pure functions over explicit jaxprs — unit-testable on
+# intentionally-bad fixtures)
+
+_HOST_SYNC_EXACT = {"infeed", "outfeed", "debug_print"}
+_HOST_SYNC_SUBSTR = ("callback",)     # pure_callback, io_callback, ...
+
+
+def check_host_sync_jaxpr(name: str, closed: jcore.ClosedJaxpr,
+                          allow: Sequence[str] = ()) -> List[Finding]:
+    out = []
+    seen = set()
+    for eqn in _iter_eqns(closed.jaxpr):
+        pn = eqn.primitive.name
+        if pn in allow or pn in seen:
+            continue
+        if pn in _HOST_SYNC_EXACT or any(s in pn for s in _HOST_SYNC_SUBSTR):
+            seen.add(pn)
+            out.append(Finding(
+                checker="", level="", anchor=name, symbol=pn,
+                message=f"host-sync primitive {pn!r} inside compiled "
+                        f"path {name!r} — callbacks serialize the device "
+                        f"stream every step; move it out of the jit or "
+                        f"allowlist it with a documented suppression"))
+    return out
+
+
+class _KeyState:
+    __slots__ = ("origin", "consumed")
+
+    def __init__(self, origin: str):
+        self.origin = origin          # "input" | "seed" | "derived"
+        self.consumed = 0
+
+
+# prims that consume their key operand (using the same key again after
+# one of these repeats the stream) vs. prims that derive fresh keys
+# (fold_in is non-consuming derivation: fold_in(k, i) and fold_in(k, j)
+# are independent streams by design)
+_KEY_CONSUMING = {"random_bits", "random_split"}
+_KEY_DERIVING = {"random_fold_in", "random_split", "random_wrap"}
+
+
+def check_key_flow_jaxpr(name: str,
+                         closed: jcore.ClosedJaxpr) -> List[Finding]:
+    findings: List[Finding] = []
+    env: Dict[int, _KeyState] = {}
+
+    def node(env_, v) -> _KeyState:
+        st = env_.get(id(v))
+        if st is None:
+            st = env_[id(v)] = _KeyState("input")
+        return st
+
+    def walk(jaxpr, env_):
+        for eqn in jaxpr.eqns:
+            pn = eqn.primitive.name
+            if pn in _KEY_CONSUMING:
+                for iv in eqn.invars:
+                    if isinstance(iv, jcore.Literal) or not _is_key(iv):
+                        continue
+                    st = node(env_, iv)
+                    st.consumed += 1
+                    if st.consumed == 2:
+                        findings.append(Finding(
+                            checker="", level="", anchor=name,
+                            symbol="key-reuse",
+                            message=f"PRNG key consumed twice in "
+                                    f"{name!r} (second consumer: {pn}) — "
+                                    f"reusing a key repeats the stream; "
+                                    f"split or fold_in a fresh key"))
+                    if pn == "random_bits" and st.origin == "seed":
+                        findings.append(Finding(
+                            checker="", level="", anchor=name,
+                            symbol="underived-key",
+                            message=f"random_bits draws from a raw seed "
+                                    f"key in {name!r} — every consumed "
+                                    f"key must descend from fold_in/"
+                                    f"split so streams are disjoint"))
+            subs = _sub_closed(eqn)
+            if subs:
+                for cj in subs:
+                    inner = cj.jaxpr
+                    # positional 1:1 operand<->binder alignment: exact
+                    # for pjit/scan (consts+carry+xs); cond binders
+                    # align with operands after the branch index
+                    if len(inner.invars) == len(eqn.invars):
+                        ops = eqn.invars
+                    elif len(inner.invars) == len(eqn.invars) - 1:
+                        ops = eqn.invars[1:]
+                    else:
+                        ops = None
+                    sub_env: Dict[int, _KeyState] = {}
+                    if ops is not None:
+                        for bv, ov in zip(inner.invars, ops):
+                            if _is_key(bv) and \
+                                    not isinstance(ov, jcore.Literal):
+                                sub_env[id(bv)] = node(env_, ov)
+                    walk(inner, sub_env)
+                    for bv, ov in zip(inner.outvars, eqn.outvars):
+                        if _is_key(ov):
+                            st = sub_env.get(id(bv))
+                            env_[id(ov)] = st if st is not None \
+                                else _KeyState("derived")
+                continue
+            for ov in eqn.outvars:
+                if not _is_key(ov):
+                    continue
+                if pn == "random_seed":
+                    env_[id(ov)] = _KeyState("seed")
+                elif pn in _KEY_DERIVING:
+                    env_[id(ov)] = _KeyState("derived")
+                else:
+                    # shape/layout ops (broadcast, reshape, slice, ...)
+                    # alias the key material: consuming the view and the
+                    # original is still reuse
+                    keys_in = [iv for iv in eqn.invars
+                               if not isinstance(iv, jcore.Literal)
+                               and _is_key(iv)]
+                    env_[id(ov)] = node(env_, keys_in[0]) \
+                        if len(keys_in) == 1 else _KeyState("derived")
+
+    walk(closed.jaxpr, env)
+    return findings
+
+
+# cotangent producers that preserve "zeros outside the scattered slots"
+_ZEROS_PASS = {"convert_element_type", "reshape", "transpose", "squeeze",
+               "expand_dims", "copy", "rev", "stop_gradient",
+               "broadcast_in_dim"}
+
+
+def _zeros_scatter_chain(v, producers, depth: int = 0) -> bool:
+    """True iff ``v`` provably carries non-zero values only on scattered
+    slot rows: a chain of scatter(-add)s whose base bottoms out in a
+    zeros literal/broadcast.  Any path that reaches a jaxpr input,
+    constvar or an unrecognized producer is a dense contribution."""
+    if depth > 64:
+        return False
+    if _is_zero_literal(v):
+        return True
+    if isinstance(v, jcore.Literal):
+        return False
+    e = producers.get(id(v))
+    if e is None:
+        return False                       # input/const: dense cotangent
+    pn = e.primitive.name
+    nonlit = [iv for iv in e.invars]
+    if pn in _ZEROS_PASS:
+        return _zeros_scatter_chain(nonlit[0], producers, depth + 1)
+    if pn.startswith("scatter"):           # scatter, scatter-add, ...
+        return _zeros_scatter_chain(nonlit[0], producers, depth + 1)
+    if pn in ("add", "add_any", "sub", "concatenate"):
+        return all(_zeros_scatter_chain(iv, producers, depth + 1)
+                   for iv in nonlit)
+    if pn == "mul":
+        return any(_zeros_scatter_chain(iv, producers, depth + 1)
+                   for iv in nonlit)
+    if pn == "pad":
+        return all(_zeros_scatter_chain(iv, producers, depth + 1)
+                   for iv in nonlit[:2])   # operand + padding value
+    if pn == "select_n":
+        return all(_zeros_scatter_chain(iv, producers, depth + 1)
+                   for iv in nonlit[1:])   # all selectable cases
+    return False
+
+
+def check_frozen_grad_jaxpr(name: str, closed: jcore.ClosedJaxpr,
+                            stacked: Sequence[Tuple[int, str]]
+                            ) -> List[Finding]:
+    """``closed`` is the jaxpr of ``grad(loss)(global_params)``;
+    ``stacked`` lists (flat output index, leaf path) of the stacked
+    leaves whose frozen macro rows must be cotangent-free."""
+    jaxpr = closed.jaxpr
+    producers = {id(ov): e for e in jaxpr.eqns for ov in e.outvars}
+    out = []
+    for idx, path in stacked:
+        v = jaxpr.outvars[idx]
+        if not _zeros_scatter_chain(v, producers):
+            out.append(Finding(
+                checker="", level="", anchor=name, symbol=path,
+                message=f"stacked leaf {path!r}: global-params cotangent "
+                        f"in {name!r} is not a scatter-into-zeros chain — "
+                        f"frozen rows receive gradient (is the "
+                        f"stop_gradient on the merge base intact?)"))
+    return out
+
+
+def check_donation_text(name: str, lowered_text: str,
+                        n_donated: int) -> List[Finding]:
+    """``n_donated`` = array leaves in the donated arguments; every one
+    must carry a ``tf.aliasing_output`` attribute in the lowering."""
+    n = lowered_text.count("tf.aliasing_output")
+    if n < n_donated:
+        return [Finding(
+            checker="", level="", anchor=name, symbol="donation",
+            message=f"{name!r} declares donation but the lowering "
+                    f"aliases only {n} of {n_donated} donated leaves — "
+                    f"the rest are silent copies (shape/dtype mismatch "
+                    f"between donated input and output?)")]
+    return []
+
+
+def check_guard_contract(name: str, guard: Any,
+                         max_programs: Optional[int],
+                         donate: Tuple[int, ...]) -> List[Finding]:
+    if not isinstance(guard, CompileGuard):
+        return [Finding(
+            checker="", level="", anchor=name, symbol="compileguard",
+            message=f"{name!r} is not routed through CompileGuard "
+                    f"(got {type(guard).__name__}) — the retrace budget "
+                    f"is unenforced")]
+    out = []
+    if guard.max_programs != max_programs:
+        out.append(Finding(
+            checker="", level="", anchor=name, symbol="max-programs",
+            message=f"{name!r} declares max_programs="
+                    f"{guard.max_programs}, contract says "
+                    f"{max_programs}"))
+    if guard.donate_argnums != donate:
+        out.append(Finding(
+            checker="", level="", anchor=name, symbol="donate-argnums",
+            message=f"{name!r} declares donate_argnums="
+                    f"{guard.donate_argnums}, contract says {donate} — "
+                    f"a dropped donation doubles the path's peak memory"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the traced-program registry
+
+@dataclasses.dataclass
+class TracedProgram:
+    name: str                       # finding anchor, e.g. "trace:sync/..."
+    closed: jcore.ClosedJaxpr
+    check_keys: bool = True
+    host_allow: Tuple[str, ...] = ()
+    # donation: present iff the live path declares donate_argnums
+    lowered_text: str = ""
+    n_donated: int = 0
+
+
+@dataclasses.dataclass
+class _Registry:
+    programs: List[TracedProgram]
+    # grad probes: (name, closed, [(out index, leaf path)])
+    grad_probes: List[Tuple[str, jcore.ClosedJaxpr,
+                            List[Tuple[int, str]]]]
+    # live guards: (name, guard, expected max_programs, expected donate)
+    guards: List[Tuple[str, Any, Optional[int], Tuple[int, ...]]]
+
+
+def _sds_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+        tree)
+
+
+def _stacked_leaves(assign, params) -> List[Tuple[int, str]]:
+    from ..core.masking import LeafUnit
+    units = jax.tree_util.tree_leaves(
+        assign.leaf_units, is_leaf=lambda x: isinstance(x, LeafUnit))
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(params)[0]]
+    return [(i, p) for i, (u, p) in enumerate(zip(units, paths))
+            if u.kind == "stacked"]
+
+
+def _toy_fixture(fl):
+    """Shared toy-model setup for the round-path traces."""
+    from ..models.toy import init_toy_mlp, toy_batches, toy_units
+    key = jax.random.PRNGKey(0)
+    params = init_toy_mlp(key, n_blocks=4, d=8, hidden=12, out=4)
+    assign = toy_units(params)
+    batches = toy_batches(jax.random.fold_in(key, 1),
+                          n_clients=fl.n_clients, steps=2, batch=2,
+                          d=8, out=4)
+    n_slots = fl.resolve_n_slots(assign.n_units)
+    return params, assign, batches, n_slots
+
+
+def _grad_probe(name, fl, *, scoring: bool):
+    """jaxpr of grad(round loss)(global_params) through the *shared*
+    packed cohort trace (``client.packed_cohort_fn`` — the exact
+    function the sync step, async dispatch and cohort chunk vmap)."""
+    from ..core.client import packed_cohort_fn
+    from ..core.masking import slot_plan
+    from ..models.toy import toy_loss
+    params, assign, batches, n_slots = _toy_fixture(fl)
+    sel = np.zeros((fl.n_clients, assign.n_units), np.float32)
+    sel[:, :assign.n_units // 2] = 1.0
+    rows, valid = jax.vmap(
+        lambda s: slot_plan(assign, s, n_slots, params))(jnp.asarray(sel))
+    cohort = packed_cohort_fn(toy_loss, assign, fl, None, scoring=scoring)
+
+    def probe(gp):
+        return cohort(gp, rows, valid, batches)[1]["loss_mean"].sum()
+
+    closed = jax.make_jaxpr(jax.grad(probe))(params)
+    return name, closed, _stacked_leaves(assign, params)
+
+
+@functools.lru_cache(maxsize=1)
+def traced_programs() -> _Registry:
+    """Build and trace every registered compiled path (cached — the
+    fixture builds are pure and configuration-independent)."""
+    from ..core.async_agg import (BufferedAggregator, build_cohort_step,
+                                  flush_arg_specs)
+    from ..core.cohort import build_cohort_programs
+    from ..core.federation import FLConfig, build_round_step
+    from ..core.server import Server
+    from ..core.topology import resolve_topology
+    from ..models.toy import toy_loss
+
+    programs: List[TracedProgram] = []
+    probes = []
+    guards: List[Tuple[str, Any, Optional[int], Tuple[int, ...]]] = []
+
+    def lower_text(fn, donate, args):
+        return jax.jit(fn, donate_argnums=donate).lower(*args).as_text()
+
+    # -- sync packed round step --------------------------------------------
+    fl = FLConfig(n_clients=3, train_fraction=0.5, packed=True,
+                  fused_agg="off")
+    params, assign, batches, _ = _toy_fixture(fl)
+    srv = Server(build_round_step(toy_loss, assign, fl), assign, fl, params)
+    w = jnp.ones((fl.n_clients,), jnp.float32)
+    rk = jax.random.key(0)                         # typed key: key flow
+    sync_args = (srv.params, batches, w, rk)
+    programs.append(TracedProgram(
+        "trace:sync/round_step",
+        jax.make_jaxpr(srv.round_step.fn)(*sync_args),
+        lowered_text=lower_text(srv.round_step.fn,
+                                srv.round_step.donate_argnums, sync_args),
+        n_donated=len(jax.tree_util.tree_leaves(srv.params))))
+    guards.append(("trace:sync/round_step", srv.round_step, 1, (0,)))
+    probes.append(_grad_probe("trace:sync/frozen_grad", fl, scoring=False))
+
+    # -- buffered-async select + flush -------------------------------------
+    fl_a = FLConfig(n_clients=3, train_fraction=0.5, packed=True,
+                    fused_agg="off", async_buffer=2)
+    params_a, assign_a, batches_a, _ = _toy_fixture(fl_a)
+    select_fn, cohort_fn, _ = build_cohort_step(toy_loss, assign_a, fl_a)
+    programs.append(TracedProgram(
+        "trace:async/select",
+        jax.make_jaxpr(select_fn.fn)(jax.random.key(0))))
+    sel_sds = jax.ShapeDtypeStruct((fl_a.n_clients, assign_a.n_units),
+                                   jnp.float32)
+    programs.append(TracedProgram(
+        "trace:async/cohort",
+        jax.make_jaxpr(cohort_fn.fn)(_sds_tree(params_a), sel_sds,
+                                     batches_a)))
+    flush = resolve_topology("hub").build_buffered_flush(assign_a, fl_a)
+    flush_args = (_sds_tree(params_a),) + \
+        flush_arg_specs(assign_a, params_a, fl_a)
+    agg = BufferedAggregator(fl_a.async_buffer, fl_a.staleness,
+                             fl_a.staleness_alpha, flush)
+    programs.append(TracedProgram(
+        "trace:async/flush",
+        jax.make_jaxpr(flush)(*flush_args),
+        lowered_text=lower_text(flush, agg._flush.donate_argnums,
+                                flush_args),
+        n_donated=len(jax.tree_util.tree_leaves(params_a))))
+    guards.append(("trace:async/flush", agg._flush, 1, (0,)))
+    probes.append(_grad_probe("trace:async/frozen_grad", fl_a,
+                              scoring=False))
+
+    # -- cohort engine: select / chunk / finalize ---------------------------
+    fl_c = FLConfig(n_clients=4, n_registered=8, cohort_chunk=2,
+                    train_fraction=0.5, packed=True, fused_agg="off")
+    params_c, assign_c, _, _ = _toy_fixture(fl_c)
+    prog = build_cohort_programs(toy_loss, assign_c, fl_c)
+    u = assign_c.n_units
+    acc_sds = jax.eval_shape(prog.acc_init.fn, _sds_tree(params_c))
+    from ..models.toy import toy_batches
+    chunk_b = toy_batches(jax.random.PRNGKey(2),
+                          n_clients=fl_c.cohort_chunk, steps=2, batch=2,
+                          d=8, out=4)
+    chunk_args = (_sds_tree(params_c), acc_sds,
+                  jax.ShapeDtypeStruct((fl_c.cohort_chunk, u), jnp.float32),
+                  jax.ShapeDtypeStruct((fl_c.cohort_chunk,), jnp.float32),
+                  jax.ShapeDtypeStruct((fl_c.cohort_chunk,), jnp.int32),
+                  chunk_b)
+    fin_args = (_sds_tree(params_c), acc_sds,
+                jax.ShapeDtypeStruct((fl_c.n_clients, u), jnp.float32),
+                jax.ShapeDtypeStruct((fl_c.n_clients,), jnp.float32),
+                jax.ShapeDtypeStruct((fl_c.n_clients,), jnp.float32))
+    programs.append(TracedProgram(
+        "trace:cohort/select",
+        jax.make_jaxpr(prog.select.fn)(jax.random.key(0))))
+    programs.append(TracedProgram(
+        "trace:cohort/chunk",
+        jax.make_jaxpr(prog.chunk.fn)(*chunk_args),
+        lowered_text=lower_text(prog.chunk.fn, prog.chunk.donate_argnums,
+                                chunk_args),
+        n_donated=len(jax.tree_util.tree_leaves(acc_sds))))
+    programs.append(TracedProgram(
+        "trace:cohort/finalize",
+        jax.make_jaxpr(prog.finalize.fn)(*fin_args),
+        lowered_text=lower_text(prog.finalize.fn,
+                                prog.finalize.donate_argnums, fin_args),
+        n_donated=len(jax.tree_util.tree_leaves(acc_sds))))
+    guards.append(("trace:cohort/select", prog.select, 1, ()))
+    guards.append(("trace:cohort/chunk", prog.chunk, 1, (1,)))
+    guards.append(("trace:cohort/finalize", prog.finalize, 1, (1,)))
+    probes.append(_grad_probe("trace:cohort/frozen_grad", fl_c,
+                              scoring=True))
+
+    # -- serve prefill + decode ---------------------------------------------
+    # typed keys must be on while tracing: sample_tokens creates its
+    # base key *inside* the trace via jax.random.PRNGKey, which only
+    # surfaces as key-typed random_* primitives under custom prng
+    from ..configs.base import get_config
+    from ..models import get_model
+    from ..serve.engine import DecodeEngine, ServeConfig
+
+    cfg = get_config("gemma3-12b").reduced()
+    model_params = jax.eval_shape(
+        lambda k: get_model(cfg).init_params(k), jax.random.PRNGKey(0))
+    eng = DecodeEngine(cfg, model_params,
+                       ServeConfig(n_slots=2, max_len=32, page_size=16,
+                                   temperature=0.7))
+    tokens, steps, rids, gidx = eng.scheduler.step_arrays()
+    tables = eng.tables.device_tables()
+    old_flag = jax.config.jax_enable_custom_prng
+    jax.config.update("jax_enable_custom_prng", True)
+    try:
+        programs.append(TracedProgram(
+            "trace:serve/decode",
+            jax.make_jaxpr(eng._decode.fn)(
+                model_params, eng.paged,
+                jnp.asarray(tokens[:, None]), jnp.asarray(steps), tables,
+                jnp.asarray(rids), jnp.asarray(gidx))))
+        programs.append(TracedProgram(
+            "trace:serve/prefill",
+            jax.make_jaxpr(eng._prefill.fn)(
+                model_params,
+                jax.ShapeDtypeStruct((2, 8), jnp.int32),
+                jnp.asarray(rids), jnp.asarray(gidx))))
+    finally:
+        jax.config.update("jax_enable_custom_prng", old_flag)
+    guards.append(("trace:serve/decode", eng._decode, 1, ()))
+    guards.append(("trace:serve/prefill", eng._prefill, None, ()))
+
+    return _Registry(programs=programs, grad_probes=probes, guards=guards)
+
+
+# ---------------------------------------------------------------------------
+# registry wiring
+
+@register_checker("trace-host-sync", "trace")
+def _host_sync_checker(root: Path) -> List[Finding]:
+    reg = traced_programs()
+    return [f for p in reg.programs
+            for f in check_host_sync_jaxpr(p.name, p.closed, p.host_allow)]
+
+
+@register_checker("trace-key-flow", "trace")
+def _key_flow_checker(root: Path) -> List[Finding]:
+    reg = traced_programs()
+    return [f for p in reg.programs if p.check_keys
+            for f in check_key_flow_jaxpr(p.name, p.closed)]
+
+
+@register_checker("trace-frozen-grad", "trace")
+def _frozen_grad_checker(root: Path) -> List[Finding]:
+    reg = traced_programs()
+    return [f for name, closed, stacked in reg.grad_probes
+            for f in check_frozen_grad_jaxpr(name, closed, stacked)]
+
+
+@register_checker("trace-donation", "trace")
+def _donation_checker(root: Path) -> List[Finding]:
+    reg = traced_programs()
+    return [f for p in reg.programs if p.n_donated
+            for f in check_donation_text(p.name, p.lowered_text,
+                                         p.n_donated)]
+
+
+@register_checker("trace-compileguard", "trace")
+def _guard_checker(root: Path) -> List[Finding]:
+    reg = traced_programs()
+    return [f for name, guard, maxp, dn in reg.guards
+            for f in check_guard_contract(name, guard, maxp, dn)]

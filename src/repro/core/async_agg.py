@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.compileguard import CompileGuard
 from .registry import unknown_name_message
 
 PyTree = Any
@@ -235,7 +236,11 @@ class BufferedAggregator:
         # topology's buffered aggregation, session.py) return
         # (new_params, quarantined) instead of bare params
         self.gated = gated
-        self._flush = jax.jit(flush_fn)
+        # the flush donates global_params: run_flush reassigns
+        # server.params from the flush output, so the pre-flush state
+        # is dead at the call and aliases into the new params in place
+        self._flush = CompileGuard(flush_fn, name="async_flush",
+                                   max_programs=1, donate_argnums=(0,))
         self.entries: List[BufferedUpdate] = []
         # duplicate-delivery defense: per-client seq watermark.  Each
         # client has at most one dispatch in flight, so its seqs arrive
@@ -353,7 +358,9 @@ def build_cohort_step(loss_fn: Callable, assign, fl,
             out["unit_sqnorm"] = metrics["unit_sqnorm"]
         return pdeltas, rows, valid, out
 
-    return jax.jit(select), jax.jit(cohort), n_slots
+    return (CompileGuard(select, name="async_select", max_programs=1),
+            CompileGuard(cohort, name="async_cohort", max_programs=1),
+            n_slots)
 
 
 def slot_template(assign, params, n_slots: int) -> Dict[str, Any]:

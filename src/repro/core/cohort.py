@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.compileguard import CompileGuard
 from .registry import unknown_name_message
 
 PyTree = Any
@@ -323,9 +324,21 @@ def build_cohort_programs(loss_fn: Callable, assign, fl,
         # reduces, so the recorded loss is bitwise the sync round's
         return new_params, losses.mean()
 
+    # chunk and finalize donate the ``acc`` carry (argnum 1): the
+    # engine reassigns p["acc"] from every chunk's output and discards
+    # it after finalize, so each chunk scatter-accumulates into the
+    # donated buffer instead of allocating a fresh partial aggregate
+    # per chunk.  global_params is NOT donated — it is re-read by every
+    # chunk of the round.  CompileGuard pins each program to exactly
+    # one compile across the round's chunks (and across rounds).
     return CohortPrograms(
-        select=jax.jit(select), acc_init=jax.jit(acc_init),
-        chunk=jax.jit(chunk_step), finalize=jax.jit(finalize),
+        select=CompileGuard(select, name="cohort_select", max_programs=1),
+        acc_init=CompileGuard(acc_init, name="cohort_acc_init",
+                              max_programs=1),
+        chunk=CompileGuard(chunk_step, name="cohort_chunk",
+                           max_programs=1, donate_argnums=(1,)),
+        finalize=CompileGuard(finalize, name="cohort_finalize",
+                              max_programs=1, donate_argnums=(1,)),
         sampler=sampler, strategy=strat, scoring=scoring, n_slots=n_slots)
 
 
@@ -438,6 +451,16 @@ class CohortEngine:
                 else self.programs.select(rk, st)
             p["sel"] = sel
             p["acc"] = self.programs.acc_init(server.global_params())
+            if getattr(self.fl, "client_shards", 0):
+                # the sharded chunk program commits its acc output to
+                # the (client,) mesh; the fresh accumulator must start
+                # there too or chunk 2 retraces on the sharding flip
+                from jax.sharding import NamedSharding, PartitionSpec
+                from ..launch.mesh import make_client_mesh
+                p["acc"] = jax.device_put(
+                    p["acc"],
+                    NamedSharding(make_client_mesh(self.fl.client_shards),
+                                  PartitionSpec()))
         self._partial = p
         return p
 

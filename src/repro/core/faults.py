@@ -134,42 +134,57 @@ def get_fault(name: str) -> Type[Fault]:
 
 @register_fault
 class CrashFault(Fault):
+    """Client crashes before uploading: its weight drops to zero and
+    the cohort engine resamples a replacement (crash seam)."""
     name, seam = "crash", "crash"
 
 
 @register_fault
 class NanFault(Fault):
+    """Uploaded delta poisoned with NaNs (delta seam) — the validation
+    gate must quarantine it before aggregation."""
     name, seam, mode = "nan", "delta", MODE_NAN
 
 
 @register_fault
 class InfFault(Fault):
+    """Uploaded delta poisoned with Infs (delta seam)."""
     name, seam, mode = "inf", "delta", MODE_INF
 
 
 @register_fault
 class BitflipFault(Fault):
+    """Sign-bit corruption of the uploaded delta (delta seam) — a
+    finite-but-wrong update the norm gate has to catch."""
     name, seam, mode = "bitflip", "delta", MODE_BITFLIP
 
 
 @register_fault
 class ScaleFault(Fault):
+    """Delta scaled by ``param`` (default 1024x, delta seam) — the
+    classic exploding-update client."""
     name, seam, mode = "scale", "delta", MODE_SCALE
     default_param = 1024.0
 
 
 @register_fault
 class DuplicateFault(Fault):
+    """Upload delivered twice (delivery seam) — the buffer's per-client
+    seq watermark must reject the redelivery."""
     name, seam = "duplicate", "delivery"
 
 
 @register_fault
 class TornFault(Fault):
+    """Upload lost in transit after leaving the client (delivery seam):
+    billed bytes, no aggregate contribution."""
     name, seam = "torn", "delivery"
 
 
 @register_fault
 class KillFault(Fault):
+    """Server process killed between rounds (server seam) — the chaos
+    harness restarts from the last checkpoint."""
     name, seam = "kill", "server"
 
 

@@ -145,6 +145,27 @@ class FLConfig:
         # validate the knobs whose misuse only surfaces rounds later
         # (a train_fraction of 25 instead of 0.25 "works" until the
         # resolved n_train overruns the unit count) at build time
+        if self.n_clients < 1:
+            raise ValueError(
+                f"n_clients must be >= 1, got {self.n_clients}")
+        if self.n_train_units < 0:
+            raise ValueError(
+                f"n_train_units must be >= 0 (0 = use train_fraction), "
+                f"got {self.n_train_units}")
+        if self.lr <= 0.0:
+            raise ValueError(f"lr must be > 0, got {self.lr}")
+        if self.prox_mu < 0.0:
+            raise ValueError(
+                f"prox_mu must be >= 0 (0 = plain FedAvg), got "
+                f"{self.prox_mu}")
+        if self.async_buffer < 0:
+            raise ValueError(
+                f"async_buffer must be >= 0 (0 = synchronous), got "
+                f"{self.async_buffer}")
+        if self.staleness_alpha < 0.0:
+            raise ValueError(
+                f"staleness_alpha must be >= 0, got "
+                f"{self.staleness_alpha}")
         if self.train_fraction is not None \
                 and not 0.0 < self.train_fraction <= 1.0:
             raise ValueError(

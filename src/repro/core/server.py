@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.compileguard import CompileGuard
 from . import comm
 from .federation import FLConfig
 from .masking import UnitAssignment
@@ -248,12 +249,35 @@ class Server:
                  hooks: Sequence[ServerHook] = (),
                  topology: Optional[Topology] = None,
                  strategy: Union[str, SelectionStrategy, None] = None):
-        self.round_step = jax.jit(round_step)
+        # the round step donates its params argument: run_round always
+        # reassigns self.params from the output, so the old state is
+        # dead at the call and XLA aliases it into the result instead
+        # of allocating a second model-sized buffer.  CompileGuard
+        # (repro.analysis.compileguard) holds the path to ONE compiled
+        # program and names the retrace-triggering argument otherwise.
+        self.round_step = CompileGuard(round_step, name="round_step",
+                                       max_programs=1, donate_argnums=(0,))
         self.assign = assign
         self.fl = fl
         self.topology = resolve_topology(topology if topology is not None
                                          else fl.topology)
-        self.params = self.topology.init_state(params, fl)
+        # own the state outright (donation invalidates the buffers we
+        # pass in — a caller-held reference to the init params must
+        # survive the first round)
+        self.params = jax.tree_util.tree_map(
+            jnp.array, self.topology.init_state(params, fl))
+        if getattr(fl, "client_shards", 0):
+            # the sharded round step commits its params output to the
+            # (client,) mesh; committing the initial params the same way
+            # keeps round 1 and round 2 on one compiled program (the
+            # uncommitted->committed flip would otherwise retrace — and
+            # trip the guard)
+            from jax.sharding import NamedSharding, PartitionSpec
+            from ..launch.mesh import make_client_mesh
+            self.params = jax.device_put(
+                self.params,
+                NamedSharding(make_client_mesh(fl.client_shards),
+                              PartitionSpec()))
         self.eval_fn = eval_fn
         self.key = jax.random.PRNGKey(seed)
         # the scored-selection engine (DESIGN.md §11): the server owns

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..analysis.compileguard import CompileGuard
+
 from ..configs.base import get_config
 from ..common import pytree as pt
 from ..sharding import layout_for
@@ -105,8 +107,9 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
         kw = default_loss_kwargs(cfg, remat=remat, unroll=unroll)
         kw.update(loss_overrides or {})
         fn = make_train_step(cfg, loss_kwargs=kw)
-        jitted = jax.jit(fn, in_shardings=(p_sh, opt_sh, b_sh),
-                         out_shardings=(p_sh, opt_sh, rep))
+        jitted = CompileGuard(fn, name="dryrun_train", max_programs=1,
+                              in_shardings=(p_sh, opt_sh, b_sh),
+                              out_shardings=(p_sh, opt_sh, rep))
         return jitted, (params, opt, batch), \
             shape.global_batch * shape.seq_len, True, extra
     if step_kind == "prefill":
@@ -117,8 +120,9 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
         kw = default_loss_kwargs(cfg, unroll=unroll)
         kw.update(loss_overrides or {})
         fn = make_prefill_step(cfg, shape, loss_kwargs=kw)
-        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
-                         out_shardings=(rep, c_sh))
+        jitted = CompileGuard(fn, name="dryrun_prefill", max_programs=1,
+                              in_shardings=(p_sh, b_sh),
+                              out_shardings=(rep, c_sh))
         return jitted, (params, batch), \
             shape.global_batch * shape.seq_len, False, extra
     if step_kind == "decode":
@@ -127,8 +131,9 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
         token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
         t_sh = specs.token_shardings(cfg, shape, mesh)
         fn = make_decode_step(cfg, unroll=unroll)
-        jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh),
-                         out_shardings=(rep, c_sh))
+        jitted = CompileGuard(fn, name="dryrun_decode", max_programs=1,
+                              in_shardings=(p_sh, c_sh, t_sh),
+                              out_shardings=(rep, c_sh))
         return jitted, (params, cache, token), shape.global_batch, False, \
             extra
     if step_kind == "fl_round":
@@ -159,9 +164,10 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
             flush = resolve_topology(fl_topology).build_buffered_flush(
                 assign, fl)
             buf_args = flush_arg_specs(assign, params, fl)
-            jitted = jax.jit(flush,
-                             in_shardings=(p_sh,) + (rep,) * len(buf_args),
-                             out_shardings=p_sh)
+            jitted = CompileGuard(
+                flush, name="dryrun_async_flush", max_programs=1,
+                in_shardings=(p_sh,) + (rep,) * len(buf_args),
+                out_shardings=p_sh)
             return jitted, (params,) + buf_args, \
                 fl_async_buffer * shape.seq_len, False, extra
         # hierarchical meshes split the flat client dim edge-major
@@ -200,8 +206,9 @@ def build_jitted(cfg, shape, step_kind, mesh, layout, *, unroll, remat,
                 round=jax.ShapeDtypeStruct((), jnp.int32)),)
             in_sh = in_sh + (rep,)
             extra["fl"]["scored"] = True
-        jitted = jax.jit(fn, in_shardings=in_sh,
-                         out_shardings=(p_sh, None))
+        jitted = CompileGuard(fn, name="dryrun_fl_round", max_programs=1,
+                              in_shardings=in_sh,
+                              out_shardings=(p_sh, None))
         return jitted, args, b_per * c * shape.seq_len, True, extra
     raise ValueError(step_kind)
 
@@ -271,6 +278,9 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             return record
         compiled = lowered.compile()
         record["compile_s"] = round(time.time() - t0 - record["lower_s"], 1)
+        # the smoke gate's retrace contract: the whole dry run lowered
+        # exactly one program for this step kind
+        jitted.assert_programs(1)
     ma = roofline.memory_analysis_terms(compiled)
     record["memory_analysis"] = ma
     record["bytes_per_device"] = ma["peak_bytes"]

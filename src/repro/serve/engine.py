@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.compileguard import CompileGuard
 from ..models import get_model
 from .paged_cache import PageAllocator, PagedTables, build_layout
 from .scheduler import Request, Scheduler
@@ -107,9 +108,16 @@ class DecodeEngine:
                                 temperature=sv.temperature, seed=sv.seed)
             return tok, row, paged
 
-        self._prefill = jax.jit(prefill_fn)
-        self._commit = jax.jit(commit_fn)
-        self._decode = jax.jit(decode_fn)
+        # the recompile-free contract, enforced rather than asserted:
+        # decode owns exactly ONE program across admit/evict/preempt;
+        # prefill/commit keep jax's documented shape caches (one
+        # program per distinct prompt length / admission group size)
+        self._prefill = CompileGuard(prefill_fn, name="serve_prefill",
+                                     max_programs=None)
+        self._commit = CompileGuard(commit_fn, name="serve_commit",
+                                    max_programs=None)
+        self._decode = CompileGuard(decode_fn, name="serve_decode",
+                                    max_programs=1)
 
         self._next_rid = 0
         self.logits_rows: Dict[int, List[np.ndarray]] = {}
@@ -170,7 +178,7 @@ class DecodeEngine:
     def decode_cache_size(self) -> int:
         """jit cache entries for the decode step (must stay 1 across
         admit/evict/preempt — the recompile-free contract)."""
-        return self._decode._cache_size()
+        return self._decode.cache_size
 
     # -- internals ----------------------------------------------------------
 
@@ -307,8 +315,10 @@ def static_generate(cfg, params, prompts, gen: int, *, max_len: int,
                             seed=seed)
         return tok, row, cache
 
-    prefill_j = jax.jit(prefill_fn)
-    decode_j = jax.jit(decode_fn)
+    prefill_j = CompileGuard(prefill_fn, name="static_prefill",
+                             max_programs=1)
+    decode_j = CompileGuard(decode_fn, name="static_decode",
+                            max_programs=1)
 
     tok, row, cache = prefill_j(params, prompts, rids)
     toks, rows = [tok], [row]

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 gate + dry-run smoke.
+# Tier-1 gate + static analysis + dry-run smoke.
 #
-#   ./test.sh              # pytest (8 fake CPU devices) + dryrun smoke
-#   ./test.sh --fast       # pytest only
+#   ./test.sh              # pytest (8 fake CPU devices) + analyzer + smokes
+#   ./test.sh --fast       # pytest + analyzer only
+#   ./test.sh --analyze    # static-analysis gate only (lint + jaxpr trace)
 #   ./test.sh -k pattern   # extra args forwarded to pytest
 #
 # XLA_FLAGS forces 8 host devices so the multi-device pjit paths are
@@ -15,12 +16,25 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 
 FAST=0
+ANALYZE_ONLY=0
 ARGS=()
 for a in "$@"; do
-  if [[ "$a" == "--fast" ]]; then FAST=1; else ARGS+=("$a"); fi
+  case "$a" in
+    --fast)    FAST=1 ;;
+    --analyze) ANALYZE_ONLY=1 ;;
+    *)         ARGS+=("$a") ;;
+  esac
 done
 
+# static-analysis gate (DESIGN.md §15): AST lint + jaxpr contract
+# checks; exits non-zero on any non-suppressed finding
+if [[ "$ANALYZE_ONLY" == "1" ]]; then
+  exec python -m repro.analysis.cli --report results/analysis.json
+fi
+
 python -m pytest -q "${ARGS[@]+"${ARGS[@]}"}"
+
+python -m repro.analysis.cli --report results/analysis.json
 
 # chaos harness smoke (runs in --fast too): zero-rate chaos bitwise ==
 # clean, kill+resume bitwise == uninterrupted, quarantine == plan

@@ -1,0 +1,337 @@
+"""Static-analysis subsystem (DESIGN.md §15): every checker is proven
+by an intentionally-bad fixture it must flag, the repo itself must pass
+clean, and CompileGuard enforces the compile-count contract."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import lint as L
+from repro.analysis import tracecheck as T
+from repro.analysis.compileguard import CompileGuard, CompileGuardError
+from repro.analysis.findings import (apply_suppressions, load_suppressions,
+                                     registered_checkers, report_dict,
+                                     run_checkers)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# CompileGuard
+
+def test_compileguard_budget_names_retrace_argument():
+    guard = CompileGuard(lambda x, y: x + y, name="adder", max_programs=1)
+    guard(jnp.zeros((4,)), jnp.zeros((4,)))
+    guard(jnp.ones((4,)), jnp.ones((4,)))          # same program: fine
+    assert guard.cache_size == 1
+    with pytest.raises(CompileGuardError) as ei:
+        guard(jnp.zeros((8,)), jnp.zeros((8,)))
+    msg = str(ei.value)
+    assert "adder" in msg and "budget 1" in msg
+    # the diff names the argument and the shape transition
+    assert "float32[4]" in msg and "float32[8]" in msg
+
+
+def test_compileguard_structure_change_diff():
+    guard = CompileGuard(lambda t: jax.tree_util.tree_reduce(
+        lambda a, b: a + b.sum(), t, 0.0), max_programs=1)
+    guard({"a": jnp.zeros((2,))})
+    with pytest.raises(CompileGuardError) as ei:
+        guard({"a": jnp.zeros((2,)), "b": jnp.zeros((2,))})
+    assert "structure changed" in str(ei.value)
+
+
+def test_compileguard_unbounded_records_history():
+    guard = CompileGuard(lambda x: x * 2, max_programs=None)
+    guard(jnp.zeros((2,)))
+    guard(jnp.zeros((3,)))
+    assert guard.cache_size == 2
+    assert len(guard.programs) == 2
+    with pytest.raises(CompileGuardError):
+        guard.assert_programs(1)
+
+
+def test_compileguard_lower_counts_against_budget():
+    guard = CompileGuard(lambda x: x + 1, max_programs=1)
+    guard.lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    with pytest.raises(CompileGuardError):
+        guard.lower(jax.ShapeDtypeStruct((8,), jnp.float32))
+
+
+def test_compileguard_donation_invalidates_input():
+    guard = CompileGuard(lambda x: x + 1, max_programs=1,
+                         donate_argnums=(0,))
+    assert guard.donate_argnums == (0,)
+    x = jnp.zeros((16,))
+    y = guard(x)
+    assert y is not None and x.is_deleted()
+
+
+# ---------------------------------------------------------------------------
+# level-2 lint: bad fixtures
+
+def test_lint_registry_flags_missing_docstring_and_name(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "@register_strategy\n"
+        "class Nameless:\n"
+        "    pass\n")
+    out = L.lint_registry(tmp_path, files=[bad])
+    assert {f.message.split(" ")[0] for f in out} == {"@register_strategy"}
+    assert len(out) == 2          # no docstring + no resolvable name
+
+    good = tmp_path / "good.py"
+    good.write_text(
+        "@register_fault\n"
+        "class CrashFault:\n"
+        "    \"\"\"doc\"\"\"\n"
+        "    name, seam = \"crash\", \"crash\"\n"
+        "\n"
+        "@register_staleness\n"
+        "def polynomial(s, a):\n"
+        "    \"\"\"doc\"\"\"\n"
+        "    return s\n")
+    assert L.lint_registry(tmp_path, files=[good]) == []
+
+
+def test_lint_seeded_random_flags_unseeded_draws(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import numpy as np, time\n"
+        "x = np.random.rand(3)\n"
+        "t = time.time()\n")
+    out = L.lint_seeded_random(tmp_path, files=[bad])
+    assert {f.symbol for f in out} == {"np.random.rand", "time.time"}
+
+    good = tmp_path / "good.py"
+    good.write_text(
+        "import numpy as np, time\n"
+        "rng = np.random.default_rng(np.random.SeedSequence((0, 1)))\n"
+        "t = time.perf_counter()\n")
+    assert L.lint_seeded_random(tmp_path, files=[good]) == []
+
+
+def test_lint_bare_jit_flags_unguarded_jit(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\nstep = jax.jit(lambda x: x)\n")
+    out = L.lint_bare_jit(tmp_path, files=[bad])
+    assert len(out) == 1 and out[0].symbol == "jax.jit"
+
+    good = tmp_path / "good.py"
+    good.write_text("from repro.analysis.compileguard import CompileGuard\n"
+                    "step = CompileGuard(lambda x: x)\n")
+    assert L.lint_bare_jit(tmp_path, files=[good]) == []
+
+
+def test_lint_flconfig_flags_unvalidated_and_dead_fields(tmp_path):
+    cfg = tmp_path / "cfg.py"
+    cfg.write_text(
+        "import dataclasses\n"
+        "@dataclasses.dataclass\n"
+        "class FLConfig:\n"
+        "    dead_knob: int = 3\n"
+        "    live: float = 0.1\n"
+        "    def __post_init__(self):\n"
+        "        if self.live < 0:\n"
+        "            raise ValueError()\n")
+    user = tmp_path / "user.py"
+    user.write_text("def f(fl):\n    return fl.live\n")
+    out = L.lint_flconfig(tmp_path, config_file=cfg, files=[cfg, user])
+    # dead_knob: numeric without validator AND never read anywhere
+    assert sorted(f.symbol for f in out) == ["dead_knob", "dead_knob"]
+
+
+# ---------------------------------------------------------------------------
+# level-1 trace checkers: bad fixtures
+
+@pytest.fixture(scope="module")
+def toy_slot_fixture():
+    from repro.core.masking import slot_plan
+    from repro.models.toy import init_toy_mlp, toy_batches, toy_units
+    key = jax.random.PRNGKey(0)
+    params = init_toy_mlp(key, n_blocks=4, d=8, hidden=12, out=4)
+    assign = toy_units(params)
+    batches = toy_batches(jax.random.fold_in(key, 1), n_clients=1,
+                          steps=2, batch=2, d=8, out=4)
+    batch0 = jax.tree_util.tree_map(lambda x: x[0, 0], batches)
+    sel = np.zeros((assign.n_units,), np.float32)
+    sel[:assign.n_units // 2] = 1.0
+    rows, valid = slot_plan(assign, jnp.asarray(sel), 3, params)
+    return params, assign, rows, batch0
+
+
+def _merge_probe(toy_slot_fixture, *, stop_gradient: bool):
+    """grad of the packed merge loss w.r.t. global params — with the
+    stop_gradient on the merge base either intact (the real
+    local_update_packed contract) or removed (the regression the
+    checker exists to catch)."""
+    from repro.core.masking import slot_gather, slot_merge
+    from repro.models.toy import toy_loss
+    params, assign, rows, batch0 = toy_slot_fixture
+
+    def loss(gp):
+        base = jax.lax.stop_gradient(gp) if stop_gradient else gp
+        packed = slot_gather(assign, gp, rows)
+        merged = slot_merge(assign, base, packed, rows)
+        return toy_loss(merged, batch0)[0]
+
+    closed = jax.make_jaxpr(jax.grad(loss))(params)
+    return closed, T._stacked_leaves(assign, params)
+
+
+def test_frozen_grad_passes_with_stop_gradient(toy_slot_fixture):
+    closed, stacked = _merge_probe(toy_slot_fixture, stop_gradient=True)
+    assert stacked                       # the check is not vacuous
+    assert T.check_frozen_grad_jaxpr("fix", closed, stacked) == []
+
+
+def test_frozen_grad_flags_missing_stop_gradient(toy_slot_fixture):
+    closed, stacked = _merge_probe(toy_slot_fixture, stop_gradient=False)
+    out = T.check_frozen_grad_jaxpr("fix", closed, stacked)
+    # every stacked leaf leaks dense cotangent without the stop
+    assert len(out) == len(stacked)
+    assert "stop_gradient" in out[0].message
+
+
+def test_key_flow_flags_reuse():
+    def reuse(k):
+        return jax.random.normal(k, (2,)) + jax.random.normal(k, (2,))
+    closed = jax.make_jaxpr(reuse)(jax.random.key(0))
+    out = T.check_key_flow_jaxpr("fix", closed)
+    assert [f.symbol for f in out] == ["key-reuse"]
+
+
+def test_key_flow_flags_underived_seed():
+    old = jax.config.jax_enable_custom_prng
+    jax.config.update("jax_enable_custom_prng", True)
+    try:
+        def underived(x):
+            return jax.random.normal(jax.random.PRNGKey(0), (2,)) + x
+        closed = jax.make_jaxpr(underived)(jnp.zeros((2,)))
+    finally:
+        jax.config.update("jax_enable_custom_prng", old)
+    assert [f.symbol for f in T.check_key_flow_jaxpr("fix", closed)] \
+        == ["underived-key"]
+
+
+def test_key_flow_accepts_fold_in_fanout():
+    """The serve idiom — fold_in per (request, position) — is derivation,
+    not reuse, even under vmap."""
+    def serve_like(k, rids):
+        def one(r):
+            return jax.random.categorical(jax.random.fold_in(k, r),
+                                          jnp.ones((5,)))
+        return jax.vmap(one)(rids)
+    closed = jax.make_jaxpr(serve_like)(jax.random.key(0), jnp.arange(3))
+    assert T.check_key_flow_jaxpr("fix", closed) == []
+
+
+def test_host_sync_flags_callback_and_respects_allowlist():
+    def cb(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2
+    closed = jax.make_jaxpr(cb)(jnp.zeros((2,)))
+    out = T.check_host_sync_jaxpr("fix", closed)
+    assert len(out) == 1 and "callback" in out[0].symbol
+    assert T.check_host_sync_jaxpr("fix", closed,
+                                   allow=(out[0].symbol,)) == []
+
+
+def test_donation_flags_silent_copy():
+    def nocopy(a, b):
+        return (a[:2] * b).sum()
+    with pytest.warns(UserWarning, match="donated"):
+        text = jax.jit(nocopy, donate_argnums=(0,)).lower(
+            jnp.zeros((4,)), jnp.zeros((2,))).as_text()
+    out = T.check_donation_text("fix", text, 1)
+    assert len(out) == 1 and "silent copies" in out[0].message
+
+    def ok(a):
+        return a + 1
+    text = jax.jit(ok, donate_argnums=(0,)).lower(
+        jnp.zeros((4,))).as_text()
+    assert T.check_donation_text("fix", text, 1) == []
+
+
+def test_guard_contract_flags_bare_function_and_wrong_budget():
+    out = T.check_guard_contract("fix", lambda x: x, 1, ())
+    assert len(out) == 1 and "not routed through CompileGuard" \
+        in out[0].message
+    guard = CompileGuard(lambda x: x, max_programs=None)
+    out = T.check_guard_contract("fix", guard, 1, (0,))
+    assert sorted(f.symbol for f in out) == ["donate-argnums",
+                                             "max-programs"]
+
+
+# ---------------------------------------------------------------------------
+# suppressions / report plumbing
+
+def test_suppressions_match_and_stale_entries_flagged(tmp_path):
+    from repro.analysis.findings import Finding
+    f = Finding(checker="lint-bare-jit", level="lint", anchor="a.py",
+                symbol="jax.jit", message="m")
+    sups = [{"checker": "lint-bare-jit", "match": "a.py::*",
+             "reason": "documented"},
+            {"checker": "lint-bare-jit", "match": "gone.py::*",
+             "reason": "stale"}]
+    out = apply_suppressions([f], sups)
+    assert out[0].suppressed and out[0].suppress_reason == "documented"
+    stale = [x for x in out if x.checker == "suppressions"]
+    assert len(stale) == 1 and "gone.py" in stale[0].symbol
+
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"suppressions": [{"checker": "c"}]}))
+    with pytest.raises(ValueError, match="missing required key"):
+        load_suppressions(p)
+
+
+def test_report_dict_summary_counts():
+    from repro.analysis.findings import Finding
+    fs = [Finding(checker="a", level="lint", anchor="x", message="m"),
+          Finding(checker="b", level="trace", anchor="y", message="m",
+                  suppressed=True)]
+    rep = report_dict(fs, ["a", "b"])
+    assert rep["summary"] == {"total": 2, "suppressed": 1,
+                              "unsuppressed": 1,
+                              "by_checker": {"a": 1, "b": 1}}
+    assert rep["findings"][0]["fingerprint"] == "x::"
+
+
+# ---------------------------------------------------------------------------
+# the repo gate itself
+
+def test_repo_lint_level_is_clean():
+    assert run_checkers(REPO_ROOT, "lint") == []
+
+
+def test_repo_trace_level_is_clean_and_covers_all_paths():
+    """The acceptance gate: frozen-grad + key-flow + host-sync +
+    donation + guard contracts pass on the real traced paths — sync,
+    async, cohort and serve."""
+    reg = T.traced_programs()
+    names = {p.name for p in reg.programs}
+    assert {"trace:sync/round_step", "trace:async/flush",
+            "trace:async/select", "trace:cohort/chunk",
+            "trace:cohort/finalize", "trace:serve/decode",
+            "trace:serve/prefill"} <= names
+    probe_names = {n for n, _, _ in reg.grad_probes}
+    assert {"trace:sync/frozen_grad", "trace:async/frozen_grad",
+            "trace:cohort/frozen_grad"} <= probe_names
+    # serve paths must actually contain key-typed randomness, or the
+    # key-flow pass over them would be vacuous
+    dec = next(p for p in reg.programs if p.name == "trace:serve/decode")
+    prims = {e.primitive.name for e in T._iter_eqns(dec.closed.jaxpr)}
+    assert "random_fold_in" in prims and "random_bits" in prims
+    assert run_checkers(REPO_ROOT, "trace") == []
+
+
+def test_checker_registry_names():
+    assert registered_checkers("lint") == [
+        "lint-bare-jit", "lint-flconfig", "lint-registry",
+        "lint-seeded-random"]
+    assert registered_checkers("trace") == [
+        "trace-compileguard", "trace-donation", "trace-frozen-grad",
+        "trace-host-sync", "trace-key-flow"]

@@ -1,0 +1,88 @@
+"""Direct coverage for common/retry.py (previously exercised only
+through the cohort engine's crash resample)."""
+import pytest
+
+from repro.common.retry import Backoff, retry_call
+
+
+def test_backoff_jitter_deterministic_under_fixed_seed():
+    b1 = Backoff(seed=7, jitter=0.5)
+    b2 = Backoff(seed=7, jitter=0.5)
+    assert b1.delay(2, token=(3, 4)) == b2.delay(2, token=(3, 4))
+    # different token or attempt decorrelates the draw
+    assert b1.delay(2, token=(3, 4)) != b1.delay(2, token=(3, 5))
+    assert b1.delay(1, token=(3, 4)) != b1.delay(2, token=(3, 4))
+    # a different seed is a different schedule
+    assert b1.delay(2, token=0) != Backoff(seed=8, jitter=0.5).delay(2, 0)
+
+
+def test_backoff_growth_cap_and_jitter_bounds():
+    b = Backoff(base=0.1, factor=2.0, max_delay=0.5, jitter=0.0)
+    assert b.delay(0) == pytest.approx(0.1)
+    assert b.delay(1) == pytest.approx(0.2)
+    assert b.delay(10) == pytest.approx(0.5)          # capped
+    j = Backoff(base=0.1, factor=2.0, max_delay=0.5, jitter=0.5)
+    for attempt in range(6):
+        d = j.delay(attempt, token=1)
+        full = min(0.1 * 2.0 ** attempt, 0.5)
+        # downward equal-jitter: within [full/2, full], never above cap
+        assert full * 0.5 <= d <= full
+
+
+def test_backoff_rejects_bad_config():
+    with pytest.raises(ValueError, match="attempts"):
+        Backoff(attempts=-1)
+    with pytest.raises(ValueError, match="jitter"):
+        Backoff(jitter=1.5)
+
+
+def test_retry_call_zero_attempts_still_runs_once():
+    calls = []
+
+    def fn(attempt):
+        calls.append(attempt)
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError, match="boom"):
+        retry_call(fn, backoff=Backoff(attempts=0), sleep=None)
+    assert calls == [0]
+
+
+def test_retry_call_propagates_last_exception_and_sleeps_between():
+    slept = []
+    calls = []
+
+    def fn(attempt):
+        calls.append(attempt)
+        raise ValueError(f"fail {attempt}")
+
+    b = Backoff(attempts=3, jitter=0.0, base=0.01, factor=2.0)
+    with pytest.raises(ValueError, match="fail 2"):
+        retry_call(fn, backoff=b, token=9, sleep=slept.append)
+    assert calls == [0, 1, 2]
+    # sleeps between attempts only (not after the last failure)
+    assert slept == [pytest.approx(b.delay(0, 9)),
+                     pytest.approx(b.delay(1, 9))]
+
+
+def test_retry_call_succeeds_after_transient_failures():
+    def fn(attempt):
+        if attempt < 2:
+            raise OSError("transient")
+        return f"ok@{attempt}"
+
+    assert retry_call(fn, backoff=Backoff(attempts=3),
+                      sleep=None) == "ok@2"
+
+
+def test_retry_call_non_matching_exception_propagates_immediately():
+    calls = []
+
+    def fn(attempt):
+        calls.append(attempt)
+        raise KeyError("not retryable")
+
+    with pytest.raises(KeyError):
+        retry_call(fn, backoff=Backoff(attempts=3),
+                   retry_on=(OSError,), sleep=None)
+    assert calls == [0]
