@@ -1,0 +1,150 @@
+"""Benchmark regression gate: smoke BENCH_*.json vs committed baselines.
+
+The smoke benches are seeded and CPU-deterministic, so their
+*deterministic* metrics — byte columns, quarantine counts, accuracy
+trajectories, the boolean acceptance gates — must reproduce exactly
+run-over-run.  This gate diffs every freshly-written smoke report under
+``results/`` against the committed baseline in
+``benchmarks/baselines/`` and fails ``./test.sh`` (and CI) on any
+drift, so a PR that silently shifts the byte accounting, breaks a
+bitwise gate or changes a seeded trajectory is caught by tier-1
+instead of by a human reading JSON.
+
+Timing/host-dependent keys (wall seconds, draw latencies, RSS,
+platform strings) are skipped by name pattern; boolean gates may only
+degrade (a baseline ``false`` that becomes ``true`` is an improvement,
+not a regression).  New keys in fresh reports are allowed — adding
+metrics is not a regression; dropping them is.
+
+    PYTHONPATH=src python -m benchmarks.check_regress          # gate
+    PYTHONPATH=src python -m benchmarks.check_regress --update # reseed
+
+``--update`` copies the current results over the baselines — run it
+(and commit the diff) when a change legitimately moves a metric.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import re
+import shutil
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+RESULTS_DIR = "results"
+
+# host/timing noise: never compared (matched against the dot-joined
+# key path, case-insensitive)
+SKIP = re.compile(
+    r"(seconds|_sec\b|_ms\b|_time|time_|rss|per_s|wall_s|round_s|"
+    r"latency_|speedup|throughput|sublinear|sampler_ok|"
+    r"platform|backend|\bjax\b|hostname|timestamp)", re.I)
+# boolean gates: true -> false is a regression, false -> true is not
+GATE = re.compile(r"(_ok$|_equal$|^ok$|bitwise|^finite$|\bexact\b)", re.I)
+
+
+def _diff(base, new, path, out):
+    key = ".".join(path)
+    if SKIP.search(key):
+        return
+    if isinstance(base, dict):
+        if not isinstance(new, dict):
+            out.append(f"{key}: dict became {type(new).__name__}")
+            return
+        for k, bv in base.items():
+            if k not in new:
+                out.append(f"{key}.{k}: metric disappeared")
+            else:
+                _diff(bv, new[k], path + [str(k)], out)
+        return
+    if isinstance(base, list):
+        if not isinstance(new, list) or len(new) != len(base):
+            out.append(f"{key}: list {len(base)} -> "
+                       f"{len(new) if isinstance(new, list) else new!r}")
+            return
+        for i, (bv, nv) in enumerate(zip(base, new)):
+            _diff(bv, nv, path + [str(i)], out)
+        return
+    if isinstance(base, bool) or GATE.search(key):
+        if bool(base) and not bool(new):
+            out.append(f"{key}: gate regressed {base!r} -> {new!r}")
+        return
+    if isinstance(base, (int, float)) and isinstance(new, (int, float)):
+        # deterministic metrics reproduce exactly; the tolerance only
+        # absorbs json float round-trip noise
+        if not math.isclose(base, new, rel_tol=1e-9, abs_tol=1e-12):
+            out.append(f"{key}: {base!r} -> {new!r}")
+        return
+    if base != new:
+        out.append(f"{key}: {base!r} -> {new!r}")
+
+
+def check_file(name, baseline_dir, results_dir):
+    """Diff one report; returns (status, regressions)."""
+    res_path = os.path.join(results_dir, name)
+    if not os.path.exists(res_path):
+        return "missing", []
+    with open(os.path.join(baseline_dir, name)) as f:
+        base = json.load(f)
+    with open(res_path) as f:
+        new = json.load(f)
+    out = []
+    _diff(base, new, [name], out)
+    return ("regressed" if out else "ok"), out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--results-dir", default=RESULTS_DIR)
+    ap.add_argument("--update", action="store_true",
+                    help="reseed baselines from current results")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail when a baselined report was not produced "
+                         "this run (default: skip it)")
+    args = ap.parse_args(argv)
+
+    names = sorted(n for n in os.listdir(args.baseline_dir)
+                   if n.startswith("BENCH_") and n.endswith(".json"))
+    if not names:
+        raise SystemExit(f"no baselines under {args.baseline_dir}")
+
+    if args.update:
+        for name in names:
+            src = os.path.join(args.results_dir, name)
+            if os.path.exists(src):
+                shutil.copyfile(src,
+                                os.path.join(args.baseline_dir, name))
+                print(f"reseeded {name}")
+            else:
+                print(f"skipped {name} (no fresh result)")
+        return 0
+
+    failed = []
+    for name in names:
+        status, out = check_file(name, args.baseline_dir,
+                                 args.results_dir)
+        if status == "missing":
+            print(f"SKIP {name} (not produced this run)")
+            if args.strict:
+                failed.append(f"{name}: report not produced")
+        elif status == "ok":
+            print(f"OK   {name}")
+        else:
+            print(f"FAIL {name}:")
+            for line in out:
+                print(f"  {line}")
+            failed.extend(out)
+    if failed:
+        print(f"\n{len(failed)} regression(s) vs committed baselines — "
+              "if intentional, reseed with: python -m "
+              "benchmarks.check_regress --update (and commit the diff)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

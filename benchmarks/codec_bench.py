@@ -1,0 +1,276 @@
+"""Uplink codec bench: convergence vs bytes on the wire (DESIGN.md §16).
+
+Runs the paper's VGG16 (reduced width) on CIFAR-shaped data with the
+uplink codec axis over the packed trained-slot deltas — fp32 (``none``),
+``qint8``/``qint4`` stochastic-rounding quantization and ``topk_ef``
+top-k sparsification with error feedback — at the paper's freeze
+settings, next to the Table-4 byte columns the codecs shrink further.
+
+Three acceptance gates ride in the JSON (what CI relies on):
+
+* ``none_bitwise_equal`` — configuring ``codec="none"`` reproduces the
+  pre-codec run BITWISE on all three round paths (sync packed, buffered
+  async, chunked cohort): the codec seam compiles to nothing when off.
+  This is the only gate ``--smoke`` fails on by itself.
+* ``claimed_equals_encoded`` — every round's billed uplink equals the
+  encoded wire bytes of what actually crossed the WAN, across
+  {hub, hierarchical} x {sync, async, cohort} (hierarchical bills the
+  per-edge selection *union* at encoded width).
+* ``qint8_ok`` (full mode) — at 25% freeze, qint8 matches the fp32
+  run's accuracy while shipping >= 3.5x fewer remaining uplink bytes
+  (the byte-ratio half of the gate is deterministic and checked in
+  smoke mode too).
+
+Writes BENCH_codec.json (EXPERIMENTS.md §Codec).  ``--smoke`` is the
+CI-gate variant (tiny data, fewer rounds, same JSON shape).
+
+    PYTHONPATH=src python -m benchmarks.codec_bench [--smoke]
+        [--out BENCH_codec.json]
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import platform
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FLConfig, Federation, ModelSpec, ServerHook,
+                        comm, encoded_wire_bytes, get_codec, slot_plan)
+from repro.data import FederatedLoader, cifar_like, iid_partition
+from repro.models import paper_models as pm
+
+FULL = dict(n_clients=8, rounds=8, width=0.125, n_data=256, n_eval=128,
+            batch=4, steps=2, lr=2e-3, fractions=[0.25, 0.50])
+SMOKE = dict(n_clients=4, rounds=3, width=0.125, n_data=96, n_eval=64,
+             batch=4, steps=2, lr=2e-3, fractions=[0.25])
+
+CODECS = ["none", "qint8", "qint4", "topk_ef"]
+PATHS = ["sync", "async", "cohort"]
+
+
+def vgg_loss(p, batch):
+    return pm.xent_loss(pm.vgg16_apply(p, batch["x"]), batch["y"]), {}
+
+
+def _setup(cfg):
+    spec = ModelSpec(
+        name="vgg16",
+        init_params=functools.partial(pm.init_vgg16,
+                                      width_mult=cfg["width"]),
+        loss_fn=vgg_loss, unit_order=pm.vgg16_units)
+    x, y = cifar_like(cfg["n_data"], key=0)
+    shards = iid_partition(cfg["n_data"], cfg["n_clients"], key=1)
+    loader = FederatedLoader([{"x": x[s], "y": y[s]} for s in shards],
+                             batch_size=cfg["batch"],
+                             steps_per_round=cfg["steps"])
+    ex, ey = cifar_like(cfg["n_eval"], key=7)
+    ex, ey = jnp.asarray(ex), jnp.asarray(ey)
+
+    @jax.jit
+    def accuracy(params):
+        return (pm.vgg16_apply(params, ex).argmax(-1) == ey).mean()
+
+    return spec, loader, accuracy
+
+
+def _fl(cfg, path, frac, codec="none", topo="hub", **extra):
+    kw = dict(n_clients=cfg["n_clients"], train_fraction=frac,
+              lr=cfg["lr"], fused_agg="off", packed=True,
+              topology=topo, codec=codec, **extra)
+    if path == "async":
+        kw.update(async_buffer=cfg["n_clients"], staleness="constant",
+                  client_delay_dist="none")
+    elif path == "cohort":
+        kw.update(cohort_chunk=2, n_registered=cfg["n_clients"])
+    return FLConfig(**kw)
+
+
+def _run(cfg, fl, seed=0, hooks=None):
+    spec, loader, accuracy = _setup(cfg)
+    fed = Federation.from_config(spec, fl, data=loader, seed=seed,
+                                 eval_fn=accuracy, hooks=hooks or [])
+    fed.fit(cfg["rounds"])
+    return fed
+
+
+def _leaves(fed):
+    return [np.asarray(x)
+            for x in jax.tree_util.tree_leaves(fed.server.params)]
+
+
+def _bitequal(a, b):
+    return all(np.array_equal(x, y) for x, y in zip(_leaves(a),
+                                                    _leaves(b)))
+
+
+class _Entries(ServerHook):
+    """Grabs the buffered-async flush composition (entry selections +
+    the fleet ids behind them) — the wire traffic the accounting bills."""
+
+    def __init__(self):
+        self.rows = []
+
+    def on_round_end(self, server, record, metrics):
+        if metrics is not None and "entry_sel" in metrics:
+            self.rows.append((np.asarray(metrics["entry_sel"]),
+                              np.asarray(metrics["entry_clients"],
+                                         np.int64)))
+
+
+def _encoded(fed, fl, codec, wire_sel):
+    """Ground-truth encoded bytes of a wire-selection matrix: the slot
+    plan at FULL width (a hierarchical union can exceed n_slots) fed to
+    the codec's per-row byte formula."""
+    assign = fed.server.assign
+    params = fed.server.global_params()
+    _, valid = jax.vmap(
+        lambda s: slot_plan(assign, s, assign.n_units, params)
+    )(jnp.asarray(wire_sel, jnp.float32))
+    return encoded_wire_bytes(codec, assign, params, valid, fl)
+
+
+def claimed_vs_encoded(cfg, path, topo, seed=0):
+    """One short qint8 fit on (path, topo); every round's billed uplink
+    must equal the encoded bytes of what crossed that topology's WAN."""
+    codec = get_codec("qint8")
+    fl = _fl(cfg, path, cfg["fractions"][0], codec="qint8", topo=topo)
+    cap = _Entries()
+    fed = _run(cfg, fl, seed=seed, hooks=[cap])
+    mem = comm.edge_membership(fl.n_clients, fl.resolve_n_edges()) \
+        if topo == "hierarchical" else None
+    worst = 0.0
+    for r, rec in enumerate(fed.server.history):
+        if path == "async":
+            entry_sel, ids = cap.rows[r]
+            wire = (mem[:, ids] @ entry_sel > 0).astype(np.float32) \
+                if topo == "hierarchical" else entry_sel
+        else:
+            sel = np.asarray(fed.server.sel_history[r])
+            wire = (mem @ sel > 0).astype(np.float32) \
+                if topo == "hierarchical" else sel
+        worst = max(worst, abs(rec.uplink_bytes
+                               - _encoded(fed, fl, codec, wire)))
+    return {"path": path, "topology": topo,
+            "rounds": len(fed.server.history),
+            "max_abs_diff_bytes": worst, "exact": worst == 0.0}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale run (tiny model/data, fewer rounds)")
+    ap.add_argument("--out", default="BENCH_codec.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    cfg = SMOKE if args.smoke else FULL
+    full_mode = not args.smoke
+
+    failures, smoke_failures = [], []
+
+    # -- gate 1: codec "none" is the pre-codec run, bitwise, per path --
+    bitwise = {}
+    for path in PATHS:
+        base = _run(cfg, _fl(cfg, path, cfg["fractions"][0]),
+                    seed=args.seed)
+        off = _run(cfg, _fl(cfg, path, cfg["fractions"][0],
+                            codec="none"), seed=args.seed)
+        ok = _bitequal(base, off) and all(
+            a.loss == b.loss for a, b in zip(base.server.history,
+                                             off.server.history))
+        bitwise[path] = ok
+        print(f"none-bitwise {path:<6} {'OK' if ok else 'FAIL'}")
+        if not ok:
+            smoke_failures.append(f"codec 'none' not bitwise on {path}")
+
+    # -- codec ladder: accuracy trajectory vs remaining uplink bytes --
+    curves = {}
+    for frac in cfg["fractions"]:
+        row = {}
+        for name in CODECS:
+            fed = _run(cfg, _fl(cfg, "sync", frac, codec=name,
+                                codec_topk=0.25), seed=args.seed)
+            s = fed.comm_summary()
+            accs = [r.eval_metric for r in fed.server.history]
+            row[name] = {
+                "accs": [float(a) for a in accs],
+                "final_acc": float(accs[-1]),
+                "best_acc": float(max(accs)),
+                "avg_uplink_bytes": s["avg_uplink_bytes"],
+                "total_uplink_bytes": s["total_uplink_bytes"],
+                "reduction_vs_full": s["reduction_vs_full"],
+                "finite": bool(all(np.isfinite(x).all()
+                                   for x in _leaves(fed))),
+            }
+            if not row[name]["finite"]:
+                smoke_failures.append(f"non-finite params: {name}@{frac}")
+        for name in CODECS[1:]:
+            row[name]["bytes_ratio_vs_fp32"] = (
+                row["none"]["avg_uplink_bytes"]
+                / row[name]["avg_uplink_bytes"])
+            print(f"frac={frac:.2f} {name:<8} "
+                  f"acc={row[name]['best_acc']:.3f} "
+                  f"(fp32 {row['none']['best_acc']:.3f}) "
+                  f"bytes/fp32=1/{row[name]['bytes_ratio_vs_fp32']:.2f}")
+        curves[f"{frac:.2f}"] = row
+
+    # gate 2a (deterministic, smoke too): qint8 ships >= 3.5x fewer
+    # remaining uplink bytes than fp32 at the first freeze setting
+    q = curves[f"{cfg['fractions'][0]:.2f}"]
+    ratio = q["qint8"]["bytes_ratio_vs_fp32"]
+    if ratio < 3.5:
+        smoke_failures.append(
+            f"qint8 byte ratio {ratio:.2f}x < 3.5x vs fp32")
+    # gate 2b (full mode): ...while matching fp32 accuracy
+    acc_ok = q["qint8"]["best_acc"] + 0.02 >= q["none"]["best_acc"]
+    if full_mode and not acc_ok:
+        failures.append(
+            f"qint8 best acc {q['qint8']['best_acc']:.3f} below fp32 "
+            f"target {q['none']['best_acc']:.3f}")
+
+    # -- gate 3: claimed bytes == encoded wire bytes, all paths/topos --
+    billing = []
+    for topo in ("hub", "hierarchical"):
+        for path in PATHS:
+            res = claimed_vs_encoded(cfg, path, topo, seed=args.seed)
+            billing.append(res)
+            print(f"claimed==encoded {topo:<13} {path:<6} "
+                  f"{'OK' if res['exact'] else 'FAIL'}")
+            if not res["exact"]:
+                smoke_failures.append(
+                    f"billed uplink != encoded bytes on "
+                    f"{topo}/{path} (off by "
+                    f"{res['max_abs_diff_bytes']:.0f}B)")
+
+    report = {
+        "bench": "codec",
+        "mode": "smoke" if args.smoke else "full",
+        "model": cfg,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "none_bitwise_equal": bitwise,
+        "curves": curves,
+        "qint8_bytes_ratio_vs_fp32": ratio,
+        "qint8_acc_matches_fp32": acc_ok,
+        "billing": billing,
+        "claimed_equals_encoded": all(b["exact"] for b in billing),
+        "qint8_ok": ratio >= 3.5 and acc_ok,
+        "sanity_ok": not (failures + smoke_failures),
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    if smoke_failures or (full_mode and failures):
+        raise SystemExit("codec bench sanity FAILED: " +
+                         "; ".join(smoke_failures + failures))
+    return report
+
+
+if __name__ == "__main__":
+    main()

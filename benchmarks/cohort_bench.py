@@ -46,10 +46,12 @@ import numpy as np
 
 FULL = dict(n_blocks=4, d=16, hidden=16, out=4, steps=1, batch=2,
             cohort=16, chunk=4, rounds=4, train_fraction=0.5, lr=2e-2,
-            registered=[1_000, 10_000, 100_000], vmapped_max=1_000)
+            registered=[1_000, 10_000, 100_000], vmapped_max=1_000,
+            sampler_registered=[10_000, 100_000, 1_000_000])
 SMOKE = dict(n_blocks=4, d=16, hidden=16, out=4, steps=1, batch=2,
              cohort=8, chunk=2, rounds=2, train_fraction=0.5, lr=2e-2,
-             registered=[64, 256], vmapped_max=64)
+             registered=[64, 256], vmapped_max=64,
+             sampler_registered=[10_000, 100_000, 1_000_000])
 
 
 def _np_batches(seed, rnd, ids, cfg):
@@ -133,6 +135,27 @@ def bitwise_gate(cfg, seed=0) -> bool:
         all(ra.loss == rb.loss for ra, rb in zip(ref.history, eng.history))
 
 
+def sampler_latency_rows(cfg, seed=0) -> list:
+    """Cohort-draw latency vs fleet size — the O(C) Floyd's-algorithm
+    sampler satellite: a R = 10^6 fleet draw must cost host
+    microseconds, flat in R, where the old ``permutation(key, R)`` path
+    materialized (and sorted) a million-entry device array per round."""
+    import jax
+    from repro.core.cohort import _uniform_draw
+    rows = []
+    reps = 20
+    for r in cfg["sampler_registered"]:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), r)
+        _uniform_draw(key, r, cfg["cohort"])          # warm the jit bits
+        t0 = time.perf_counter()
+        for i in range(reps):
+            _uniform_draw(jax.random.fold_in(key, i), r, cfg["cohort"])
+        dt = (time.perf_counter() - t0) / reps
+        rows.append({"registered": r, "cohort": cfg["cohort"],
+                     "draw_ms": dt * 1e3})
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -172,6 +195,17 @@ def main(argv=None):
     if not bit_ok:
         failures.append("chunked engine diverged bitwise from the "
                         "vmapped loop at R == C")
+
+    sampler_rows = sampler_latency_rows(cfg, args.seed)
+    sampler_1e6 = next((x["draw_ms"] for x in sampler_rows
+                        if x["registered"] == 1_000_000), None)
+    sampler_ok = sampler_1e6 is not None and sampler_1e6 <= 50.0
+    for x in sampler_rows:
+        print(f"sampler R={x['registered']}: {x['draw_ms']:.3f} ms/draw")
+    if not args.smoke and not sampler_ok:
+        failures.append(
+            f"R=10^6 cohort draw took {sampler_1e6:.1f} ms "
+            "(gate: <= 50 ms — the draw must stay O(cohort))")
 
     def _row(mode, r):
         return next(x for x in rows
@@ -213,6 +247,9 @@ def main(argv=None):
         "cohort_rounds_per_s_at_vmapped_max": co_at_vm["rounds_per_s"],
         "vmapped_rounds_per_s_at_max": vm_max["rounds_per_s"],
         "throughput_ok": throughput_ok,
+        "sampler_latency": sampler_rows,
+        "sampler_draw_ms_at_1e6": sampler_1e6,
+        "sampler_ok": sampler_ok,
     }
     report["sanity_ok"] = not failures
     import os

@@ -39,6 +39,12 @@ explicit jaxpr, which is how the intentionally-bad fixtures in
   the StableHLO), i.e. no silent copies.
 * ``trace-compileguard`` — the live entry points are ``CompileGuard``
   instances with the contracted ``max_programs``/``donate_argnums``.
+* ``trace-codec-frozen`` — the uplink codecs' decode(encode(.)) maps
+  pad slots and non-participants to EXACT zeros (an adversarial
+  all-ones payload goes in; any nonzero outside the valid mask would
+  re-animate frozen units).  The qint8 sync round step is also traced
+  whole (``trace:sync/round_step_qint8``), so the codec's stochastic-
+  rounding draws ride the host-sync and key-flow walkers.
 """
 from __future__ import annotations
 
@@ -58,7 +64,7 @@ from .findings import Finding, register_checker
 __all__ = ["traced_programs", "TracedProgram",
            "check_host_sync_jaxpr", "check_key_flow_jaxpr",
            "check_frozen_grad_jaxpr", "check_donation_text",
-           "check_guard_contract"]
+           "check_guard_contract", "check_codec_pad_zeros"]
 
 
 # ---------------------------------------------------------------------------
@@ -298,6 +304,51 @@ def check_donation_text(name: str, lowered_text: str,
     return []
 
 
+def check_codec_pad_zeros(name: str, transform, assign, params, fl,
+                          n_slots: int) -> List[Finding]:
+    """Frozen-slot invariant THROUGH the codec: feed an adversarial
+    all-ones packed payload — pad slots and a non-participant client
+    included — through the codec's decode(encode(.)) transform and
+    demand exact zeros everywhere the slot plan says nothing shipped.
+    Any leak would merge compression noise into units the round never
+    trained, silently breaking the freeze contract the comm accounting
+    (and the paper's Table 4 story) rests on."""
+    from ..common import pytree as pt
+    from ..core.masking import _is_leafunit, slot_plan
+    c = fl.n_clients
+    sel = np.zeros((c, assign.n_units), np.float32)
+    sel[:, : max(1, assign.n_units // 2)] = 1.0
+    sel[-1, :] = 0.0                      # a non-participant client
+    rows, valid = jax.vmap(
+        lambda s: slot_plan(assign, s, n_slots, params))(jnp.asarray(sel))
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    leaves_lu = jax.tree_util.tree_leaves(assign.leaf_units,
+                                          is_leaf=_is_leafunit)
+    leaves_r = jax.tree_util.tree_leaves(rows)
+    pdeltas = jax.tree_util.tree_unflatten(treedef, [
+        jnp.ones(((c,) + tuple(leaf.shape)) if lu.kind == "scalar"
+                 else ((c, r.shape[1]) + tuple(leaf.shape[1:])),
+                 jnp.float32)
+        for leaf, lu, r in zip(flat, leaves_lu, leaves_r)])
+    w = jnp.ones((c,), jnp.float32)
+    decoded, _ = transform(pdeltas, rows, valid, w, jax.random.PRNGKey(0))
+    out = []
+    paths = [p for p, _ in pt.flatten_with_paths(params)]
+    for path, d, v in zip(paths, jax.tree_util.tree_leaves(decoded),
+                          jax.tree_util.tree_leaves(valid)):
+        vm = jnp.reshape(v, v.shape + (1,) * (d.ndim - v.ndim))
+        leak = float(jnp.max(jnp.abs(d) * (1.0 - vm))) if d.size else 0.0
+        if leak != 0.0:
+            out.append(Finding(
+                checker="", level="", anchor=name, symbol=path,
+                message=f"codec {name!r}: decoded delta leaks {leak:g} "
+                        f"into pad/non-participant slots of leaf "
+                        f"{path!r} — decode(encode(.)) must multiply by "
+                        f"the valid mask so frozen units stay EXACTLY "
+                        f"untouched"))
+    return out
+
+
 def check_guard_contract(name: str, guard: Any,
                          max_programs: Optional[int],
                          donate: Tuple[int, ...]) -> List[Finding]:
@@ -432,6 +483,19 @@ def traced_programs() -> _Registry:
         n_donated=len(jax.tree_util.tree_leaves(srv.params))))
     guards.append(("trace:sync/round_step", srv.round_step, 1, (0,)))
     probes.append(_grad_probe("trace:sync/frozen_grad", fl, scoring=False))
+
+    # -- sync packed round step with the qint8 uplink codec ----------------
+    # the codec's stochastic-rounding uniforms must descend from the
+    # round key (fold_in(round_key, CODEC_KEY_TAG) then per-leaf
+    # fold_in) and never host-sync — both walkers cover this trace
+    fl_q = dataclasses.replace(fl, codec="qint8")
+    srv_q = Server(build_round_step(toy_loss, assign, fl_q), assign, fl_q,
+                   params)
+    programs.append(TracedProgram(
+        "trace:sync/round_step_qint8",
+        jax.make_jaxpr(srv_q.round_step.fn)(*sync_args)))
+    guards.append(("trace:sync/round_step_qint8", srv_q.round_step,
+                   1, (0,)))
 
     # -- buffered-async select + flush -------------------------------------
     fl_a = FLConfig(n_clients=3, train_fraction=0.5, packed=True,
@@ -579,3 +643,24 @@ def _guard_checker(root: Path) -> List[Finding]:
     reg = traced_programs()
     return [f for name, guard, maxp, dn in reg.guards
             for f in check_guard_contract(name, guard, maxp, dn)]
+
+
+@register_checker("trace-codec-frozen", "trace")
+def _codec_frozen_checker(root: Path) -> List[Finding]:
+    """Every registered non-identity codec's transform, on the shared
+    toy fixture (``none`` builds no transform — nothing to leak)."""
+    from ..core import codecs as _codecs
+    from ..core.federation import FLConfig
+    out: List[Finding] = []
+    for cname in _codecs.available_codecs():
+        if cname == "none":
+            continue
+        fl = FLConfig(n_clients=3, train_fraction=0.5, packed=True,
+                      fused_agg="off", codec=cname)
+        params, assign, _, n_slots = _toy_fixture(fl)
+        transform = _codecs.build_codec_transform(
+            _codecs.get_codec(cname), assign, fl)
+        out.extend(check_codec_pad_zeros(
+            f"trace:codec/{cname}", transform, assign, params, fl,
+            n_slots))
+    return out

@@ -204,6 +204,17 @@ def save_server_state(path: str, server, extra: Optional[Dict] = None,
             tree = {"params": server.params}
             wrapped = True
         tree["cohort_arrays"] = cohort_arrays
+    codec_state = getattr(server, "codec_state", None)
+    if codec_state is not None:
+        # stateful uplink codec (DESIGN.md §16): the per-client error-
+        # feedback residuals are part of the model's trajectory — a
+        # resume without them replays compression error the original
+        # run had already folded back in
+        if not wrapped:
+            tree = {"params": server.params}
+            wrapped = True
+        tree["codec_state"] = codec_state
+        meta["codec_state"] = True
     sel_state = getattr(server, "sel_state", None)
     if sel_state is not None:
         # scored selection (DESIGN.md §11): the strategy's live state
@@ -247,7 +258,18 @@ def restore_server_state(path: str, server):
             "checkpoint holds cohort-engine state; restore it into a "
             "Federation configured with the original "
             "FLConfig.n_registered/cohort_chunk")
-    if "async" in meta or "cohort" in meta or scored:
+    codec_saved = bool(meta.get("codec_state"))
+    codec_state = getattr(server, "codec_state", None)
+    if codec_saved and codec_state is None:
+        raise ValueError(
+            "checkpoint holds codec error-feedback state; restore it "
+            "into a Federation configured with the original stateful "
+            "FLConfig.codec")
+    if codec_state is not None and not codec_saved:
+        raise ValueError(
+            "this server's codec is stateful but the checkpoint has no "
+            "codec state; restore with the original FLConfig.codec")
+    if "async" in meta or "cohort" in meta or scored or codec_saved:
         template = {"params": server.params}
         if "async" in meta:
             template["async_arrays"] = engine.arrays_template(
@@ -257,8 +279,12 @@ def restore_server_state(path: str, server):
                 meta["cohort"])
         if scored:
             template["sel_state"] = sel_template
+        if codec_saved:
+            template["codec_state"] = codec_state
         tree = load_pytree(path, template)
         server.params = tree["params"]
+        if codec_saved:
+            server.codec_state = tree["codec_state"]
         if "async" in meta:
             engine.restore_state(meta["async"], tree["async_arrays"])
         if "cohort" in meta:

@@ -13,10 +13,11 @@ cohort     — fleet-scale chunk-streamed cohort engine + sampler registry
 session    — the Federation facade (from_config -> fit/evaluate/comm)
 comm       — exact transfer-byte accounting (Table 4), per topology
 faults     — seeded fault-injection chaos axis + fault-tolerant defenses
+codecs     — uplink compression codec axis over packed trained-slot deltas
 """
 from . import (freezing, masking, aggregation, client, federation, server,  # noqa: F401
                comm, strategies, session, topology, async_agg, cohort,
-               faults)
+               faults, codecs)
 from .federation import FLConfig, build_round_step, build_fullmodel_round_step  # noqa: F401
 from .masking import (build_units, build_units_zoo, build_units_flat,  # noqa: F401
                       mask_tree, apply_mask, UnitAssignment,
@@ -45,6 +46,10 @@ from .cohort import (ClientSampler, CohortContext, CohortEngine,  # noqa: F401
                      get_client_sampler, register_client_sampler,
                      registered_client_samplers, resolve_client_sampler,
                      unregister_client_sampler)
+from .codecs import (Codec, UnknownCodecError, available_codecs,  # noqa: F401
+                     build_codec_transform, codec_unit_bytes,
+                     encoded_wire_bytes, get_codec, init_codec_state,
+                     register_codec, resolve_codec, unregister_codec)
 from .faults import (ChaosHook, ClientCrashed, Fault, FaultInjector,  # noqa: F401
                      ServerKilled, UnknownFaultError, chaos_inject,
                      get_fault, parse_faults, register_fault,

@@ -348,15 +348,43 @@ def build_cohort_step(loss_fn: Callable, assign, fl,
             sel = sel.at[:, -1].set(1.0)
         return sel
 
-    def cohort(global_params, sel, client_batches):
-        rows, valid = jax.vmap(
-            lambda s: slot_plan(assign, s, n_slots, global_params))(sel)
-        pdeltas, metrics = run_cohort(cohort_stage, global_params, rows,
-                                      valid, client_batches)
-        out = {"loss_mean": metrics["loss_mean"]}
-        if scoring:
-            out["unit_sqnorm"] = metrics["unit_sqnorm"]
-        return pdeltas, rows, valid, out
+    # codec axis (core/codecs.py): encode/decode at dispatch time — the
+    # buffer holds DECODED deltas (billing uses encoded wire bytes).
+    # codec "none" keeps the original three-argument trace bitwise.
+    from . import codecs as _codecs
+    codec = _codecs.resolve_codec(fl.codec)
+    codec_fn = _codecs.build_codec_transform(codec, assign, fl)
+
+    if codec_fn is None:
+        def cohort(global_params, sel, client_batches):
+            rows, valid = jax.vmap(
+                lambda s: slot_plan(assign, s, n_slots, global_params))(sel)
+            pdeltas, metrics = run_cohort(cohort_stage, global_params, rows,
+                                          valid, client_batches)
+            out = {"loss_mean": metrics["loss_mean"]}
+            if scoring:
+                out["unit_sqnorm"] = metrics["unit_sqnorm"]
+            return pdeltas, rows, valid, out
+    else:
+        def cohort(global_params, sel, client_batches, codec_key,
+                   codec_state=None, codec_decay=None):
+            rows, valid = jax.vmap(
+                lambda s: slot_plan(assign, s, n_slots, global_params))(sel)
+            pdeltas, metrics = run_cohort(cohort_stage, global_params, rows,
+                                          valid, client_batches)
+            # residual gating for dispatched-vs-not happens host-side
+            # (the engine merges only dispatched clients' rows back),
+            # so every in-trace row counts as an upload here
+            ones = jnp.ones((fl.n_clients,), jnp.float32)
+            pdeltas, new_state = codec_fn(pdeltas, rows, valid, ones,
+                                          codec_key, codec_state,
+                                          codec_decay)
+            out = {"loss_mean": metrics["loss_mean"]}
+            if scoring:
+                out["unit_sqnorm"] = metrics["unit_sqnorm"]
+            if new_state is not None:
+                out["codec_state"] = new_state
+            return pdeltas, rows, valid, out
 
     return (CompileGuard(select, name="async_select", max_programs=1),
             CompileGuard(cohort, name="async_cohort", max_programs=1),
@@ -419,6 +447,19 @@ class AsyncRoundEngine:
                                          gated=gated)
         self.scheduler = DelayScheduler(fl.client_delay_dist, seed=seed,
                                         drop_prob=fl.client_drop_prob)
+        # codec axis: stochastic-rounding keys come off a dedicated
+        # fold_in stream indexed by a dispatch counter (checkpointed, so
+        # restores replay the identical key sequence); a stateful
+        # codec's canonical EF residual lives on the Server — the engine
+        # merges back only the rows of clients it actually dispatched,
+        # and tracks per-client residual age for staleness decay
+        from . import codecs as _codecs
+        self.codec = _codecs.resolve_codec(fl.codec)
+        self._codec_base = jax.random.fold_in(
+            jax.random.PRNGKey(seed), _codecs.CODEC_KEY_TAG)
+        self._codec_dispatch = 0
+        self._codec_version = (np.zeros(fl.n_clients, np.int64)
+                               if self.codec.stateful else None)
         # bytes clients uploaded since the last flush that never landed
         # in the buffer (in-transit loss, crashes, rejected duplicates)
         self._wasted = 0.0
@@ -452,8 +493,29 @@ class AsyncRoundEngine:
         the trace identical to the synchronous round's.
         """
         batches = _mixed_window_batches(batch_fn, list(self.seq))
-        pdeltas, rows, valid, mets = self.cohort_fn(
-            self.server.global_params(), jnp.asarray(self._sel), batches)
+        gp = self.server.global_params()
+        sel = jnp.asarray(self._sel)
+        if self.codec.name == "none":
+            pdeltas, rows, valid, mets = self.cohort_fn(gp, sel, batches)
+        else:
+            ck = jax.random.fold_in(self._codec_base, self._codec_dispatch)
+            self._codec_dispatch += 1
+            if self.codec.stateful:
+                decay = jnp.asarray(self._codec_decay(), jnp.float32)
+                pdeltas, rows, valid, mets = self.cohort_fn(
+                    gp, sel, batches, ck, self.server.codec_state, decay)
+                new_state = mets.pop("codec_state")
+                # only dispatched clients transmitted: merge their
+                # residual rows back, discard the rest of the width-C
+                # computation (those clients sent nothing)
+                idx = jnp.asarray([int(c) for c in clients], jnp.int32)
+                self.server.codec_state = jax.tree_util.tree_map(
+                    lambda old, new: old.at[idx].set(new[idx]),
+                    self.server.codec_state, new_state)
+                self._codec_version[np.asarray(idx)] = self.version
+            else:
+                pdeltas, rows, valid, mets = self.cohort_fn(
+                    gp, sel, batches, ck)
         losses = mets["loss_mean"]
         sqnorm = mets.get("unit_sqnorm")
         take = lambda tree, c: jax.tree_util.tree_map(
@@ -562,11 +624,23 @@ class AsyncRoundEngine:
         server.history.append(rec)
         return rec
 
+    def _codec_decay(self) -> np.ndarray:
+        """(C,) residual staleness factors: a client's EF residual ages
+        by the model versions since it last transmitted, decayed by the
+        run's registered staleness rule (the same rule the aggregation
+        applies to stale deltas; 1.0 at age 0, matching the sync path)."""
+        rule = get_staleness(self.fl.staleness)
+        age = np.maximum(self.version - self._codec_version, 0)
+        return rule(age.astype(np.float64),
+                    self.fl.staleness_alpha).astype(np.float32)
+
     def _entry_bytes(self, upd: BufferedUpdate) -> float:
         """Upload cost of one packed update (the client's trained-unit
-        bytes — hub math; good enough for the wasted-bytes column)."""
+        bytes at *encoded* wire width — hub math; good enough for the
+        wasted-bytes column).  Billing fp32 width here under a codec
+        was the PR 8 accounting bug this replaces."""
         return float((np.asarray(upd.sel_row, np.float32)
-                      * self.server.unit_bytes()).sum())
+                      * self.server.wire_unit_bytes()).sum())
 
     def _flush_telemetry(self, flush_idx: int, stats: Dict[str, Any]):
         """One flush's staleness-weighted NormTelemetry, or None.
@@ -625,6 +699,10 @@ class AsyncRoundEngine:
                     "total_uplink_bytes": 0.0, "reduction_vs_full": 0.0,
                     "total_wasted_bytes": 0.0, "avg_wasted_bytes": 0.0}
         ub = server.unit_bytes()
+        # flushed uplink bills at encoded wire width; the reduction
+        # denominator (a full fp32 entry per buffered slot) stays fp32
+        # so the reported reduction composes freeze × codec
+        wub = server.wire_unit_bytes()
         counts = comm.unit_param_counts(self.assign, server.global_params())
         ups, fulls, tps = [], [], []
         for entry_sel, clients, rec in zip(server.sel_history,
@@ -634,7 +712,7 @@ class AsyncRoundEngine:
             eff = np.asarray(rec.effective_weights, np.float32)
             es = es * (eff > 0).astype(es.dtype)[:, None]
             ups.append(server.topology.buffered_round_bytes(
-                es, clients, ub, self.fl)["uplink"])
+                es, clients, wub, self.fl)["uplink"])
             fulls.append(server.topology.buffered_round_bytes(
                 np.ones_like(es), clients, ub, self.fl)["uplink"])
             tps.append(float(np.einsum("bu,u->", es, counts)))
@@ -700,6 +778,13 @@ class AsyncRoundEngine:
                          for c, s in self.buffer._last_seq.items()},
             "wasted_pending": float(self._wasted),
         }
+        if self.codec.name != "none":
+            # codec-axis replay state: the stochastic-rounding key
+            # counter, plus (stateful codecs) each client's residual age
+            meta["codec_dispatch"] = int(self._codec_dispatch)
+            if self.codec.stateful:
+                meta["codec_version"] = [int(x)
+                                         for x in self._codec_version]
         arrays = {
             "sel": self._sel,
             "buffer": [self._update_arrays(u) for u in self.buffer.entries],
@@ -737,6 +822,24 @@ class AsyncRoundEngine:
                 f"checkpoint buffer holds {len(meta['buffer'])} entries, "
                 f">= this run's async_buffer={self.buffer.buffer_size}; "
                 "restore with the original buffer size")
+        if self.codec.name != "none" and "codec_dispatch" not in meta:
+            raise ValueError(
+                f"this run uses codec {self.codec.name!r} but the "
+                "checkpoint carries no codec replay state; restore with "
+                "the codec the checkpoint was written under")
+        if self.codec.name == "none" and "codec_dispatch" in meta:
+            raise ValueError(
+                "checkpoint carries codec replay state but this run has "
+                "codec 'none'; restore with the original codec config")
+        if self.codec.stateful and "codec_version" not in meta:
+            raise ValueError(
+                f"stateful codec {self.codec.name!r} needs the "
+                "checkpoint's per-client residual ages (codec_version); "
+                "this checkpoint has none")
+        self._codec_dispatch = int(meta.get("codec_dispatch", 0))
+        if self.codec.stateful:
+            self._codec_version = np.asarray(meta["codec_version"],
+                                             np.int64)
         self.version = int(meta["version"])
         self.clock = float(meta["clock"])
         self.seq = np.asarray(meta["seq"], np.int64)

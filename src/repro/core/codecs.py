@@ -1,0 +1,359 @@
+"""Uplink compression codecs — the fourth plugin axis.
+
+A **codec** is a lossy (or identity) transform applied to the packed
+trained-slot deltas *before* they cross the WAN, composing a
+compression factor on top of the paper's structural freeze factor
+(Caldas et al. 2018 show the two multiply).  Symmetric with the other
+axes: ``@register_codec`` + a literal ``name``, resolved from
+``FLConfig.codec``, encode/decode compiled *into* the round step.
+
+Contract (``build_codec_transform``):
+
+* ``none`` resolves to **no transform at all** — call sites skip the
+  codec branch entirely, so the traced program is bitwise-identical to
+  the pre-codec paths (property-gated like every prior axis).
+* Otherwise the transform maps the round's packed deltas to their
+  **decoded round-trip** ``decode(encode(x))`` — the wire never exists
+  as bytes in-sim; byte accounting is analytic via
+  :func:`codec_unit_bytes` (claimed == encoded wire bytes, asserted in
+  tests and ``benchmarks/codec_bench.py``).
+* Wire format is per **slot row**: each stacked-leaf slot row (``P =
+  prod(leaf.shape[1:])`` params) and each participating scalar leaf
+  (``P = prod(leaf.shape)`` params) is one row, encoded independently
+  with its own scale / top-k budget.  Pad slots (``valid == 0``) and
+  non-participants ship nothing and decode to **exact zeros**, so the
+  frozen-slot invariant survives the codec (tracecheck-gated).
+* Stochastic codecs (``stochastic = True``) consume a PRNG key —
+  uniforms for stochastic rounding are drawn *outside* the Pallas
+  kernel so the kernel is pure arithmetic and the jnp reference matches
+  bitwise.
+* Stateful codecs (``stateful = True``, i.e. ``topk_ef``) thread a
+  per-client error-feedback residual pytree (leaves ``(C, *param)``,
+  float32) through the round step like PR 5's ``SelectionState``:
+  residual rows are gathered into slot space, added (staleness-decayed
+  on the async path via the per-client ``decay`` vector), the
+  transmitted part subtracted, and the rows scattered back.  Dropped
+  clients (``weights == 0``) keep their residual untouched — they never
+  uploaded.  The state checkpoints bit-exactly via ``ckpt/store.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import ClassVar, Dict, Optional, Type, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import pytree as pt
+from ..kernels.codec import dequantize_unpack, quantize_pack
+from .masking import UnitAssignment, _is_leafunit
+from .registry import unknown_name_message
+
+
+class Codec:
+    """Base codec: per-row round-trip + per-row wire-byte formula."""
+
+    name: ClassVar[str] = ""
+    stateful: ClassVar[bool] = False    # carries per-client EF residual
+    stochastic: ClassVar[bool] = False  # consumes a PRNG key
+
+    def row_bytes(self, p: int, fl=None) -> int:
+        """Wire bytes for one encoded row of ``p`` float32 params."""
+        raise NotImplementedError
+
+    def row_roundtrip(self, x2: jnp.ndarray, key, fl=None) -> jnp.ndarray:
+        """decode(encode(x2)) for ``(R, P)`` float32 rows (traced)."""
+        raise NotImplementedError
+
+
+class UnknownCodecError(KeyError):
+    pass
+
+
+_REGISTRY: Dict[str, Codec] = {}
+
+
+def register_codec(obj: Union[Type[Codec], Codec], *,
+                   name: Optional[str] = None):
+    """Register a codec class (instantiated with no args) or instance.
+
+    Usable as a decorator::
+
+        @register_codec
+        class Mine(Codec):
+            name = "mine"
+            ...
+    """
+    codec = obj() if isinstance(obj, type) else obj
+    key = name or codec.name
+    if not key:
+        raise ValueError(f"codec {obj!r} has no name")
+    _REGISTRY[key] = codec
+    return obj
+
+
+def unregister_codec(name: str):
+    _REGISTRY.pop(name, None)
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownCodecError(unknown_name_message(
+            "codec", name, _REGISTRY)) from None
+
+
+def resolve_codec(spec: Union[str, Codec, None]) -> Codec:
+    """Name / instance / None -> codec instance (None means ``none``)."""
+    if spec is None:
+        return _REGISTRY["none"]
+    return get_codec(spec) if isinstance(spec, str) else spec
+
+
+def available_codecs():
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# built-in codecs
+
+
+@register_codec
+class NoneCodec(Codec):
+    """Identity codec: fp32 rows on the wire, no transform compiled in."""
+
+    name = "none"
+
+    def row_bytes(self, p, fl=None):
+        return 4 * p
+
+    def row_roundtrip(self, x2, key, fl=None):
+        return x2
+
+
+class _QuantCodec(Codec):
+    """Shared per-slot-row absmax stochastic-rounding quantization."""
+
+    stochastic = True
+    bits: ClassVar[int] = 8
+
+    def row_roundtrip(self, x2, key, fl=None):
+        u = jax.random.uniform(key, x2.shape, jnp.float32)
+        packed, scale = quantize_pack(x2, u, self.bits)
+        return dequantize_unpack(packed, scale, self.bits, x2.shape[1])
+
+
+@register_codec
+class QInt8(_QuantCodec):
+    """int8 stochastic-rounding quantization: 1 byte/param + 4-byte
+    per-row scale (absmax/127); round-trip error ≤ scale per element."""
+
+    name = "qint8"
+    bits = 8
+
+    def row_bytes(self, p, fl=None):
+        return p + 4
+
+
+@register_codec
+class QInt4(_QuantCodec):
+    """int4 stochastic-rounding quantization: two nibbles per byte +
+    4-byte per-row scale (absmax/7); round-trip error ≤ scale."""
+
+    name = "qint4"
+    bits = 4
+
+    def row_bytes(self, p, fl=None):
+        return (p + 1) // 2 + 4
+
+
+@register_codec
+class TopKEF(Codec):
+    """Per-row top-k sparsification with per-client error feedback.
+
+    Keeps the ``k = max(1, ceil(codec_topk * P))`` largest-magnitude
+    entries of each slot row (4-byte value + 4-byte index each); the
+    untransmitted remainder accumulates in the client's residual and is
+    re-injected next round (staleness-decayed under async).
+    Deterministic — ties resolve to the lower index via ``lax.top_k``.
+    """
+
+    name = "topk_ef"
+    stateful = True
+
+    @staticmethod
+    def k_for(p: int, fl=None) -> int:
+        frac = getattr(fl, "codec_topk", 0.1) if fl is not None else 0.1
+        return max(1, min(p, int(math.ceil(frac * p))))
+
+    def row_bytes(self, p, fl=None):
+        return 8 * self.k_for(p, fl)
+
+    def row_roundtrip(self, x2, key, fl=None):
+        k = self.k_for(x2.shape[1], fl)
+        _, idx = jax.lax.top_k(jnp.abs(x2), k)
+        vals = jnp.take_along_axis(x2, idx, axis=1)
+        rows = jnp.arange(x2.shape[0])[:, None]
+        return jnp.zeros_like(x2).at[rows, idx].set(vals)
+
+
+# ---------------------------------------------------------------------------
+# byte math — claimed bytes == encoded wire bytes, structurally
+
+
+def codec_unit_bytes(codec: Codec, assign: UnitAssignment, params,
+                     fl=None) -> np.ndarray:
+    """(U,) int64 — encoded uplink bytes per selected freeze unit.
+
+    Mirrors ``masking.unit_param_counts``: a unit's bytes are the sum of
+    its rows' :meth:`Codec.row_bytes` (one row per stacked macro index,
+    one per member scalar leaf).  Because ``slot_plan`` marks exactly
+    the selected units' rows valid, ``sel @ codec_unit_bytes`` equals
+    the actual encoded wire bytes (see :func:`encoded_wire_bytes`) —
+    the equality the comm tests assert.  For ``none`` this reduces to
+    ``comm.unit_bytes`` exactly (4 bytes/param).
+    """
+    out = np.zeros(assign.n_units, np.int64)
+    for (_, leaf), lu in zip(
+            pt.flatten_with_paths(params),
+            jax.tree_util.tree_leaves(assign.leaf_units,
+                                      is_leaf=_is_leafunit)):
+        if lu.kind == "scalar":
+            out[lu.base] += codec.row_bytes(int(np.prod(leaf.shape)), fl)
+        else:
+            per = codec.row_bytes(int(np.prod(leaf.shape[1:])), fl)
+            for m in range(leaf.shape[0]):
+                out[lu.base + lu.stride * m] += per
+    return out
+
+
+def encoded_wire_bytes(codec: Codec, assign: UnitAssignment, params,
+                       valid, fl=None) -> float:
+    """Actual encoded uplink bytes for one round, from the slot plan.
+
+    Sums :meth:`Codec.row_bytes` over every *valid* row each client
+    ships (stacked ``valid (C, L)``; scalar participation ``(C,)``) —
+    the ground truth the analytic ``sel @ codec_unit_bytes`` claim is
+    checked against.
+    """
+    total = 0.0
+    for (_, leaf), lu, v in zip(
+            pt.flatten_with_paths(params),
+            jax.tree_util.tree_leaves(assign.leaf_units,
+                                      is_leaf=_is_leafunit),
+            jax.tree_util.tree_leaves(valid)):
+        if lu.kind == "scalar":
+            p = int(np.prod(leaf.shape))
+        else:
+            p = int(np.prod(leaf.shape[1:]))
+        total += codec.row_bytes(p, fl) * float(np.asarray(v).sum())
+    return total
+
+
+# ---------------------------------------------------------------------------
+# error-feedback state
+
+
+def init_codec_state(codec: Codec, params, n_clients: int):
+    """Zero per-client residual pytree (``(C, *leaf)`` float32 leaves),
+    or None for stateless codecs."""
+    if not codec.stateful:
+        return None
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# the compiled transform
+
+
+def _expand(v, ndim):
+    """Reshape ``v`` to broadcast over ``ndim`` total dims."""
+    return jnp.reshape(v, v.shape + (1,) * (ndim - v.ndim))
+
+
+def build_codec_transform(codec: Codec, assign: UnitAssignment, fl):
+    """Codec -> traced round-trip transform, or None for ``none``.
+
+    The transform signature is uniform across codecs::
+
+        transform(pdeltas, rows, valid, weights, key, state, decay)
+            -> (decoded_pdeltas, new_state)
+
+    ``pdeltas``/``rows``/``valid`` are the packed round's client-stacked
+    trees (stacked leaves ``(C, L, ...)``, scalar leaves ``(C, ...)``);
+    ``weights (C,)`` gates residual updates (dropped clients shipped
+    nothing); ``key`` feeds stochastic rounding (ignored by
+    deterministic codecs); ``state`` is the EF residual pytree (None
+    for stateless codecs, and ``new_state`` is None back); ``decay
+    (C,)`` scales the re-injected residual (ones on the sync path,
+    staleness factors on async).
+    """
+    if codec.name == "none":
+        return None
+
+    def transform(pdeltas, rows, valid, weights, key, state=None,
+                  decay=None):
+        leaves_d, treedef = jax.tree_util.tree_flatten(pdeltas)
+        leaves_lu = jax.tree_util.tree_leaves(assign.leaf_units,
+                                              is_leaf=_is_leafunit)
+        leaves_r = jax.tree_util.tree_leaves(rows)
+        leaves_v = jax.tree_util.tree_leaves(valid)
+        if state is not None:
+            leaves_s = jax.tree_util.tree_leaves(state)
+        else:
+            leaves_s = [None] * len(leaves_d)
+        out, new_res = [], []
+        for i, (lu, d, r, v, res) in enumerate(
+                zip(leaves_lu, leaves_d, leaves_r, leaves_v, leaves_s)):
+            lk = jax.random.fold_in(key, i) if codec.stochastic else None
+            dec, nres = _leaf_roundtrip(codec, fl, lu, d, r, v, res,
+                                        weights, lk, decay)
+            out.append(dec)
+            new_res.append(nres)
+        decoded = jax.tree_util.tree_unflatten(treedef, out)
+        if state is None:
+            return decoded, None
+        return decoded, jax.tree_util.tree_unflatten(treedef, new_res)
+
+    return transform
+
+
+def _leaf_roundtrip(codec, fl, lu, d, r, v, res, weights, key, decay):
+    """Round-trip one client-stacked leaf; returns (decoded, new_res)."""
+    c = d.shape[0]
+    if lu.kind == "scalar":
+        p = int(np.prod(d.shape[1:]))
+        vm = _expand(v.astype(d.dtype), d.ndim)           # (C, 1, ...)
+        if res is not None:
+            x = (d + _expand(decay, d.ndim) * res) * vm
+        else:
+            x = d * vm
+        xh = codec.row_roundtrip(x.reshape(c, p), key, fl)
+        xh = xh.reshape(d.shape) * vm                     # pads: exact 0
+        if res is None:
+            return xh, None
+        ok = (vm > 0) & (_expand(weights, d.ndim) > 0)
+        return xh, jnp.where(ok, x - xh, res)
+    # stacked leaf: d (C, L, ...), r (C, L), v (C, L)
+    l = d.shape[1]
+    p = int(np.prod(d.shape[2:]))
+    vm = _expand(v.astype(d.dtype), d.ndim)               # (C, L, 1...)
+    if res is not None:
+        rr = jax.vmap(lambda s, ri: s[ri])(res, r)        # (C, L, ...)
+        x = (d + _expand(decay, d.ndim) * rr) * vm
+    else:
+        x = d * vm
+    xh = codec.row_roundtrip(x.reshape(c * l, p), key, fl)
+    xh = xh.reshape(d.shape) * vm                         # pads: exact 0
+    if res is None:
+        return xh, None
+    ok = (vm > 0) & (_expand(weights, d.ndim) > 0)
+    upd = jnp.where(ok, x - xh, rr)
+    new_res = jax.vmap(lambda s, ri, nu: s.at[ri].set(nu))(res, r, upd)
+    return xh, new_res
+
+
+CODEC_KEY_TAG = 0xC0DEC

@@ -164,8 +164,37 @@ def resolve_client_sampler(spec: Union[str, ClientSampler, None]
 
 
 def _uniform_draw(key, n_registered: int, cohort: int) -> np.ndarray:
-    perm = np.asarray(jax.random.permutation(key, n_registered))
-    return np.sort(perm[:cohort]).astype(np.int32)
+    """O(cohort) uniform draw without replacement (Floyd's algorithm).
+
+    The previous implementation materialized ``permutation(key, R)`` —
+    O(R) memory and O(R log R) device work per round, untenable at
+    R = 10^6 registered clients when only C of them train.  Floyd's F2
+    touches exactly ``cohort`` draws: for j in R-C..R-1 pick t uniform
+    on [0, j], take t unless already taken, else take j.  Exactly
+    uniform over C-subsets, O(C) time and memory, independent of R.
+
+    Seed contract (bitwise-stable; pinned by the regression suite): the
+    JAX key's raw ``key_data`` words plus the tag ``0xF107D`` seed a
+    numpy ``SeedSequence`` driving a ``Philox`` generator, whose
+    integer stream is specified and platform-independent — the draw is
+    a pure function of the key bits, so the engine still needs no
+    sampler RNG state in checkpoints.  With cohort == n_registered the
+    draw is the identity ``arange`` (the R == C bitwise anchor).
+    """
+    if cohort >= n_registered:
+        return np.arange(n_registered, dtype=np.int32)
+    words = [int(w) for w in np.asarray(jax.random.key_data(key),
+                                        np.uint32).ravel()]
+    rng = np.random.Generator(np.random.Philox(
+        np.random.SeedSequence(words + [0xF107D])))
+    # vectorized pre-draw: t_j ~ U[0, j] for j = R-C .. R-1
+    ts = rng.integers(0, np.arange(n_registered - cohort,
+                                   n_registered) + 1)
+    chosen: set = set()
+    for j, t in zip(range(n_registered - cohort, n_registered), ts):
+        t = int(t)
+        chosen.add(j if t in chosen else t)
+    return np.asarray(sorted(chosen), np.int32)
 
 
 def _scored_draw(key, signal: np.ndarray, seen: np.ndarray,
@@ -264,6 +293,7 @@ def build_cohort_programs(loss_fn: Callable, assign, fl,
     from .masking import slot_plan
     from .topology import (_cohort_runner, _live_ctx, _selection_setup,
                            resolve_topology)
+    from . import codecs as _codecs
     from . import faults as _faults
     from .aggregation import gate_packed_updates
     topo = resolve_topology(topology if topology is not None
@@ -291,9 +321,11 @@ def build_cohort_programs(loss_fn: Callable, assign, fl,
 
     inject_on = _faults.delta_faults_configured(fl)
     gate_on = _faults.gate_enabled(fl)
+    codec_fn = _codecs.build_codec_transform(
+        _codecs.resolve_codec(fl.codec), assign, fl)
 
     def chunk_step(global_params, acc, sel_chunk, w_chunk, positions,
-                   batches, mode=None, scale=None):
+                   batches, mode=None, scale=None, codec_key=None):
         rows, valid = jax.vmap(
             lambda s: slot_plan(assign, s, n_slots, global_params)
         )(sel_chunk)
@@ -302,6 +334,14 @@ def build_cohort_programs(loss_fn: Callable, assign, fl,
         out = {"loss": metrics["loss_mean"]}
         if scoring:
             out["unit_sqnorm"] = metrics["unit_sqnorm"]
+        # uplink codec (DESIGN.md §16): encode/decode compiles into the
+        # chunk program between local training and the fault axis, so
+        # wire corruption hits what actually crossed the WAN.  Only
+        # stateless codecs reach this path — FLConfig rejects the
+        # error-feedback codec × cohort engine combination up front.
+        if codec_fn is not None:
+            pdeltas, _ = codec_fn(pdeltas, rows, valid, w_chunk,
+                                  codec_key)
         # fault axis (DESIGN.md §14): corruption + validation gate ride
         # the chunk program when configured — both bitwise identities
         # when untripped, so zero-rate chaos keeps chunked == single-
@@ -384,6 +424,13 @@ class CohortEngine:
         # identical to the plain loop's
         self._sampler_base = jax.random.fold_in(
             jax.random.PRNGKey(seed), 0x0C0F0E)
+        # stateless codec key stream mirroring the sampler stream: the
+        # chunk at (round r, chunk j) encodes under a pure function of
+        # (seed, r, j) — nothing to checkpoint, and codec "none" never
+        # draws so plain-loop key streams stay bitwise identical
+        from . import codecs as _codecs
+        self._codec_base = jax.random.fold_in(
+            jax.random.PRNGKey(seed), _codecs.CODEC_KEY_TAG)
         self._partial: Optional[Dict[str, Any]] = None
 
     @property
@@ -526,6 +573,9 @@ class CohortEngine:
             plan = inj.corrupt_plan(p["round"], p["ids"][pos])
             chunk_kw = {"mode": jnp.asarray(plan["mode"]),
                         "scale": jnp.asarray(plan["scale"])}
+        if getattr(self.fl, "codec", "none") != "none":
+            chunk_kw["codec_key"] = jax.random.fold_in(
+                jax.random.fold_in(self._codec_base, p["round"]), j)
         acc, mets = self.programs.chunk(
             self.server.global_params(), p["acc"], p["sel"][lo:hi],
             p["w"][lo:hi], jnp.asarray(pos, jnp.int32), batches,

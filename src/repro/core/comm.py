@@ -258,16 +258,22 @@ def expected_uplink_fraction(n_units: int, n_train: int) -> float:
 
 
 def table4_row(assign: UnitAssignment, params, sel_history,
-               bytes_per_param: int = 4) -> Dict[str, float]:
+               bytes_per_param: int = 4,
+               wire_ubytes=None) -> Dict[str, float]:
     """Reproduce one Table 4 cell from a run's selection history.
 
     sel_history: (rounds, C, U).  Returns average per-round uplink bytes
-    and trained-parameter count across the history.
+    and trained-parameter count across the history.  ``wire_ubytes``
+    (codec-encoded per-unit bytes, core/codecs.py) rebills the uplink
+    terms at wire width while ``reduction_vs_full`` keeps the fp32
+    full-model denominator, so the reduction composes structural freeze
+    × codec compression.
     """
     ub = unit_bytes(assign, params, bytes_per_param)
     counts = unit_param_counts(assign, params)
     hist = np.asarray(sel_history)
-    per_round_bytes = np.einsum("rcu,u->r", hist, ub)
+    per_round_bytes = np.einsum(
+        "rcu,u->r", hist, ub if wire_ubytes is None else wire_ubytes)
     per_round_params = np.einsum("rcu,u->r", hist, counts)
     return {
         "avg_uplink_bytes": float(per_round_bytes.mean()),

@@ -140,6 +140,16 @@ class FLConfig:
     # slot (common/retry.py jittered backoff) before the slot degrades
     # to a zero-weight hole in the round
     fault_retries: int = 3
+    # --- uplink compression codec axis (core/codecs.py, DESIGN.md §16) ---
+    # registered codec applied to packed trained-slot deltas before they
+    # cross the WAN: "none" | "qint8" | "qint4" | "topk_ef" | custom.
+    # "none" compiles no transform at all (bitwise-equal to pre-codec
+    # rounds); the others multiply a lossy factor on the structural
+    # freeze reduction and CommAccounting bills encoded wire bytes.
+    codec: str = "none"
+    # top-k keep fraction per slot row for the topk_ef codec
+    # (k = max(1, ceil(codec_topk * row_params)))
+    codec_topk: float = 0.1
 
     def __post_init__(self):
         # validate the knobs whose misuse only surfaces rounds later
@@ -231,6 +241,29 @@ class FLConfig:
             raise ValueError(
                 "client_drop_prob models lost async updates; it needs "
                 "the buffered engine (async_buffer > 0)")
+        if not 0.0 < self.codec_topk <= 1.0:
+            raise ValueError(
+                f"codec_topk must be in (0, 1] (keep fraction per slot "
+                f"row), got {self.codec_topk}")
+        if self.codec != "none":
+            # resolve at config time so typos fail before any compile
+            from .codecs import resolve_codec
+            cd = resolve_codec(self.codec)
+            if not self.packed:
+                raise ValueError(
+                    "codecs transform packed trained-slot deltas: set "
+                    "packed=True")
+            if self.topology == "gossip":
+                raise ValueError(
+                    "the gossip topology exchanges full model replicas "
+                    "and has no packed uplink; codecs need hub or "
+                    "hierarchical")
+            if cd.stateful and self.uses_cohort_engine():
+                raise ValueError(
+                    "error-feedback codec state is per in-flight client; "
+                    "the chunked cohort engine streams stateless chunks — "
+                    "use qint8/qint4 there, or drop "
+                    "n_registered/cohort_chunk")
         if self.faults or self.max_delta_norm:
             # fail at config time, not rounds later: parse the spec and
             # check each fault's seam has a round path that can host it

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..analysis.compileguard import CompileGuard
-from . import comm
+from . import codecs, comm
 from .federation import FLConfig
 from .masking import UnitAssignment
 from .strategies import (NormTelemetry, SelectionContext, SelectionStrategy,
@@ -113,7 +113,11 @@ class CommAccounting(ServerHook):
     def on_round_end(self, server, record, metrics):
         if record.skipped or metrics is None:
             return
-        ub = server.unit_bytes()
+        # bill at wire width: the codec's encoded per-unit byte table
+        # (identical to the fp32 table for codec "none").  Wasted bytes
+        # (quarantine/duplicates) use the same table — a discarded
+        # upload cost its *encoded* size, not fp32 width.
+        ub = server.wire_unit_bytes()
         counts = comm.unit_param_counts(server.assign,
                                         server.global_params())
         if "entry_sel" in metrics:
@@ -307,6 +311,14 @@ class Server:
         self.history: List[RoundRecord] = []
         self.sel_history: List[np.ndarray] = []
         self._ubytes = None
+        self._wire_ubytes = None
+        # codec axis (core/codecs.py): the server owns the per-client
+        # error-feedback residual of a stateful codec and threads it
+        # through the compiled round step (None for stateless codecs);
+        # checkpointed alongside sel_state for bit-exact resume
+        self.codec = codecs.resolve_codec(getattr(fl, "codec", "none"))
+        self.codec_state = codecs.init_codec_state(
+            self.codec, self.global_params(), fl.n_clients)
         # fault axis (core/faults.py): set by the Federation facade
         # when FLConfig.faults is non-empty; owns every seeded fault
         # draw (numpy SeedSequence domain — never the jax key stream)
@@ -335,6 +347,15 @@ class Server:
         if self._ubytes is None:
             self._ubytes = comm.unit_bytes(self.assign, self.global_params())
         return self._ubytes
+
+    def wire_unit_bytes(self) -> np.ndarray:
+        """Per-unit *encoded* uplink bytes under the active codec —
+        what CommAccounting bills (== ``unit_bytes`` for codec
+        ``none``, so non-codec accounting is unchanged)."""
+        if self._wire_ubytes is None:
+            self._wire_ubytes = codecs.codec_unit_bytes(
+                self.codec, self.assign, self.global_params(), self.fl)
+        return self._wire_ubytes
 
     def add_hook(self, hook: ServerHook) -> "Server":
         self.hooks.append(hook)
@@ -384,6 +405,10 @@ class Server:
                 step_kw["fault_plan"] = {
                     "mode": jnp.asarray(plan["mode"]),
                     "scale": jnp.asarray(plan["scale"])}
+            if self.codec_state is not None:
+                # stateful codec: thread the EF residual through the
+                # step; the new residual rides the metrics back out
+                step_kw["codec_state"] = self.codec_state
             if self.sel_state is not None:
                 self.params, metrics = self.round_step(
                     self.params, client_batches, weights, rk,
@@ -391,6 +416,8 @@ class Server:
             else:
                 self.params, metrics = self.round_step(
                     self.params, client_batches, weights, rk, **step_kw)
+            if "codec_state" in metrics:
+                self.codec_state = metrics.pop("codec_state")
             self.sel_history.append(np.asarray(metrics["sel"]))
             ev = None
             if self.eval_fn is not None:
@@ -430,7 +457,7 @@ class Server:
                 counts = comm.unit_param_counts(self.assign,
                                                 self.global_params())
                 self._comm_totals["uplink"] += self.topology.round_bytes(
-                    s, self.unit_bytes(), self.fl)["uplink"]
+                    s, self.wire_unit_bytes(), self.fl)["uplink"]
                 self._comm_totals["trained"] += float(
                     np.einsum("cu,u->", s, counts))
                 self._comm_totals["rounds"] += 1
@@ -546,9 +573,15 @@ class Server:
                          "total_uplink_bytes": float(np.sum(per_round)),
                          "reduction_vs_full": 0.0},
                         **self._wasted_summary())
+        sum_kw = {}
+        if self.codec.name != "none":
+            # bill the run at encoded wire width; custom topologies
+            # without the wire_ubytes parameter keep working when no
+            # codec is configured
+            sum_kw["wire_ubytes"] = self.wire_unit_bytes()
         return dict(self.topology.summary(self.assign,
                                           self.global_params(),
-                                          hist, self.fl),
+                                          hist, self.fl, **sum_kw),
                     **self._wasted_summary())
 
     def _capped_summary(self) -> Dict[str, float]:
@@ -558,6 +591,7 @@ class Server:
         result matches the uncapped summary up to float accumulation
         order (regression-tested)."""
         ub = self.unit_bytes()
+        wub = self.wire_unit_bytes()
         counts = comm.unit_param_counts(self.assign, self.global_params())
         up = self._comm_totals["uplink"]
         tp = self._comm_totals["trained"]
@@ -569,7 +603,7 @@ class Server:
             if eff is not None and len(eff) == s.shape[0]:
                 s = s * (np.asarray(eff, np.float32) > 0
                          ).astype(s.dtype)[:, None]
-            up += self.topology.round_bytes(s, ub, self.fl)["uplink"]
+            up += self.topology.round_bytes(s, wub, self.fl)["uplink"]
             tp += float(np.einsum("cu,u->", s, counts))
             n += 1
         if not n:

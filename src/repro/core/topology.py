@@ -186,6 +186,13 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
     run_cohort = _cohort_runner(fl, fl.n_clients)
     packed_cohort = packed_cohort_fn(loss_fn, assign, fl, loss_kwargs,
                                      scoring=scoring)
+    # the codec axis (core/codecs.py): encode/decode round-trips the
+    # packed deltas before they "cross the WAN" (= before corruption /
+    # gating / aggregation).  codec "none" builds no transform and the
+    # trace is bitwise the pre-codec one.
+    from . import codecs as _codecs
+    codec = _codecs.resolve_codec(fl.codec)
+    codec_fn = _codecs.build_codec_transform(codec, assign, fl)
 
     def dense_cohort(gp, client_batches):
         hook = dense_norm_hook(assign) if scoring else None
@@ -211,13 +218,14 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
         return jax.vmap(one_client)(sel, client_batches)
 
     def round_step(global_params, client_batches, weights, round_key,
-                   sel_state=None, fault_plan=None):
+                   sel_state=None, fault_plan=None, codec_state=None):
         c = _live_ctx(ctx, sel_state)
         sel = strat.select(round_key, c)
         if fl.always_train_head:
             sel = sel.at[:, -1].set(1.0)
 
         quarantined = None
+        new_codec_state = None
         if strat.dense:
             # every unit trained: unmasked local step + the topology's
             # dense aggregation — for hub, bit-exact with the
@@ -230,6 +238,11 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
                 lambda s: slot_plan(assign, s, n_slots, global_params))(sel)
             pdeltas, metrics = run_cohort(packed_cohort, global_params,
                                           rows, valid, client_batches)
+            if codec_fn is not None:
+                ck = jax.random.fold_in(round_key, _codecs.CODEC_KEY_TAG)
+                decay = jnp.ones((fl.n_clients,), jnp.float32)
+                pdeltas, new_codec_state = codec_fn(
+                    pdeltas, rows, valid, weights, ck, codec_state, decay)
             if inject_on:
                 if fault_plan is None:
                     fault_plan = {
@@ -255,6 +268,8 @@ def _star_round_step(loss_fn: Callable, assign: UnitAssignment, fl,
             out_metrics["unit_sqnorm"] = metrics["unit_sqnorm"]
         if quarantined is not None:
             out_metrics["quarantined"] = quarantined
+        if new_codec_state is not None:
+            out_metrics["codec_state"] = new_codec_state
         return new_params, out_metrics
 
     # the Server derives state ownership from the strategy actually
@@ -370,12 +385,21 @@ class Topology:
             f"topology {self.name!r} has no buffered-async accounting")
 
     def summary(self, assign: UnitAssignment, params: PyTree,
-                sel_history: np.ndarray, fl) -> Dict[str, float]:
-        """Run-level comm summary; same core keys for every topology."""
+                sel_history: np.ndarray, fl,
+                wire_ubytes: Optional[np.ndarray] = None) -> Dict[str, float]:
+        """Run-level comm summary; same core keys for every topology.
+
+        ``wire_ubytes`` (the codec-encoded per-unit byte table) bills
+        the per-round uplink at wire width; the ``reduction_vs_full``
+        denominator stays the fp32 full-model round, so the reported
+        reduction composes the structural freeze factor with the codec's
+        compression factor.
+        """
         ub = comm.unit_bytes(assign, params)
+        wub = ub if wire_ubytes is None else wire_ubytes
         counts = comm.unit_param_counts(assign, params)
         hist = np.asarray(sel_history)
-        per_round = [self.round_bytes(s, ub, fl)["uplink"] for s in hist]
+        per_round = [self.round_bytes(s, wub, fl)["uplink"] for s in hist]
         per_round_params = np.einsum("rcu,u->r", hist, counts)
         full = self.round_bytes(np.ones_like(hist[0]), ub, fl)["uplink"]
         return {
@@ -504,9 +528,11 @@ class Hub(Topology):
             entry_sel, ubytes,
             downlink="selected" if fl.synchronized else "full")
 
-    def summary(self, assign, params, sel_history, fl):
-        # the exact Table 4 reproduction, unchanged from PR 1
-        return comm.table4_row(assign, params, sel_history)
+    def summary(self, assign, params, sel_history, fl, wire_ubytes=None):
+        # the exact Table 4 reproduction, unchanged from PR 1; a codec's
+        # wire byte table rebills the uplink terms at encoded width
+        return comm.table4_row(assign, params, sel_history,
+                               wire_ubytes=wire_ubytes)
 
 
 @register_topology
@@ -668,8 +694,11 @@ class Gossip(Topology):
     def round_bytes(self, sel, ubytes, fl):
         return comm.gossip_round_bytes(sel, ubytes)
 
-    def summary(self, assign, params, sel_history, fl):
-        out = Topology.summary(self, assign, params, sel_history, fl)
+    def summary(self, assign, params, sel_history, fl, wire_ubytes=None):
+        # codecs are rejected for gossip at config time (no packed
+        # uplink), so wire_ubytes can only be the fp32 table here
+        out = Topology.summary(self, assign, params, sel_history, fl,
+                               wire_ubytes)
         hist = np.asarray(sel_history)
         ub = comm.unit_bytes(assign, params)
         out["degree"] = comm.gossip_round_bytes(hist[0], ub)["degree"]

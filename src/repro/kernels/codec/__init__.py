@@ -1,0 +1,5 @@
+from .kernel import quantize_pack, resolve_interpret
+from .ref import dequantize_unpack, quantize_pack_ref
+
+__all__ = ["quantize_pack", "quantize_pack_ref", "dequantize_unpack",
+           "resolve_interpret"]

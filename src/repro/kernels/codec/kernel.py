@@ -1,0 +1,106 @@
+"""Fused stochastic-rounding quantize-pack Pallas kernel.
+
+One pass per slot row: absmax scale compute, stochastic round
+(``floor(x/scale + u)`` with pre-drawn uniforms), and bit-pack — int8
+rows stay one byte per element, int4 rows pack two nibbles per byte.
+
+The uniforms are generated *outside* the kernel (``jax.random.uniform``
+on a key derived in the round step) so the kernel body is pure
+arithmetic: it lowers identically under the Pallas interpreter on CPU
+and Mosaic on TPU, and matches the jnp reference in ``ref.py`` bitwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def resolve_interpret(interpret=None):
+    """Resolve the interpret flag: None means 'interpret unless TPU/GPU'."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() not in ("tpu", "gpu")
+
+
+def _scale_round(x, u, qmax):
+    """Shared row math: absmax scale + stochastic round to [-qmax, qmax].
+
+    ``scale = absmax * (1/qmax)`` (reciprocal multiply, not division):
+    XLA rewrites division-by-constant into reciprocal multiply when
+    compiling, which is not exactly rounded — using the multiply form
+    everywhere keeps compiled kernel == eager jnp reference bitwise.
+    """
+    absmax = jnp.max(jnp.abs(x))
+    scale = absmax * (1.0 / qmax)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.floor(x * inv + u), -qmax, qmax)
+    return q, scale
+
+
+def _q8_kernel(x_ref, u_ref, q_ref, s_ref):
+    x = x_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)
+    q, scale = _scale_round(x, u, 127.0)
+    q_ref[0] = q.astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _q4_kernel(x_ref, u_ref, q_ref, s_ref):
+    x = x_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)
+    q, scale = _scale_round(x, u, 7.0)
+    pairs = (q.astype(jnp.int32) + 8).reshape(-1, 2)
+    q_ref[0] = (pairs[:, 0] | (pairs[:, 1] << 4)).astype(jnp.uint8)
+    s_ref[0, 0] = scale
+
+
+def quantize_pack(x, u, bits, *, interpret=None):
+    """Quantize-pack rows of ``x`` with per-row absmax scales.
+
+    Args:
+      x: ``(R, P)`` float32 rows to quantize (one scale per row).
+      u: ``(R, P)`` uniforms in ``[0, 1)`` for stochastic rounding.
+      bits: 8 (int8 bytes) or 4 (two nibbles per uint8 byte).
+
+    Returns:
+      ``(packed, scale)`` — packed ``(R, P)`` int8 for 8-bit or
+      ``(R, ceil(P/2))`` uint8 for 4-bit, and ``(R,)`` float32 scales.
+    """
+    if bits not in (8, 4):
+        raise ValueError(f"quantize_pack: bits must be 8 or 4, got {bits}")
+    interpret = resolve_interpret(interpret)
+    r, p = x.shape
+    if bits == 4 and p % 2:
+        pad = [(0, 0), (0, 1)]
+        x = jnp.pad(x, pad)
+        u = jnp.pad(u, pad)
+    pp = x.shape[1]
+    if bits == 8:
+        kernel, q_cols, q_dtype = _q8_kernel, pp, jnp.int8
+    else:
+        kernel, q_cols, q_dtype = _q4_kernel, pp // 2, jnp.uint8
+    packed, scale = pl.pallas_call(
+        kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, pp), lambda i: (i, 0)),
+            pl.BlockSpec((1, pp), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, q_cols), q_dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, u)
+    return packed, scale[:, 0]
+
+
+quantize_pack_q8 = functools.partial(quantize_pack, bits=8)
+quantize_pack_q4 = functools.partial(quantize_pack, bits=4)

@@ -1,0 +1,41 @@
+"""jnp reference quantize/unpack for the codec kernel.
+
+``quantize_pack_ref`` mirrors the kernel arithmetic op-for-op so the
+Pallas path (interpret or compiled) can be property-tested bitwise
+against it.  ``dequantize_unpack`` is the decode half used inside the
+round step — unpacking is cheap elementwise work, so it stays plain jnp.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_pack_ref(x, u, bits):
+    """Pure-jnp mirror of ``kernel.quantize_pack`` (same wire format)."""
+    if bits not in (8, 4):
+        raise ValueError(f"quantize_pack_ref: bits must be 8 or 4, got {bits}")
+    qmax = 127.0 if bits == 8 else 7.0
+    if bits == 4 and x.shape[1] % 2:
+        pad = [(0, 0), (0, 1)]
+        x = jnp.pad(x, pad)
+        u = jnp.pad(u, pad)
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    scale = absmax * (1.0 / qmax)   # reciprocal multiply: see kernel
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.floor(x * inv[:, None] + u), -qmax, qmax)
+    if bits == 8:
+        return q.astype(jnp.int8), scale
+    pairs = (q.astype(jnp.int32) + 8).reshape(x.shape[0], -1, 2)
+    return (pairs[:, :, 0] | (pairs[:, :, 1] << 4)).astype(jnp.uint8), scale
+
+
+def dequantize_unpack(packed, scale, bits, p):
+    """Decode ``(packed, scale)`` back to ``(R, p)`` float32 rows."""
+    if bits == 8:
+        q = packed.astype(jnp.float32)
+    else:
+        lo = (packed & 0xF).astype(jnp.int32) - 8
+        hi = (packed >> 4).astype(jnp.int32) - 8
+        q = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+        q = q[:, :p].astype(jnp.float32)
+    return q * scale[:, None]

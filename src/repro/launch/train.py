@@ -106,6 +106,12 @@ def main():
     ap.add_argument("--drop-prob", type=float, default=0.0,
                     help="per-dispatch in-transit loss probability "
                          "(async mode only)")
+    ap.add_argument("--codec", default="none",
+                    help="uplink compression codec for packed trained-"
+                         "slot deltas (core/codecs.py): none, qint8, "
+                         "qint4, topk_ef")
+    ap.add_argument("--codec-topk", type=float, default=0.1,
+                    help="kept-coordinate fraction for the topk_ef codec")
     ap.add_argument("--fault-retries", type=int, default=3,
                     help="resample attempts per crashed cohort slot")
     ap.add_argument("--dropout", type=float, default=0.0)
@@ -168,7 +174,8 @@ def main():
                   faults=args.faults,
                   max_delta_norm=args.max_delta_norm,
                   client_drop_prob=args.drop_prob,
-                  fault_retries=args.fault_retries)
+                  fault_retries=args.fault_retries,
+                  codec=args.codec, codec_topk=args.codec_topk)
     hooks = [Checkpointer(args.ckpt)] if args.ckpt else []
     fed = Federation.from_config(cfg, fl, data=loader, seed=args.seed,
                                  dropout_rate=args.dropout, hooks=hooks)
@@ -188,7 +195,8 @@ def main():
            if fl.uses_cohort_engine() else "") +
           (f" client_shards={fl.client_shards}"
            if fl.client_shards else "") +
-          (f" faults={fl.faults}" if fl.faults else ""))
+          (f" faults={fl.faults}" if fl.faults else "") +
+          (f" codec={fl.codec}" if fl.codec != "none" else ""))
     t0 = time.time()
     fed.fit(args.rounds, log_every=1)
     print(f"total {time.time()-t0:.1f}s; comm summary:")

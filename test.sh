@@ -49,4 +49,13 @@ if [[ "$FAST" == "0" ]]; then
   python -m benchmarks.serve_bench --smoke --out results/BENCH_serve_smoke.json
   # cohort engine smoke: chunked == vmapped bitwise + fleet-scale RSS rows
   python -m benchmarks.cohort_bench --smoke --out results/BENCH_cohort_smoke.json
+  # uplink codec smoke: codec "none" bitwise on all three round paths,
+  # claimed bytes == encoded wire bytes, qint8 >= 3.5x byte cut
+  python -m benchmarks.codec_bench --smoke --out results/BENCH_codec_smoke.json
 fi
+
+# bench regression gate: smoke reports produced this run must reproduce
+# the committed baselines exactly on deterministic metrics (timing and
+# host keys are skipped); reseed intentionally-moved metrics with
+#   python -m benchmarks.check_regress --update
+python -m benchmarks.check_regress

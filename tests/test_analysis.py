@@ -256,6 +256,26 @@ def test_donation_flags_silent_copy():
     assert T.check_donation_text("fix", text, 1) == []
 
 
+def test_codec_pad_zeros_passes_real_and_flags_leaky():
+    """The real codec transforms keep pads/non-participants at exact
+    zero; a transform that skips the valid-mask multiply must fire."""
+    from repro.core import codecs as C
+    from repro.core.federation import FLConfig
+    fl = FLConfig(n_clients=3, train_fraction=0.5, packed=True,
+                  fused_agg="off", codec="qint8")
+    params, assign, _, n_slots = T._toy_fixture(fl)
+    good = C.build_codec_transform(C.get_codec("qint8"), assign, fl)
+    assert T.check_codec_pad_zeros("fix", good, assign, params, fl,
+                                   n_slots) == []
+
+    def leaky(pdeltas, rows, valid, weights, key, state=None, decay=None):
+        return pdeltas, None     # ships the raw payload, mask forgotten
+
+    out = T.check_codec_pad_zeros("fix", leaky, assign, params, fl,
+                                  n_slots)
+    assert out and "valid mask" in out[0].message
+
+
 def test_guard_contract_flags_bare_function_and_wrong_budget():
     out = T.check_guard_contract("fix", lambda x: x, 1, ())
     assert len(out) == 1 and "not routed through CompileGuard" \
@@ -333,5 +353,5 @@ def test_checker_registry_names():
         "lint-bare-jit", "lint-flconfig", "lint-registry",
         "lint-seeded-random"]
     assert registered_checkers("trace") == [
-        "trace-compileguard", "trace-donation", "trace-frozen-grad",
-        "trace-host-sync", "trace-key-flow"]
+        "trace-codec-frozen", "trace-compileguard", "trace-donation",
+        "trace-frozen-grad", "trace-host-sync", "trace-key-flow"]
